@@ -1,0 +1,103 @@
+"""Microbenchmarks: routing throughput, retrieval ops, kernel oracle paths.
+
+Wall-clock on this CPU container measures the XLA/jnp implementations (the
+Pallas kernels target TPU and are validated via interpret=True in tests —
+interpret-mode timing is meaningless, so kernels are *represented* here by
+their jnp oracles, which is also what the CPU serving path executes).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def bench_routing() -> list[tuple[str, float, str]]:
+    from repro.core.router import Router
+
+    router = Router()
+    out = []
+    for n in (1024, 16384):
+        c = jnp.linspace(0, 1, n)
+        fn = jax.jit(lambda c: router.route_batch_arrays(c)[0])
+        us = time_call(fn, c)
+        out.append((f"route_batch_{n}", us, f"{n / (us / 1e6):.0f} queries/s"))
+    return out
+
+
+def bench_retrieval() -> list[tuple[str, float, str]]:
+    from repro.retrieval import DenseIndex, HashedNGramEmbedder
+    from repro.retrieval.topk import blocked_topk
+
+    rng = np.random.default_rng(0)
+    out = []
+    for n, d in ((10_000, 256), (100_000, 256)):
+        corpus = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        idx = DenseIndex(corpus)
+        q = jnp.asarray(rng.normal(size=(8, d)).astype(np.float32))
+        fn = jax.jit(lambda q: idx.search_batch(q, 10))
+        us = time_call(fn, q)
+        out.append((f"dense_mips_{n}x{d}_top10", us, f"{8 * n / (us / 1e6) / 1e9:.2f} Gdot/s"))
+    scores = jnp.asarray(rng.normal(size=(8, 1_000_000)).astype(np.float32))
+    fn = jax.jit(lambda s: blocked_topk(s, 100))
+    us = time_call(fn, scores)
+    out.append(("blocked_topk_1M_k100", us, "retrieval_cand selection"))
+    return out
+
+
+def bench_kernel_oracles() -> list[tuple[str, float, str]]:
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.mips_topk.ref import mips_topk_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    out = []
+    q = jax.random.normal(ks[0], (1, 8, 1024, 64), jnp.float32)
+    kv = jax.random.normal(ks[1], (1, 8, 1024, 64), jnp.float32)
+    fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = time_call(fn, q, kv, kv)
+    flops = 4 * 8 * 1024 * 1024 * 64
+    out.append(("attention_ref_1x8x1024x64", us, f"{flops / (us / 1e6) / 1e9:.1f} GFLOP/s"))
+
+    qd = jax.random.normal(ks[2], (8, 8, 64), jnp.float32)
+    kvd = jax.random.normal(ks[3], (8, 4096, 8, 64), jnp.float32)
+    lengths = jnp.full((8,), 4096)
+    fn = jax.jit(lambda q, k, v, l: decode_attention_ref(q, k, v, l))
+    us = time_call(fn, qd, kvd, kvd, lengths)
+    out.append(("decode_attention_ref_8x4096", us, "flash-decoding oracle"))
+
+    qq = jax.random.normal(ks[0], (8, 128), jnp.float32)
+    cc = jax.random.normal(ks[1], (100_000, 128), jnp.float32)
+    fn = jax.jit(lambda q, c: mips_topk_ref(q, c, 10))
+    us = time_call(fn, qq, cc)
+    out.append(("mips_topk_ref_100k", us, "fused scoring oracle"))
+    return out
+
+
+def bench_engine() -> list[tuple[str, float, str]]:
+    from repro.core.policies import make_policy
+    from repro.serving.engine import build_paper_engine
+
+    eng = build_paper_engine(make_policy("router_default"))
+    t0 = time.perf_counter()
+    n = 28
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+
+    eng.run(list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS))
+    us = (time.perf_counter() - t0) / n * 1e6
+    return [("rag_engine_per_query", us, "full route+retrieve+generate+log")]

@@ -1,0 +1,64 @@
+"""Aggregate dry-run JSONL artifacts into the §Roofline tables."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            try:
+                out.append(json.loads(line))
+            except Exception:
+                pass
+    # keep the LAST record per (arch, shape, mesh) — reruns supersede
+    dedup = {}
+    for r in out:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(dedup.values())
+
+
+def roofline_table(records: list[dict]) -> list[str]:
+    lines = [
+        "arch,shape,mesh,dominant,compute_s,memory_s,collective_s,"
+        "useful_ratio,roofline_frac,temp_gb,status"
+    ]
+    for r in sorted(records, key=lambda r: (r.get("arch", ""), r.get("shape", ""), r.get("mesh", ""))):
+        if r.get("status") != "ok":
+            lines.append(f"{r.get('arch')},{r.get('shape')},{r.get('mesh')},ERROR,,,,,,,{r.get('error','')[:80]}")
+            continue
+        temp = (r.get("memory") or {}).get("temp_bytes") or 0
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['dominant']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+            f"{r['useful_flops_ratio']:.3f},{r['roofline_fraction']:.3f},"
+            f"{temp / 1e9:.1f},ok"
+        )
+    return lines
+
+
+def summary(records: list[dict]) -> list[str]:
+    ok = [r for r in records if r.get("status") == "ok"]
+    err = [r for r in records if r.get("status") != "ok"]
+    by_dom = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    lines = [f"# dry-run cells: {len(ok)} ok, {len(err)} failed"]
+    lines.append(f"# dominant-term split: {by_dom}")
+    if ok:
+        worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:3]
+        lines.append(
+            "# worst roofline fractions: "
+            + "; ".join(f"{r['arch']}×{r['shape']} ({r['roofline_fraction']:.3f}, {r['dominant']})" for r in worst)
+        )
+        coll = sorted(ok, key=lambda r: -r["collective_s"])[:3]
+        lines.append(
+            "# most collective-bound: "
+            + "; ".join(f"{r['arch']}×{r['shape']} ({r['collective_s']:.2e}s)" for r in coll)
+        )
+    return lines

@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table + microbenches + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, followed by
+the paper tables (I–VII) regenerated from logged CSV artifacts and the
+roofline summary from the dry-run JSONLs.
+
+    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --tables-only
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables-only", action="store_true")
+    ap.add_argument("--results-dir", default="results")
+    args = ap.parse_args()
+
+    from benchmarks.tables import ALL_TABLES, ensure_results
+
+    print("== CA-RAG benchmark harness ==")
+    print("name,us_per_call,derived")
+
+    if not args.tables_only:
+        from benchmarks.micro import bench_engine, bench_kernel_oracles, bench_retrieval, bench_routing
+
+        for section in (bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine):
+            for name, us, derived in section():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+
+    stores = ensure_results(args.results_dir)
+    for table_name, fn in ALL_TABLES.items():
+        print()
+        for line in fn(stores):
+            print(line)
+
+    # roofline summary (if dry-runs have been produced)
+    import os
+
+    from benchmarks.roofline_report import load, roofline_table, summary
+
+    records = []
+    for path in (
+        os.path.join(args.results_dir, "dryrun_single.jsonl"),
+        os.path.join(args.results_dir, "dryrun_multi.jsonl"),
+    ):
+        records.extend(load(path))
+    if records:
+        print()
+        print("# Roofline (from dry-run artifacts; full table in EXPERIMENTS.md)")
+        for line in summary(records):
+            print(line)
+        for line in roofline_table(records):
+            print(line)
+    else:
+        print("\n# Roofline: no dry-run artifacts found (run repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""One benchmark per paper table (I–VII), generated from logged CSV artifacts.
+
+Mirrors the paper's discipline: every number here derives from the
+Appendix-F telemetry CSVs written by the experiment runs — no number is
+computed from in-memory state that bypassed the log.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from repro.core.bundles import DEFAULT_CATALOG
+from repro.core.telemetry import TelemetryStore
+from repro.data.benchmark import BENCHMARK_CORPUS, BENCHMARK_QUERIES
+from repro.serving.experiment import POLICY_TO_CSV, run_all_policies
+
+RESULTS_DIR = "results"
+
+PAPER_TABLE_III = {
+    "router_default": (252.4, 2927, 0.80, 0.192),
+    "router_latency_sensitive": (256.0, 2165, 0.81, -0.291),
+    "router_cost_sensitive": (231.8, 2536, 0.81, 0.117),
+    "fixed_direct": (249.9, 4457, 0.80, -0.367),
+    "fixed_light": (197.3, 2091, 0.82, 0.167),
+    "fixed_medium": (239.5, 1906, 0.82, 0.177),
+    "fixed_heavy": (343.2, 1932, 0.81, 0.132),
+}
+
+
+def ensure_results(results_dir: str = RESULTS_DIR) -> dict[str, list]:
+    """Run the 7 policies if their CSVs are missing; return loaded records."""
+    missing = [
+        name for name, csv in POLICY_TO_CSV.items()
+        if not os.path.exists(os.path.join(results_dir, csv))
+    ]
+    if missing:
+        run_all_policies(results_dir)
+    return {
+        name: TelemetryStore.read_csv(os.path.join(results_dir, csv))
+        for name, csv in POLICY_TO_CSV.items()
+    }
+
+
+def _mean(records, field):
+    if field == "cost":
+        return float(np.mean([r.total_billed_tokens for r in records]))
+    return float(np.mean([getattr(r, field) for r in records]))
+
+
+def table_i() -> list[str]:
+    """Table I: strategy bundle catalog."""
+    lines = ["# Table I — bundle catalog", "bundle,k,skip_retrieval,quality_prior,latency_prior_ms"]
+    for b in DEFAULT_CATALOG:
+        lines.append(f"{b.name},{b.top_k},{int(b.skip_retrieval)},{b.quality_prior},{b.latency_prior_ms}")
+    return lines
+
+
+def table_ii(stores) -> list[str]:
+    """Table II: benchmark corpus and index statistics."""
+    records = stores["router_default"]
+    index_tokens = records[0].index_embedding_tokens
+    lines = [
+        "# Table II — corpus/index stats (paper: 28 / 4 / 15 / 262)",
+        "metric,value",
+        f"queries,{len(records)}",
+        f"unique_strategies,{len(set(r.strategy for r in records))}",
+        f"corpus_lines,{len(BENCHMARK_CORPUS)}",
+        f"index_embedding_tokens,{index_tokens}",
+    ]
+    return lines
+
+
+def table_iii(stores) -> list[str]:
+    """Table III: policy-level comparison (the paper's central table)."""
+    lines = [
+        "# Table III — policy comparison (ours vs paper)",
+        "policy,cost_tok,lat_ms,quality,utility,paper_cost,paper_lat,paper_qual,paper_U",
+    ]
+    for name, recs in stores.items():
+        pc, pl, pq, pu = PAPER_TABLE_III[name]
+        lines.append(
+            f"{name},{_mean(recs,'cost'):.1f},{_mean(recs,'latency'):.0f},"
+            f"{_mean(recs,'quality_proxy'):.3f},{_mean(recs,'utility'):.3f},{pc},{pl},{pq},{pu}"
+        )
+    r = stores["router_default"]
+    h = stores["fixed_heavy"]
+    d = stores["fixed_direct"]
+    lines.append(
+        f"# headline: tokens vs fixed_heavy {100*(1-_mean(r,'cost')/_mean(h,'cost')):.1f}% "
+        f"(paper 26.4%) | latency vs fixed_direct {100*(1-_mean(r,'latency')/_mean(d,'latency')):.1f}% (paper 34.3%)"
+    )
+    return lines
+
+
+def table_iv(stores) -> list[str]:
+    """Table IV: per-query win rates of the router vs fixed baselines."""
+    router = stores["router_default"]
+    lines = ["# Table IV — router win rates", "baseline,p_cost_win,p_lat_win,p_qual_win"]
+    for name in ("fixed_direct", "fixed_light", "fixed_medium", "fixed_heavy"):
+        base = stores[name]
+        n = len(router)
+        cost_w = sum(a.total_billed_tokens < b.total_billed_tokens for a, b in zip(router, base)) / n
+        lat_w = sum(a.latency < b.latency for a, b in zip(router, base)) / n
+        qual_w = sum(a.quality_proxy > b.quality_proxy for a, b in zip(router, base)) / n
+        lines.append(f"{name},{cost_w:.2f},{lat_w:.2f},{qual_w:.2f}")
+    return lines
+
+
+def table_v(stores) -> list[str]:
+    """Table V: summary statistics of the default router run."""
+    recs = stores["router_default"]
+    lines = ["# Table V — router_default summary stats", "variable,mean,std,min,max"]
+    for field, vals in (
+        ("cost", [r.total_billed_tokens for r in recs]),
+        ("latency", [r.latency for r in recs]),
+        ("utility", [r.utility for r in recs]),
+        ("quality_proxy", [r.quality_proxy for r in recs]),
+    ):
+        v = np.asarray(vals, np.float64)
+        lines.append(f"{field},{v.mean():.1f},{v.std():.1f},{v.min():.1f},{v.max():.1f}")
+    return lines
+
+
+def table_vi(stores) -> list[str]:
+    """Table VI: per-strategy means ± std under the default router."""
+    store = TelemetryStore()
+    store.extend(stores["router_default"])
+    table = store.per_strategy_means()
+    lines = ["# Table VI — per-strategy means (router_default)",
+             "strategy,n,mean_cost,std_cost,mean_latency,std_latency,mean_U"]
+    for name, row in table.items():
+        lines.append(
+            f"{name},{row['n']:.0f},{row['mean_cost']:.1f},{row['std_cost']:.1f},"
+            f"{row['mean_latency']:.0f},{row['std_latency']:.0f},{row['mean_utility']:.3f}"
+        )
+    return lines
+
+
+def table_vii(stores) -> list[str]:
+    """Table VII: Pearson correlations among logged scalars."""
+    store = TelemetryStore()
+    store.extend(stores["router_default"])
+    mat, labels = store.correlation_matrix()
+    lines = ["# Table VII — correlations (paper: cost-lat .66, U-cost -.50, cplx-cost .22)",
+             "," + ",".join(labels)]
+    for i, row_label in enumerate(labels):
+        lines.append(row_label + "," + ",".join(f"{mat[i, j]:.2f}" for j in range(len(labels))))
+    return lines
+
+
+def figure_data(stores) -> list[str]:
+    """Data behind Figs. 1/4/5/8/15 (strategy mix, cumulative tokens, token
+    decomposition, confidence histogram, per-query deltas)."""
+    recs = stores["router_default"]
+    heavy = stores["fixed_heavy"]
+    lines = ["# Fig 1 — strategy selection frequency", "strategy,count"]
+    store = TelemetryStore()
+    store.extend(recs)
+    for k, v in store.strategy_counts().items():
+        lines.append(f"{k},{v}")
+    lines += ["# Fig 5 — mean token decomposition", "strategy,prompt,completion,embedding"]
+    for name in DEFAULT_CATALOG.names:
+        rows = [r for r in recs if r.strategy == name]
+        if rows:
+            lines.append(
+                f"{name},{np.mean([r.prompt_tokens for r in rows]):.1f},"
+                f"{np.mean([r.completion_tokens for r in rows]):.1f},"
+                f"{np.mean([r.embedding_tokens for r in rows]):.1f}"
+            )
+    confs = [r.retrieval_confidence for r in recs if not math.isnan(r.retrieval_confidence)]
+    lines += ["# Fig 8 — retrieval confidence histogram (10 bins 0..1)",
+              "bin_lo,count"]
+    hist, edges = np.histogram(confs, bins=10, range=(0, 1))
+    for lo, c in zip(edges[:-1], hist):
+        lines.append(f"{lo:.1f},{c}")
+    lines += ["# Fig 15 — per-query cost delta vs fixed-heavy", "query_idx,strategy,delta_tokens"]
+    for i, (a, b) in enumerate(zip(recs, heavy)):
+        lines.append(f"{i},{a.strategy},{a.total_billed_tokens - b.total_billed_tokens}")
+    return lines
+
+
+ALL_TABLES = {
+    "table_i": lambda stores: table_i(),
+    "table_ii": table_ii,
+    "table_iii": table_iii,
+    "table_iv": table_iv,
+    "table_v": table_v,
+    "table_vi": table_vi,
+    "table_vii": table_vii,
+    "figures": figure_data,
+}

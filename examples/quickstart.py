@@ -1,0 +1,34 @@
+"""Quickstart: route and answer queries with the CA-RAG engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.policies import make_policy
+from repro.serving.engine import build_paper_engine
+
+
+def main():
+    router = make_policy("router_default")
+    engine = build_paper_engine(router)
+
+    queries = [
+        "What is RAG?",
+        "Compare light versus heavy retrieval for long documents.",
+        "How does CA-RAG combine quality, latency, and cost in one scalar objective?",
+    ]
+    for q in queries:
+        resp = engine.answer(q)
+        r = resp.record
+        print(f"\nQ: {q}")
+        print(f"  routed to : {r.strategy} (complexity={r.complexity_score:.3f}, U={r.utility:.3f})")
+        print(f"  billed    : {r.total_billed_tokens} tokens "
+              f"(prompt {r.prompt_tokens} / completion {r.completion_tokens} / embed {r.embedding_tokens})")
+        print(f"  latency   : {r.latency:.0f} ms (modelled)")
+        print(f"  answer    : {resp.answer[:140]}...")
+
+    print("\nTelemetry summary:")
+    print(engine.telemetry.summary_json())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""RQ4 weight-sensitivity sweep (paper §VII.F/Fig. 14/Fig. 18).
+
+Sweeps w_L and w_C over the same bundle catalog and prints the resulting
+operating points — the paper's claim that "the same bundle catalog supports
+multiple cost-latency-quality operating points through weight adjustment
+alone".
+
+    PYTHONPATH=src python examples/weight_sensitivity.py
+"""
+
+from repro.core.router import Router, RouterConfig
+from repro.core.utility import UtilityWeights
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.serving.engine import EngineConfig, build_paper_engine
+
+
+def main():
+    settings = [
+        ("default (0.6/0.2/0.2)", UtilityWeights(0.6, 0.2, 0.2)),
+        ("latency-sensitive (w_L=0.5)", UtilityWeights(0.6, 0.5, 0.2)),
+        ("cost-sensitive (w_C=0.5)", UtilityWeights(0.6, 0.2, 0.5)),
+        ("quality-max (w_Q=1.0)", UtilityWeights(1.0, 0.1, 0.1)),
+        ("balanced (0.4/0.3/0.3)", UtilityWeights(0.4, 0.3, 0.3)),
+    ]
+    print(f"{'setting':32s} {'cost':>7s} {'lat_ms':>7s} {'qual':>6s}  strategy mix")
+    for name, w in settings:
+        router = Router(config=RouterConfig(weights=w))
+        engine = build_paper_engine(router, config=EngineConfig(warm_start_telemetry=True))
+        t = engine.run(list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS))
+        counts = t.strategy_counts()
+        mix = "/".join(str(counts[k]) for k in ("direct_llm", "light_rag", "medium_rag", "heavy_rag"))
+        print(
+            f"{name:32s} {t.mean('cost'):7.1f} {t.mean('latency'):7.0f} "
+            f"{t.mean('quality_proxy'):6.3f}  d/l/m/h={mix}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro - CA-RAG: Cost-Aware Query Routing for RAG, as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

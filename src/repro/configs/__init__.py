@@ -1,0 +1,8 @@
+"""Architecture configs: the 10 assigned archs + the paper's own CA-RAG config.
+
+Importing this package registers every arch in base.REGISTRY.
+"""
+import repro.configs.gnn_arch  # noqa: F401
+import repro.configs.lm_archs  # noqa: F401
+import repro.configs.recsys_archs  # noqa: F401
+from repro.configs.base import REGISTRY, all_arch_names, get_arch

@@ -1,0 +1,162 @@
+"""Config/cell plumbing shared by all architecture configs.
+
+Every architecture module registers an :class:`Arch` with:
+
+* ``cells()`` — the assigned (shape → CellSpec) set. A CellSpec builds, for
+  a given mesh+policy, the jit-able step function plus ShapeDtypeStruct
+  inputs and their NamedShardings — everything ``launch/dryrun.py`` needs to
+  ``.lower().compile()`` without allocating a single real array.
+* ``smoke()`` — a REDUCED config of the same family that runs one real
+  forward/train step on CPU (tests/test_configs_smoke.py asserts shapes +
+  finiteness).
+
+Hardware/roofline constants for the target (TPU v5e) live here too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.partition import ShardingPolicy
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class ScanCorrection:
+    """XLA's cost_analysis counts a while/scan body ONCE regardless of trip
+    count (verified experimentally). Each entry compiles a standalone scan
+    body and its cost is added ``multiplier`` times to the raw totals:
+        corrected = raw + Σ multiplier_i × cost(body_i).
+    """
+
+    fn: Callable
+    input_specs: tuple
+    in_shardings: tuple
+    multiplier: float
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    """Everything dryrun.py needs for one (arch × shape × mesh) lowering."""
+
+    fn: Callable  # positional-args step function
+    input_specs: tuple  # pytree of jax.ShapeDtypeStruct, positional
+    in_shardings: tuple  # matching pytree of NamedSharding
+    model_flops_per_step: float  # 6·N·D style analytic FLOPs (fwd+bwd if train)
+    description: str = ""
+    scan_corrections: list = dataclasses.field(default_factory=list)
+    out_shardings: object = None  # optional pytree matching fn's outputs
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    build: Callable[[jax.sharding.Mesh, ShardingPolicy], BuiltCell]
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    family: str  # lm | gnn | recsys
+    cells: Callable[[], dict[str, CellSpec]]
+    smoke: Callable[[], dict]  # runs reduced config; returns metrics
+    notes: str = ""
+
+
+def policy_for_mesh(mesh: jax.sharding.Mesh, **kwargs) -> ShardingPolicy:
+    axes = tuple(mesh.axis_names)
+    if "pod" in axes:
+        return ShardingPolicy(data_axes=("pod", "data"), model_axis="model", **kwargs)
+    if "model" in axes:
+        return ShardingPolicy(data_axes=("data",), model_axis="model", **kwargs)
+    return ShardingPolicy(data_axes=(axes[0],), model_axis=None, **kwargs)
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Drop sharding on dims whose size isn't divisible by the axis product.
+
+    pjit ``in_shardings`` demands exact divisibility (unlike
+    with_sharding_constraint); odd dims (e.g. granite's 49,155-row vocab)
+    replicate instead.
+    """
+    sizes = dict(mesh.shape)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries[: len(shape)]):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        world = 1
+        for a in axes:
+            world *= sizes[a]
+        out.append(entry if dim % world == 0 else None)
+    return P(*out)
+
+
+def shard(mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def pad_to_multiple(n: int, multiple: int = 512) -> int:
+    """Pad a leading dim so every production mesh (256/512 chips) divides it."""
+    return -(-n // multiple) * multiple
+
+
+def shard_tree_like(tree, mesh, spec_fn):
+    """Map a pytree of ShapeDtypeStructs to NamedShardings via path→spec."""
+    def to_sharding(path, leaf):
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            elif hasattr(k, "name"):
+                parts.append(str(k.name))
+        spec = spec_fn("/".join(parts), leaf)
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(to_sharding, tree)
+
+
+def replicated_tree(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+REGISTRY: dict[str, Callable[[], Arch]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(name: str) -> Arch:
+    if name not in REGISTRY:
+        # import side-effect registration
+        import repro.configs  # noqa: F401
+
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]()
+
+
+def all_arch_names() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(REGISTRY)

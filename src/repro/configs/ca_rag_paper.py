@@ -1,0 +1,63 @@
+"""The paper's own experiment configuration, in one place.
+
+Everything the 28-query benchmark run uses — Table I catalog, §V.A
+complexity constants, Eq. 1 weights, the calibrated modulation constants,
+telemetry/refinement settings, and the latency-model constants — so the
+reproduction is auditable from a single module (see EXPERIMENTS.md
+§Calibration for how the free parameters were fit and which paper numbers
+pinned them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bundles import DEFAULT_CATALOG, BundleCatalog
+from repro.core.router import RouterConfig
+from repro.core.signals import DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_K_MAX, DEFAULT_L_MAX
+from repro.core.utility import (
+    COST_SENSITIVE_WEIGHTS,
+    DEFAULT_C0,
+    DEFAULT_C1,
+    DEFAULT_DELTA,
+    DEFAULT_GAMMA,
+    DEFAULT_GLOBAL_DECAY,
+    DEFAULT_WEIGHTS,
+    LATENCY_SENSITIVE_WEIGHTS,
+)
+from repro.serving.engine import EngineConfig
+from repro.serving.latency import LatencyModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CARAGPaperConfig:
+    """Paper-pinned values (Table I, §V.A, §V.C) + calibrated free params."""
+
+    catalog: BundleCatalog = DEFAULT_CATALOG
+    # §V.A — paper-specified exactly
+    alpha: float = DEFAULT_ALPHA  # 0.6
+    beta: float = DEFAULT_BETA  # 0.4
+    l_max: float = DEFAULT_L_MAX  # 20
+    k_max: float = DEFAULT_K_MAX  # 3
+    # Eq. 1 weights — paper-specified exactly
+    weights: tuple = DEFAULT_WEIGHTS.as_tuple()  # (0.6, 0.2, 0.2)
+    weights_latency_sensitive: tuple = LATENCY_SENSITIVE_WEIGHTS.as_tuple()
+    weights_cost_sensitive: tuple = COST_SENSITIVE_WEIGHTS.as_tuple()
+    # quality-prior modulation — form unspecified in the paper; calibrated
+    gamma: float = DEFAULT_GAMMA
+    c0: float = DEFAULT_C0
+    delta: float = DEFAULT_DELTA
+    c1: float = DEFAULT_C1
+    global_decay: float = DEFAULT_GLOBAL_DECAY
+
+    def router_config(self) -> RouterConfig:
+        return RouterConfig()
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig()
+
+    def latency_config(self) -> LatencyModelConfig:
+        return LatencyModelConfig()
+
+
+PAPER_CONFIG = CARAGPaperConfig()

@@ -1,0 +1,205 @@
+"""gin-tu [arXiv:1810.00826]: 5 layers, hidden 64, sum aggregator, learnable ε.
+
+Cells (assignment):
+    full_graph_sm  Cora-scale:     2,708 nodes / 10,556 edges / d=1433   (full-batch train)
+    minibatch_lg   Reddit-scale:   232,965 nodes / 114.6M edges, batch 1024, fanout 15-10
+                   → static padded subgraph (169,984 nodes / 168,960 edges, d=602)
+    ogb_products   2,449,029 nodes / 61,859,140 edges / d=100            (full-batch train)
+    molecule       128 graphs × 30 nodes / 64 edges                      (graph classification)
+
+Distribution: node-feature/activation rows shard over (data×model) for the
+large full-batch cells (the segment_sum scatter over sharded destinations is
+the collective the roofline table surfaces); CA-RAG applicability note in
+DESIGN.md §5 — routing composes around the GNN as a corpus-graph retrieval
+stage without modifying message passing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    Arch,
+    BuiltCell,
+    CellSpec,
+    pad_to_multiple,
+    register,
+    replicated_tree,
+    shard,
+)
+from repro.models.gnn import GINConfig, NeighborSampler, graph_loss, init_params, node_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+GIN_TU = GINConfig(name="gin-tu", n_layers=5, d_hidden=64, d_feat=1433, n_classes=7)
+
+SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(
+        graph_nodes=232965, graph_edges=114615892, batch_nodes=1024, fanouts=(15, 10),
+        d_feat=602, n_classes=41,
+    ),
+    # padded to 512-divisible (2,449,029 → 2,449,408 nodes; 61,859,140 →
+    # 61,859,328 edges): pad nodes are isolated, pad edges self-loop on a pad
+    # node with zero label mask — preprocessing, not model change.
+    "ogb_products": dict(n_nodes=pad_to_multiple(2449029), n_edges=pad_to_multiple(61859140), d_feat=100, n_classes=47),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, n_classes=2),
+}
+
+_OPT = AdamWConfig(lr=1e-3, max_grad_norm=None)
+
+
+def _gin_flops(n_nodes, d_feat, d_hidden, n_layers, train=True):
+    per_layer0 = 2.0 * n_nodes * (d_feat * d_hidden + d_hidden * d_hidden)
+    per_layer = 2.0 * n_nodes * (d_hidden * d_hidden * 2)
+    fwd = per_layer0 + (n_layers - 1) * per_layer
+    return fwd * (3.0 if train else 1.0)
+
+
+def _node_train_cell(shape_name: str, *, shard_rows: bool) -> CellSpec:
+    sh = SHAPES[shape_name]
+    if shape_name == "minibatch_lg":
+        n_nodes, n_edges = NeighborSampler.subgraph_shape(sh["batch_nodes"], list(sh["fanouts"]))
+        d_feat, n_classes = sh["d_feat"], sh["n_classes"]
+    else:
+        n_nodes, n_edges = sh["n_nodes"], sh["n_edges"]
+        d_feat, n_classes = sh["d_feat"], sh["n_classes"]
+    cfg = GINConfig(name="gin-tu", n_layers=5, d_hidden=64, d_feat=d_feat, n_classes=n_classes)
+
+    def build(mesh, policy) -> BuiltCell:
+        row_axes = tuple(mesh.axis_names)  # nodes over the whole mesh
+        x_spec = P(row_axes, None) if shard_rows else P(None, None)
+        e_spec = P(row_axes) if shard_rows else P(None)
+
+        def step(params, opt_state, x, edge_src, edge_dst, labels, label_mask):
+            def lf(p):
+                return node_loss(p, cfg, x, edge_src, edge_dst, labels, label_mask)
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_params, new_opt, {"loss": loss, **om}
+
+        params_s = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        inputs = (
+            params_s,
+            opt_s,
+            jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+            jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_nodes,), jnp.float32),
+        )
+        in_shardings = (
+            replicated_tree(params_s, mesh),
+            replicated_tree(opt_s, mesh),
+            jax.sharding.NamedSharding(mesh, x_spec),
+            jax.sharding.NamedSharding(mesh, e_spec),
+            jax.sharding.NamedSharding(mesh, e_spec),
+            jax.sharding.NamedSharding(mesh, P(row_axes) if shard_rows else P(None)),
+            jax.sharding.NamedSharding(mesh, P(row_axes) if shard_rows else P(None)),
+        )
+        return BuiltCell(
+            fn=step,
+            input_specs=inputs,
+            in_shardings=in_shardings,
+            model_flops_per_step=_gin_flops(n_nodes, d_feat, 64, 5),
+            description=f"gin-tu {shape_name}: {n_nodes:,} nodes / {n_edges:,} edges (train)",
+        )
+
+    return CellSpec("gin-tu", shape_name, "train", build)
+
+
+def _molecule_cell() -> CellSpec:
+    sh = SHAPES["molecule"]
+    batch, npg, epg = sh["batch"], sh["n_nodes"], sh["n_edges"]
+    n_nodes, n_edges = batch * npg, batch * epg
+    cfg = GINConfig(
+        name="gin-tu", n_layers=5, d_hidden=64, d_feat=sh["d_feat"],
+        n_classes=sh["n_classes"], readout="graph",
+    )
+
+    def build(mesh, policy) -> BuiltCell:
+        dp = policy.dp
+
+        def step(params, opt_state, x, edge_src, edge_dst, graph_ids, labels):
+            def lf(p):
+                return graph_loss(p, cfg, x, edge_src, edge_dst, graph_ids, batch, labels)
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_params, new_opt, {"loss": loss, **om}
+
+        params_s = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        inputs = (
+            params_s,
+            opt_s,
+            jax.ShapeDtypeStruct((n_nodes, sh["d_feat"]), jnp.float32),
+            jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+        in_shardings = (
+            replicated_tree(params_s, mesh),
+            replicated_tree(opt_s, mesh),
+            shard(mesh, dp, None),  # nodes grouped per graph → batch-aligned
+            shard(mesh, dp),
+            shard(mesh, dp),
+            shard(mesh, dp),
+            shard(mesh, dp),
+        )
+        return BuiltCell(
+            fn=step,
+            input_specs=inputs,
+            in_shardings=in_shardings,
+            model_flops_per_step=_gin_flops(n_nodes, sh["d_feat"], 64, 5),
+            description=f"gin-tu molecule: {batch} graphs × {npg}n/{epg}e",
+        )
+
+    return CellSpec("gin-tu", "molecule", "train", build)
+
+
+def _gin_cells() -> dict[str, CellSpec]:
+    return {
+        "full_graph_sm": _node_train_cell("full_graph_sm", shard_rows=False),
+        "minibatch_lg": _node_train_cell("minibatch_lg", shard_rows=False),
+        "ogb_products": _node_train_cell("ogb_products", shard_rows=True),
+        "molecule": _molecule_cell(),
+    }
+
+
+def _gin_smoke() -> dict:
+    from repro.models.gnn import random_graph
+
+    cfg = GINConfig(name="gin_smoke", n_layers=2, d_hidden=16, d_feat=12, n_classes=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    indptr, indices = random_graph(64, 256, seed=0)
+    sampler = NeighborSampler(indptr, indices, seed=1)
+    sub = sampler.sample(np.arange(8), fanouts=[3, 2])
+    x = jax.random.normal(jax.random.PRNGKey(1), (len(sub["node_ids"]), 12))
+    labels = jnp.zeros((x.shape[0],), jnp.int32)
+    mask = jnp.zeros((x.shape[0],)).at[:8].set(1.0)
+    loss, grads = jax.value_and_grad(
+        lambda p: node_loss(p, cfg, x, jnp.asarray(sub["edge_src"]), jnp.asarray(sub["edge_dst"]), labels, mask)
+    )(params)
+    finite = np.isfinite(float(loss)) and all(
+        np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads)
+    )
+    return {"loss": float(loss), "finite": bool(finite), "sub_nodes": int(x.shape[0])}
+
+
+@register("gin-tu")
+def _gin() -> Arch:
+    return Arch(
+        name="gin-tu",
+        family="gnn",
+        cells=_gin_cells,
+        smoke=_gin_smoke,
+        notes="segment_sum message passing; real layered neighbor sampler for minibatch_lg",
+    )

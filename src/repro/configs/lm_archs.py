@@ -1,0 +1,142 @@
+"""The five assigned LM architecture configs (exact public-literature specs).
+
+    internlm2-20b        [arXiv:2403.17297; hf]   48L d=6144 48H kv8 ff=16384 V=92544
+    phi4-mini-3.8b       [arXiv:2412.08905; hf]   32L d=3072 24H kv8 ff=8192  V=200064
+    minitron-4b          [arXiv:2407.14679; hf]   32L d=3072 24H kv8 ff=9216  V=256000
+    kimi-k2-1t-a32b      [arXiv:2501.kimi2]       61L d=7168 64H kv8 ff=2048  V=163840  MoE 384e top-8
+    granite-moe-1b-a400m [hf:ibm-granite/...]     24L d=1024 16H kv8 ff=512   V=49155   MoE 32e top-8
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import Arch, register
+from repro.configs.lm_common import LMArchParams, lm_cells, lm_smoke
+from repro.models.transformer import TransformerConfig
+
+INTERNLM2_20B = TransformerConfig(
+    name="internlm2-20b",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92544,
+    rope_theta=1_000_000.0,
+    param_dtype=jnp.bfloat16,
+    tie_embeddings=False,
+)
+
+PHI4_MINI = TransformerConfig(
+    name="phi4-mini-3.8b",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=200064,
+    rope_theta=10_000.0,
+    param_dtype=jnp.bfloat16,
+    tie_embeddings=True,
+)
+
+MINITRON_4B = TransformerConfig(
+    name="minitron-4b",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=9216,
+    vocab=256000,
+    rope_theta=10_000.0,
+    param_dtype=jnp.bfloat16,
+    tie_embeddings=True,
+)
+
+KIMI_K2 = TransformerConfig(
+    name="kimi-k2-1t-a32b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=112,
+    d_ff=2048,  # per-expert hidden
+    vocab=163840,
+    rope_theta=50_000.0,
+    n_experts=384,
+    moe_top_k=8,
+    n_shared_experts=1,
+    capacity_factor=1.0,
+    param_dtype=jnp.bfloat16,
+    tie_embeddings=True,
+)
+
+GRANITE_MOE = TransformerConfig(
+    name="granite-moe-1b-a400m",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,  # per-expert hidden
+    vocab=49155,
+    rope_theta=10_000.0,
+    n_experts=32,
+    moe_top_k=8,
+    capacity_factor=1.25,
+    param_dtype=jnp.bfloat16,
+    tie_embeddings=True,
+)
+
+
+def _lm_arch(name: str, cfg: TransformerConfig, moment_dtype: str = "float32", notes: str = "",
+             fsdp_params: bool = False) -> Arch:
+    ap = LMArchParams(cfg=cfg, moment_dtype=moment_dtype, fsdp_params=fsdp_params)
+    return Arch(
+        name=name,
+        family="lm",
+        cells=lambda: lm_cells(name, ap),
+        smoke=lambda: lm_smoke(cfg),
+        notes=notes,
+    )
+
+
+@register("internlm2-20b")
+def _internlm2():
+    return _lm_arch("internlm2-20b", INTERNLM2_20B, notes="dense GQA; CA-RAG generator backbone")
+
+
+@register("phi4-mini-3.8b")
+def _phi4():
+    return _lm_arch("phi4-mini-3.8b", PHI4_MINI, notes="dense RoPE SwiGLU GQA; cheap generator tier")
+
+
+@register("minitron-4b")
+def _minitron():
+    return _lm_arch("minitron-4b", MINITRON_4B, notes="pruned nemotron; cheap generator tier")
+
+
+@register("kimi-k2-1t-a32b")
+def _kimi():
+    return _lm_arch(
+        "kimi-k2-1t-a32b",
+        KIMI_K2,
+        moment_dtype="int8",  # 1T params: quantized Adam moments fit 16GB/chip
+        fsdp_params=True,  # ZeRO-3: bf16 params sharded over data axes too
+        notes="trillion-param MoE; premium generator tier; EP over model axis",
+    )
+
+
+@register("granite-moe-1b-a400m")
+def _granite():
+    return _lm_arch("granite-moe-1b-a400m", GRANITE_MOE, notes="32e top-8 MoE; embedder/generator tier")
+
+
+# Name → TransformerConfig map for launch/train.py
+REGISTRY_CONFIGS = {
+    "internlm2-20b": INTERNLM2_20B,
+    "phi4-mini-3.8b": PHI4_MINI,
+    "minitron-4b": MINITRON_4B,
+    "kimi-k2-1t-a32b": KIMI_K2,
+    "granite-moe-1b-a400m": GRANITE_MOE,
+}

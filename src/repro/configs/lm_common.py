@@ -1,0 +1,510 @@
+"""Shared cell factory for the five assigned LM architectures.
+
+Shapes (assignment):
+    train_4k     seq 4,096   × global_batch 256   → train_step
+    prefill_32k  seq 32,768  × global_batch 32    → serve_step (prefill)
+    decode_32k   KV 32,768   × global_batch 128   → serve_step (decode)
+    long_500k    KV 524,288  × global_batch 1     → serve_step (decode)
+
+long_500k note (DESIGN.md §5): these are full-attention (GQA) models, so the
+long-context cell is *decode-only* — one token against a sequence-sharded
+524k KV cache is O(S) per step and fits HBM under SP; 500k *prefill* would
+be O(S²) and is intentionally not offered.
+
+Train cells run the full production step: loss (remat'd scan) → grads →
+AdamW update (int8 moments for the 1T-param kimi config so optimizer state
+fits 16 GB/chip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    BuiltCell,
+    CellSpec,
+    ScanCorrection,
+    policy_for_mesh,
+    sanitize_spec,
+    shard,
+    shard_tree_like,
+)
+from repro.distributed.partition import ShardingPolicy, spec_for_path, zero_shard
+from repro.models.kvcache import KVCache
+from repro.models.transformer import (
+    TransformerConfig,
+    active_param_count,
+    decode_step,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+TRAIN_SHAPE = dict(seq_len=4096, global_batch=256)
+PREFILL_SHAPE = dict(seq_len=32768, global_batch=32)
+DECODE_SHAPE = dict(seq_len=32768, global_batch=128)
+LONG_SHAPE = dict(seq_len=524288, global_batch=1)
+
+
+def _param_spec_fn(
+    policy: ShardingPolicy, axis_sizes: dict, *, zero_data: bool = False, fsdp_params: bool = False
+):
+    """path → PartitionSpec for params and optimizer-moment trees.
+
+    ``zero_data``: ZeRO-shard optimizer moments over the data axes.
+    ``fsdp_params``: additionally data-shard the *params* (FSDP/ZeRO-3) —
+    required for the 1T-param config (bf16 params alone are 125 GB/chip
+    under TP-only sharding); XLA inserts the per-use all-gathers.
+    Quantized moments are (q: param-shaped, scale: blockwise last-axis,
+    same rank) under numeric tuple keys — both take the param's spec
+    (sanitize_spec drops non-divisible dims like the scale's small tail).
+    """
+
+    def fn(path: str, leaf) -> P:
+        # Quantized moments flatten as <param-path>/q and /scale — strip the
+        # field names so the PARAM name resolves the spec.
+        parts = [p for p in path.split("/") if p and p not in ("q", "scale")]
+        if parts and parts[0] in ("m", "v", "mom"):
+            named = [p for p in parts[1:] if not p.isdigit()]
+            if not named:
+                return P()
+            base = spec_for_path(named[-1], policy)
+            if zero_data:
+                base = zero_shard(base, leaf.shape, policy.data_axes, axis_sizes)
+            return base
+        if parts and parts[0] == "step":
+            return P()
+        named = [p for p in parts if not p.isdigit()]
+        base = spec_for_path(named[-1] if named else "", policy)
+        if fsdp_params:
+            base = zero_shard(base, leaf.shape, policy.data_axes, axis_sizes)
+        return base
+
+    return fn
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _tokens_spec(policy, batch, seq):
+    return P(policy.dp, None) if batch > 1 else P(None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMArchParams:
+    cfg: TransformerConfig
+    moment_dtype: str = "float32"  # "int8" for the 1T MoE
+    fsdp_params: bool = False  # ZeRO-3 param sharding (1T MoE)
+
+    def flops_per_token_fwd(self) -> float:
+        return 2.0 * active_param_count(self.cfg)
+
+
+# --------------------------------------------------------------------------- #
+# Scan-body correction pieces (see base.ScanCorrection)                        #
+# --------------------------------------------------------------------------- #
+def _single_layer_abstract(cfg: TransformerConfig):
+    """ShapeDtypeStructs for ONE layer's params (no leading L)."""
+    full = _abstract(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype), full["layers"]
+    )
+
+
+def _body_spec_fn(policy: ShardingPolicy):
+    """Param path → spec for single-layer (un-stacked) params."""
+    from jax.sharding import PartitionSpec as P
+
+    table = {
+        "wq": P(None, policy.tp),
+        "wk": P(None, policy.tp),
+        "wv": P(None, policy.tp),
+        "wo": P(policy.tp, None),
+        "w_gate": P(None, policy.tp),
+        "w_up": P(None, policy.tp),
+        "w_down": P(policy.tp, None),
+        "router": P(),
+        "e_gate": P(policy.tp, None, None),
+        "e_up": P(policy.tp, None, None),
+        "e_down": P(policy.tp, None, None),
+        "s_gate": P(None, policy.tp),
+        "s_up": P(None, policy.tp),
+        "s_down": P(policy.tp, None),
+    }
+
+    def fn(path, leaf):
+        name = [p for p in path.split("/") if p and not p.isdigit()]
+        return table.get(name[-1] if name else "", P())
+
+    return fn
+
+
+def _layer_forward(cfg: TransformerConfig, policy, positions):
+    """One decoder layer as a standalone function (mirrors the scan body)."""
+    from repro.models import layers as L
+    from repro.models.transformer import _attention_block, _ffn_block
+
+    inv_freq = L.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+
+    def body(lp, x):
+        h = L.rmsnorm({"scale": lp["ln1_scale"]}, x)
+        attn, _ = _attention_block(lp, cfg, h, positions, inv_freq, q_block=cfg.q_block)
+        x = x + attn
+        h2 = L.rmsnorm({"scale": lp["ln2_scale"]}, x)
+        ffn, _ = _ffn_block(lp, cfg, h2, policy)  # keep EP dispatch sharding
+        return x + ffn
+
+    return body
+
+
+def _lm_scan_corrections(cfg, mesh, policy, B, S, mode: str) -> list:
+    """Build ScanCorrection entries for an LM cell.
+
+    train (remat="full"): raw scan counts (2·fwd + bwd) once → add
+        (L−1)·(fwd + fwd+bwd) = (L−1)·(cost(fwd_body) + cost(grad_body)).
+    prefill: add (L−1)·cost(fwd_body).
+    decode: add (L−1)·cost(decode_body).
+    """
+    L_layers = cfg.n_layers
+    if L_layers <= 1:
+        return []
+    lp_s = _single_layer_abstract(cfg)
+    lp_sh = shard_tree_like(lp_s, mesh, _body_spec_fn(policy))
+    x_s = jax.ShapeDtypeStruct((B, max(S, 1) if mode != "decode" else 1, cfg.d_model), cfg.compute_dtype)
+    x_sh = shard(mesh, policy.dp if B > 1 else None, None, None)
+    out = []
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S, dtype=jnp.int32)
+        fwd = _layer_forward(cfg, policy, positions)
+        out.append(ScanCorrection(fwd, (lp_s, x_s), (lp_sh, x_sh), float(L_layers - 1)))
+        if mode == "train":
+            def grad_body(lp, x):
+                loss = lambda lp, x: jnp.sum(fwd(lp, x).astype(jnp.float32))
+                return jax.grad(loss, argnums=(0, 1))(lp, x)
+
+            out.append(ScanCorrection(grad_body, (lp_s, x_s), (lp_sh, x_sh), float(L_layers - 1)))
+    elif mode == "decode_q8":
+        from repro.kernels.decode_attention.kernel import quantize_kv
+        from repro.models import layers as Lm
+
+        inv_freq = Lm.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+        dh = cfg.head_dim
+        cd = cfg.compute_dtype
+
+        def decode_q8_body(lp, x, kq, ks, vq, vs, positions):
+            b = x.shape[0]
+            h = Lm.rmsnorm({"scale": lp["ln1_scale"]}, x)
+            q = (h @ lp["wq"].astype(cd)).reshape(b, 1, cfg.n_heads, dh)
+            k1 = (h @ lp["wk"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+            v1 = (h @ lp["wv"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+            q = Lm.apply_rope(q, positions[:, None], inv_freq)
+            k1 = Lm.apply_rope(k1, positions[:, None], inv_freq)
+            k1q, k1s = quantize_kv(k1)
+            v1q, v1s = quantize_kv(v1)
+            bi = jnp.arange(b)
+            kq = kq.at[bi, positions].set(k1q[:, 0])
+            ks = ks.at[bi, positions].set(k1s[:, 0])
+            vq = vq.at[bi, positions].set(v1q[:, 0])
+            vs = vs.at[bi, positions].set(v1s[:, 0])
+            k_deq = kq.astype(cd) * ks[..., None].astype(cd)
+            v_deq = vq.astype(cd) * vs[..., None].astype(cd)
+            attn = Lm.gqa_attention(q, k_deq, v_deq, causal=False,
+                                    kv_length=positions + 1).reshape(b, 1, cfg.n_heads * dh)
+            x = x + attn @ lp["wo"].astype(cd)
+            h2 = Lm.rmsnorm({"scale": lp["ln2_scale"]}, x)
+            from repro.models.transformer import _ffn_block
+
+            ffn, _ = _ffn_block(lp, cfg, h2, policy)
+            return x + ffn, kq, ks, vq, vs
+
+        kvq_s = jax.ShapeDtypeStruct((B, S, cfg.n_kv_heads, dh), jnp.int8)
+        sc_s = jax.ShapeDtypeStruct((B, S, cfg.n_kv_heads), jnp.float32)
+        if B == 1:
+            kv_sh = shard(mesh, None, tuple(mesh.axis_names), None, None)
+            sc_sh = shard(mesh, None, tuple(mesh.axis_names), None)
+            pos_sh = shard(mesh, None)
+        else:
+            kv_sh = shard(mesh, policy.dp, policy.tp, None, None)
+            sc_sh = shard(mesh, policy.dp, policy.tp, None)
+            pos_sh = shard(mesh, policy.dp)
+        x1_s = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cd)
+        x1_sh = shard(mesh, policy.dp if B > 1 else None, None, None)
+        pos_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out.append(
+            ScanCorrection(
+                decode_q8_body,
+                (lp_s, x1_s, kvq_s, sc_s, kvq_s, sc_s, pos_s),
+                (lp_sh, x1_sh, kv_sh, sc_sh, kv_sh, sc_sh, pos_sh),
+                float(L_layers - 1),
+            )
+        )
+    else:  # decode
+        from repro.models import layers as Lm
+
+        inv_freq = Lm.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+        dh = cfg.head_dim
+        cd = cfg.compute_dtype
+
+        def decode_body(lp, x, k_cache, v_cache, positions):
+            b = x.shape[0]
+            h = Lm.rmsnorm({"scale": lp["ln1_scale"]}, x)
+            q = (h @ lp["wq"].astype(cd)).reshape(b, 1, cfg.n_heads, dh)
+            k1 = (h @ lp["wk"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+            v1 = (h @ lp["wv"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+            q = Lm.apply_rope(q, positions[:, None], inv_freq)
+            k1 = Lm.apply_rope(k1, positions[:, None], inv_freq)
+            bi = jnp.arange(b)
+            k_cache = k_cache.at[bi, positions].set(k1[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[bi, positions].set(v1[:, 0].astype(v_cache.dtype))
+            attn = Lm.gqa_attention(q, k_cache.astype(cd), v_cache.astype(cd), causal=False,
+                                    kv_length=positions + 1).reshape(b, 1, cfg.n_heads * dh)
+            x = x + attn @ lp["wo"].astype(cd)
+            h2 = Lm.rmsnorm({"scale": lp["ln2_scale"]}, x)
+            from repro.models.transformer import _ffn_block
+
+            ffn, _ = _ffn_block(lp, cfg, h2, policy)
+            return x + ffn, k_cache, v_cache
+
+        kv_s = jax.ShapeDtypeStruct((B, S, cfg.n_kv_heads, dh), jnp.bfloat16)
+        if B == 1:
+            kv_sh = shard(mesh, None, tuple(mesh.axis_names), None, None)
+            pos_sh = shard(mesh, None)
+        else:
+            kv_sh = shard(mesh, policy.dp, policy.tp, None, None)
+            pos_sh = shard(mesh, policy.dp)
+        x1_s = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cd)
+        x1_sh = shard(mesh, policy.dp if B > 1 else None, None, None)
+        pos_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out.append(
+            ScanCorrection(
+                decode_body,
+                (lp_s, x1_s, kv_s, kv_s, pos_s),
+                (lp_sh, x1_sh, kv_sh, kv_sh, pos_sh),
+                float(L_layers - 1),
+            )
+        )
+    return out
+
+
+def make_train_cell(arch: str, ap: LMArchParams) -> CellSpec:
+    base_cfg = dataclasses.replace(ap.cfg, remat="full", q_block=512)
+    opt_cfg = AdamWConfig(lr=3e-4, weight_decay=0.1, moment_dtype=ap.moment_dtype)
+    B, S = TRAIN_SHAPE["global_batch"], TRAIN_SHAPE["seq_len"]
+
+    def build(mesh, policy) -> BuiltCell:
+        axis_sizes = dict(mesh.shape)
+        # per-data-shard MoE dispatch groups (§Perf iteration 2)
+        dp_world = 1
+        for a in policy.data_axes:
+            dp_world *= axis_sizes[a]
+        cfg = (
+            dataclasses.replace(base_cfg, moe_groups=dp_world)
+            if base_cfg.is_moe
+            else base_cfg
+        )
+
+        def step(params, opt_state, tokens, targets):
+            def lf(p):
+                return loss_fn(p, cfg, tokens, targets, policy=policy, loss_chunk=512)
+
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+            return new_params, new_opt, {"loss": loss, **aux, **om}
+
+        params_s = _abstract(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        opt_s = _abstract(lambda p: adamw_init(p, opt_cfg), params_s)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        spec_fn = _param_spec_fn(policy, axis_sizes, zero_data=True, fsdp_params=ap.fsdp_params)
+        in_shardings = (
+            shard_tree_like(params_s, mesh, spec_fn),
+            shard_tree_like(opt_s, mesh, spec_fn),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp, None),
+        )
+        n_active = active_param_count(cfg)
+        model_flops = 6.0 * n_active * B * S
+        metrics_sh = {
+            k: shard(mesh)
+            for k in ("loss", "lm_loss", "aux_loss", "z_loss", "grad_norm", "lr")
+        }
+        return BuiltCell(
+            fn=step,
+            input_specs=(params_s, opt_s, tokens, tokens),
+            in_shardings=in_shardings,
+            model_flops_per_step=model_flops,
+            description=f"{arch} train_4k: B={B} S={S} params={param_count(cfg):,} active={n_active:,}",
+            scan_corrections=_lm_scan_corrections(cfg, mesh, policy, B, S, "train"),
+            out_shardings=(in_shardings[0], in_shardings[1], metrics_sh),
+        )
+
+    return CellSpec(arch, "train_4k", "train", build)
+
+
+def make_prefill_cell(arch: str, ap: LMArchParams) -> CellSpec:
+    cfg = dataclasses.replace(ap.cfg, q_block=512, max_seq_len=PREFILL_SHAPE["seq_len"])
+    B, S = PREFILL_SHAPE["global_batch"], PREFILL_SHAPE["seq_len"]
+
+    def build(mesh, policy) -> BuiltCell:
+        def step(params, tokens):
+            return prefill(params, cfg, tokens, max_len=S, policy=policy)
+
+        params_s = _abstract(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        spec_fn = _param_spec_fn(policy, dict(mesh.shape))
+        in_shardings = (
+            shard_tree_like(params_s, mesh, spec_fn),
+            shard(mesh, policy.dp, None),
+        )
+        n_active = active_param_count(cfg)
+        dh = cfg.head_dim
+        attn_flops = cfg.n_layers * 2.0 * B * cfg.n_heads * S * S * dh  # QKᵀ+PV, causal ≈ ×0.5×2
+        model_flops = 2.0 * n_active * B * S + attn_flops
+        return BuiltCell(
+            fn=step,
+            input_specs=(params_s, tokens),
+            in_shardings=in_shardings,
+            model_flops_per_step=model_flops,
+            description=f"{arch} prefill_32k: B={B} S={S}",
+            scan_corrections=_lm_scan_corrections(cfg, mesh, policy, B, S, "prefill"),
+        )
+
+    return CellSpec(arch, "prefill_32k", "prefill", build)
+
+
+def make_decode_cell(arch: str, ap: LMArchParams, shape_name: str) -> CellSpec:
+    import os as _os
+
+    sh = DECODE_SHAPE if shape_name == "decode_32k" else LONG_SHAPE
+    B, S = sh["global_batch"], sh["seq_len"]
+    cfg = dataclasses.replace(ap.cfg, max_seq_len=S)
+    kv_int8 = _os.environ.get("REPRO_KV_DTYPE", "bf16") == "int8"
+
+    def build(mesh, policy) -> BuiltCell:
+        # long-context: shard the KV sequence over EVERY mesh axis (batch=1
+        # leaves dp idle otherwise); decode_32k: batch over dp, seq over model.
+        if B == 1:
+            all_axes = tuple(mesh.axis_names)
+            kv_spec = P(None, None, all_axes, None, None)
+            batch_spec = P(None)
+        else:
+            kv_spec = P(None, policy.dp, policy.tp, None, None)
+            batch_spec = P(policy.dp)
+
+        params_s = _abstract(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        dh = cfg.head_dim
+        lengths = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+        spec_fn = _param_spec_fn(policy, dict(mesh.shape))
+        scale_spec = jax.sharding.NamedSharding(
+            mesh, type(kv_spec)(*[e for e in kv_spec][:-1])
+        )
+        if kv_int8:
+            from repro.models.transformer import decode_step_q8
+
+            def step(params, kq, ks, vq, vs, lengths, tokens):
+                logits, kq2, ks2, vq2, vs2, len2 = decode_step_q8(
+                    params, cfg, kq, ks, vq, vs, lengths, tokens, policy=None
+                )
+                kq2 = jax.lax.with_sharding_constraint(kq2, kv_spec)
+                vq2 = jax.lax.with_sharding_constraint(vq2, kv_spec)
+                return logits, kq2, ks2, vq2, vs2, len2
+
+            kv = jax.ShapeDtypeStruct((cfg.n_layers, B, S, cfg.n_kv_heads, dh), jnp.int8)
+            kv_scale = jax.ShapeDtypeStruct((cfg.n_layers, B, S, cfg.n_kv_heads), jnp.float32)
+            inputs = (params_s, kv, kv_scale, kv, kv_scale, lengths, tokens)
+            in_shardings = (
+                shard_tree_like(params_s, mesh, spec_fn),
+                jax.sharding.NamedSharding(mesh, kv_spec),
+                scale_spec,
+                jax.sharding.NamedSharding(mesh, kv_spec),
+                scale_spec,
+                shard(mesh, *batch_spec),
+                shard(mesh, *batch_spec),
+            )
+        else:
+            def step(params, k, v, lengths, tokens):
+                cache = KVCache(k=k, v=v, lengths=lengths)
+                logits, new_cache = decode_step(params, cfg, cache, tokens, policy=None)
+                k2 = jax.lax.with_sharding_constraint(new_cache.k, kv_spec)
+                v2 = jax.lax.with_sharding_constraint(new_cache.v, kv_spec)
+                return logits, k2, v2, new_cache.lengths
+
+            kv = jax.ShapeDtypeStruct((cfg.n_layers, B, S, cfg.n_kv_heads, dh), jnp.bfloat16)
+            inputs = (params_s, kv, kv, lengths, tokens)
+            in_shardings = (
+                shard_tree_like(params_s, mesh, spec_fn),
+                jax.sharding.NamedSharding(mesh, kv_spec),
+                jax.sharding.NamedSharding(mesh, kv_spec),
+                shard(mesh, *batch_spec),
+                shard(mesh, *batch_spec),
+            )
+        n_active = active_param_count(cfg)
+        attn_flops = cfg.n_layers * 4.0 * B * cfg.n_heads * S * dh
+        model_flops = 2.0 * n_active * B + attn_flops
+        return BuiltCell(
+            fn=step,
+            input_specs=inputs,
+            in_shardings=in_shardings,
+            model_flops_per_step=model_flops,
+            description=f"{arch} {shape_name}: B={B} KV={S} kv_dtype={'int8' if kv_int8 else 'bf16'}",
+            scan_corrections=_lm_scan_corrections(
+                cfg, mesh, policy, B, S, "decode_q8" if kv_int8 else "decode"
+            ),
+        )
+
+    return CellSpec(arch, shape_name, "decode", build)
+
+
+def lm_cells(arch: str, ap: LMArchParams) -> dict[str, CellSpec]:
+    return {
+        "train_4k": make_train_cell(arch, ap),
+        "prefill_32k": make_prefill_cell(arch, ap),
+        "decode_32k": make_decode_cell(arch, ap, "decode_32k"),
+        "long_500k": make_decode_cell(arch, ap, "long_500k"),
+    }
+
+
+def lm_smoke(cfg_full: TransformerConfig, **reduce_kw) -> dict:
+    """Reduced-config smoke: one forward + train step + decode on CPU."""
+    reduced = dataclasses.replace(
+        cfg_full,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg_full.n_kv_heads, 2),
+        d_head=16,
+        d_ff=128,
+        vocab=211,
+        n_experts=(4 if cfg_full.is_moe else None),
+        moe_top_k=(2 if cfg_full.is_moe else 0),
+        n_shared_experts=min(cfg_full.n_shared_experts, 1),
+        compute_dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        max_seq_len=32,
+        remat="none",
+        q_block=None,
+        **reduce_kw,
+    )
+    params = init_params(jax.random.PRNGKey(0), reduced)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, reduced.vocab)
+    loss, metrics = loss_fn(params, reduced, toks, toks)
+    logits, cache = prefill(params, reduced, toks, max_len=32)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    d_logits, cache = decode_step(params, reduced, cache, nxt)
+    assert logits.shape == (2, reduced.vocab)
+    assert d_logits.shape == (2, reduced.vocab)
+    finite = bool(
+        np.isfinite(float(loss))
+        and np.isfinite(np.asarray(logits)).all()
+        and np.isfinite(np.asarray(d_logits)).all()
+    )
+    return {"loss": float(loss), "finite": finite, "logits_shape": tuple(logits.shape)}

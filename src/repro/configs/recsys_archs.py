@@ -1,0 +1,480 @@
+"""The four assigned recsys architecture configs.
+
+    dlrm-mlperf  [arXiv:1906.00091]  13 dense / 26 sparse / embed 128 / dot interaction
+    deepfm       [arXiv:1703.04247]  39 sparse / embed 10 / FM + 400-400-400 MLP
+    mind         [arXiv:1904.08030]  embed 64 / 4 interests / 3 capsule iters
+    sasrec       [arXiv:1808.09781]  embed 50 / 2 blocks / 1 head / seq 50
+
+Shapes: train_batch 65,536 (train) · serve_p99 512 · serve_bulk 262,144
+(forward scoring) · retrieval_cand 1 × 1,000,000 (batched-dot + blocked
+top-k — never a loop).
+
+Distribution: the big embedding tables shard row-wise over the whole mesh
+(DLRM's 187.7M-row Criteo table ≈ 96 GB f32 → 375 MB/chip at 256 chips);
+lookups against row-sharded tables are the all-to-all-style collective the
+roofline table surfaces. MLPs replicate and all-reduce over DP.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    Arch,
+    BuiltCell,
+    CellSpec,
+    pad_to_multiple,
+    register,
+    replicated_tree,
+    shard,
+)
+from repro.models import recsys as R
+from repro.retrieval.topk import blocked_topk
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+TRAIN_B = 65536
+P99_B = 512
+BULK_B = 262144
+N_CAND = pad_to_multiple(1_000_000)  # 1,000,448: padded so 512 chips divide rows
+TOPK = 100
+
+_OPT = AdamWConfig(lr=1e-3, max_grad_norm=None)
+
+DLRM = R.DLRMConfig()
+DEEPFM = R.DeepFMConfig()
+MIND = R.MINDConfig()
+SASREC = R.SASRecConfig()
+
+
+def _row_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def _table_spec_fn(mesh, policy, table_keys=("table", "first_order", "item_embed")):
+    rows = _row_axes(mesh)
+
+    def fn(path, leaf):
+        name = [p for p in path.split("/") if p and not p.isdigit()]
+        leaf_name = name[-1] if name else ""
+        under_opt = name and name[0] in ("m", "v")
+        base_name = name[1] if under_opt and len(name) > 1 else leaf_name
+        for key in table_keys:
+            if key in path.split("/") or base_name == key:
+                if len(leaf.shape) >= 1 and leaf.shape[0] > 100_000:
+                    return P(rows, *([None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return fn
+
+
+def _shard_params(tree, mesh, policy):
+    from repro.configs.base import shard_tree_like
+
+    return shard_tree_like(tree, mesh, _table_spec_fn(mesh, policy))
+
+
+def _pad_big_tables(tree):
+    """Pad >100k-row leading dims to multiples of 512 (mesh-divisible).
+
+    Lookup semantics are unaffected — padding rows sit past every field
+    offset and are never gathered; dry-run memory accounting includes them
+    (0.0003% of the DLRM table)."""
+    import jax as _jax
+
+    def pad(leaf):
+        if len(leaf.shape) >= 1 and leaf.shape[0] > 100_000:
+            return _jax.ShapeDtypeStruct(
+                (pad_to_multiple(leaf.shape[0]), *leaf.shape[1:]), leaf.dtype
+            )
+        return leaf
+
+    return _jax.tree.map(pad, tree)
+
+
+# --------------------------------------------------------------------------- #
+# Per-arch input makers (ShapeDtypeStructs)                                    #
+# --------------------------------------------------------------------------- #
+def _dlrm_inputs(b):
+    return (
+        jax.ShapeDtypeStruct((b, DLRM.n_dense), jnp.float32),
+        jax.ShapeDtypeStruct((b, DLRM.n_sparse), jnp.int32),
+    )
+
+
+def _deepfm_inputs(b):
+    return (jax.ShapeDtypeStruct((b, DEEPFM.n_sparse), jnp.int32),)
+
+
+def _mind_inputs(b):
+    return (
+        jax.ShapeDtypeStruct((b, MIND.hist_len), jnp.int32),
+        jax.ShapeDtypeStruct((b, MIND.hist_len), jnp.float32),
+    )
+
+
+def _sasrec_inputs(b):
+    return (jax.ShapeDtypeStruct((b, SASREC.seq_len), jnp.int32),)
+
+
+# --------------------------------------------------------------------------- #
+# Cell factories                                                               #
+# --------------------------------------------------------------------------- #
+def _recsys_cell(arch, shape, kind, make_build):
+    return CellSpec(arch, shape, kind, make_build)
+
+
+def _dlrm_cells() -> dict[str, CellSpec]:
+    def train_build(mesh, policy):
+        def step(params, opt_state, dense, sparse, labels):
+            loss, grads = jax.value_and_grad(
+                lambda p: R.dlrm_loss(p, DLRM, dense, sparse, labels)
+            )(params)
+            new_p, new_o, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_p, new_o, {"loss": loss, **om}
+
+        params_s = _pad_big_tables(R.dlrm_abstract(DLRM))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        dense, sparse = _dlrm_inputs(TRAIN_B)
+        labels = jax.ShapeDtypeStruct((TRAIN_B,), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            _shard_params(opt_s, mesh, policy),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp),
+        )
+        flops = _dlrm_flops(TRAIN_B) * 3
+        return BuiltCell(step, (params_s, opt_s, dense, sparse, labels), in_sh, flops,
+                         f"dlrm train: B={TRAIN_B}, table rows={DLRM.fields.total_rows:,}")
+
+    def serve_build_factory(b):
+        def build(mesh, policy):
+            def step(params, dense, sparse):
+                return R.dlrm_forward(params, DLRM, dense, sparse)
+
+            params_s = _pad_big_tables(R.dlrm_abstract(DLRM))
+            dense, sparse = _dlrm_inputs(b)
+            in_sh = (
+                _shard_params(params_s, mesh, policy),
+                shard(mesh, policy.dp, None),
+                shard(mesh, policy.dp, None),
+            )
+            return BuiltCell(step, (params_s, dense, sparse), in_sh, _dlrm_flops(b),
+                             f"dlrm serve: B={b}")
+
+        return build
+
+    def retrieval_build(mesh, policy):
+        rows = _row_axes(mesh)
+
+        def step(params, dense, candidates):
+            user = R.mlp_apply(params["bot"], dense, activation="relu", final_activation=True)
+            scores = user @ candidates.T  # (1, N_CAND)
+            return blocked_topk(scores, TOPK)
+
+        params_s = _pad_big_tables(R.dlrm_abstract(DLRM))
+        dense = jax.ShapeDtypeStruct((1, DLRM.n_dense), jnp.float32)
+        cands = jax.ShapeDtypeStruct((N_CAND, DLRM.embed_dim), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            shard(mesh, None, None),
+            jax.sharding.NamedSharding(mesh, P(rows, None)),
+        )
+        return BuiltCell(step, (params_s, dense, cands), in_sh, 2.0 * N_CAND * DLRM.embed_dim,
+                         f"dlrm retrieval: 1×{N_CAND:,} candidates")
+
+    return {
+        "train_batch": _recsys_cell("dlrm-mlperf", "train_batch", "train", train_build),
+        "serve_p99": _recsys_cell("dlrm-mlperf", "serve_p99", "serve", serve_build_factory(P99_B)),
+        "serve_bulk": _recsys_cell("dlrm-mlperf", "serve_bulk", "serve", serve_build_factory(BULK_B)),
+        "retrieval_cand": _recsys_cell("dlrm-mlperf", "retrieval_cand", "retrieval", retrieval_build),
+    }
+
+
+def _dlrm_flops(b):
+    bot = 2 * b * (13 * 512 + 512 * 256 + 256 * 128)
+    top = 2 * b * (479 * 1024 + 1024 * 1024 + 1024 * 512 + 512 * 256 + 256)
+    inter = 2 * b * 27 * 27 * 128
+    return float(bot + top + inter)
+
+
+def _deepfm_cells() -> dict[str, CellSpec]:
+    def train_build(mesh, policy):
+        def step(params, opt_state, sparse, labels):
+            loss, grads = jax.value_and_grad(
+                lambda p: R.deepfm_loss(p, DEEPFM, sparse, labels)
+            )(params)
+            new_p, new_o, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_p, new_o, {"loss": loss, **om}
+
+        params_s = _pad_big_tables(jax.eval_shape(lambda k: R.deepfm_init(k, DEEPFM), jax.random.PRNGKey(0)))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        (sparse,) = _deepfm_inputs(TRAIN_B)
+        labels = jax.ShapeDtypeStruct((TRAIN_B,), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            _shard_params(opt_s, mesh, policy),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp),
+        )
+        return BuiltCell(step, (params_s, opt_s, sparse, labels), in_sh, _deepfm_flops(TRAIN_B) * 3,
+                         f"deepfm train: B={TRAIN_B}")
+
+    def serve_build_factory(b):
+        def build(mesh, policy):
+            def step(params, sparse):
+                return R.deepfm_forward(params, DEEPFM, sparse)
+
+            params_s = _pad_big_tables(jax.eval_shape(lambda k: R.deepfm_init(k, DEEPFM), jax.random.PRNGKey(0)))
+            (sparse,) = _deepfm_inputs(b)
+            in_sh = (_shard_params(params_s, mesh, policy), shard(mesh, policy.dp, None))
+            return BuiltCell(step, (params_s, sparse), in_sh, _deepfm_flops(b), f"deepfm serve: B={b}")
+
+        return build
+
+    def retrieval_build(mesh, policy):
+        rows = _row_axes(mesh)
+
+        def step(params, sparse, candidates):
+            emb = R.field_lookup(params["table"], DEEPFM.fields, sparse)  # (1, F, D)
+            user = emb.sum(axis=1)  # (1, D)
+            scores = user @ candidates.T
+            return blocked_topk(scores, TOPK)
+
+        params_s = _pad_big_tables(jax.eval_shape(lambda k: R.deepfm_init(k, DEEPFM), jax.random.PRNGKey(0)))
+        (sparse,) = _deepfm_inputs(1)
+        cands = jax.ShapeDtypeStruct((N_CAND, DEEPFM.embed_dim), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            shard(mesh, None, None),
+            jax.sharding.NamedSharding(mesh, P(rows, None)),
+        )
+        return BuiltCell(step, (params_s, sparse, cands), in_sh, 2.0 * N_CAND * DEEPFM.embed_dim,
+                         f"deepfm retrieval: 1×{N_CAND:,}")
+
+    return {
+        "train_batch": _recsys_cell("deepfm", "train_batch", "train", train_build),
+        "serve_p99": _recsys_cell("deepfm", "serve_p99", "serve", serve_build_factory(P99_B)),
+        "serve_bulk": _recsys_cell("deepfm", "serve_bulk", "serve", serve_build_factory(BULK_B)),
+        "retrieval_cand": _recsys_cell("deepfm", "retrieval_cand", "retrieval", retrieval_build),
+    }
+
+
+def _deepfm_flops(b):
+    deep = 2 * b * (390 * 400 + 400 * 400 + 400 * 400 + 400)
+    fm = 2 * b * 39 * 10
+    return float(deep + fm)
+
+
+def _mind_cells() -> dict[str, CellSpec]:
+    def train_build(mesh, policy):
+        def step(params, opt_state, hist, mask, target, negs):
+            loss, grads = jax.value_and_grad(
+                lambda p: R.mind_loss(p, MIND, hist, mask, target, negs)
+            )(params)
+            new_p, new_o, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_p, new_o, {"loss": loss, **om}
+
+        params_s = _pad_big_tables(jax.eval_shape(lambda k: R.mind_init(k, MIND), jax.random.PRNGKey(0)))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        hist, mask = _mind_inputs(TRAIN_B)
+        target = jax.ShapeDtypeStruct((TRAIN_B,), jnp.int32)
+        negs = jax.ShapeDtypeStruct((MIND.n_negatives,), jnp.int32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            _shard_params(opt_s, mesh, policy),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp),
+            shard(mesh, None),
+        )
+        return BuiltCell(step, (params_s, opt_s, hist, mask, target, negs), in_sh,
+                         _mind_flops(TRAIN_B) * 3, f"mind train: B={TRAIN_B}")
+
+    def serve_build_factory(b):
+        def build(mesh, policy):
+            def step(params, hist, mask):
+                return R.mind_interests(params, MIND, hist, mask)
+
+            params_s = _pad_big_tables(jax.eval_shape(lambda k: R.mind_init(k, MIND), jax.random.PRNGKey(0)))
+            hist, mask = _mind_inputs(b)
+            in_sh = (
+                _shard_params(params_s, mesh, policy),
+                shard(mesh, policy.dp, None),
+                shard(mesh, policy.dp, None),
+            )
+            return BuiltCell(step, (params_s, hist, mask), in_sh, _mind_flops(b), f"mind serve: B={b}")
+
+        return build
+
+    def retrieval_build(mesh, policy):
+        rows = _row_axes(mesh)
+
+        def step(params, hist, mask, candidates):
+            return R.mind_retrieval_score(params, MIND, hist, mask, candidates, TOPK)
+
+        params_s = _pad_big_tables(jax.eval_shape(lambda k: R.mind_init(k, MIND), jax.random.PRNGKey(0)))
+        hist, mask = _mind_inputs(1)
+        cands = jax.ShapeDtypeStruct((N_CAND, MIND.embed_dim), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            shard(mesh, None, None),
+            shard(mesh, None, None),
+            jax.sharding.NamedSharding(mesh, P(rows, None)),
+        )
+        return BuiltCell(step, (params_s, hist, mask, cands), in_sh,
+                         2.0 * MIND.n_interests * N_CAND * MIND.embed_dim,
+                         f"mind retrieval: 1×{N_CAND:,}")
+
+    return {
+        "train_batch": _recsys_cell("mind", "train_batch", "train", train_build),
+        "serve_p99": _recsys_cell("mind", "serve_p99", "serve", serve_build_factory(P99_B)),
+        "serve_bulk": _recsys_cell("mind", "serve_bulk", "serve", serve_build_factory(BULK_B)),
+        "retrieval_cand": _recsys_cell("mind", "retrieval_cand", "retrieval", retrieval_build),
+    }
+
+
+def _mind_flops(b):
+    routing = 2 * b * MIND.capsule_iters * MIND.n_interests * MIND.hist_len * MIND.embed_dim
+    bilinear = 2 * b * MIND.hist_len * MIND.embed_dim * MIND.embed_dim
+    return float(routing + bilinear)
+
+
+def _sasrec_cells() -> dict[str, CellSpec]:
+    def train_build(mesh, policy):
+        def step(params, opt_state, seq, pos, neg):
+            loss, grads = jax.value_and_grad(
+                lambda p: R.sasrec_loss(p, SASREC, seq, pos, neg)
+            )(params)
+            new_p, new_o, om = adamw_update(grads, opt_state, params, _OPT)
+            return new_p, new_o, {"loss": loss, **om}
+
+        params_s = jax.eval_shape(lambda k: R.sasrec_init(k, SASREC), jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, _OPT), params_s)
+        (seq,) = _sasrec_inputs(TRAIN_B)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            _shard_params(opt_s, mesh, policy),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp, None),
+            shard(mesh, policy.dp, None),
+        )
+        return BuiltCell(step, (params_s, opt_s, seq, seq, seq), in_sh,
+                         _sasrec_flops(TRAIN_B) * 3, f"sasrec train: B={TRAIN_B}")
+
+    def serve_build_factory(b):
+        def build(mesh, policy):
+            def step(params, seq):
+                return R.sasrec_hidden(params, SASREC, seq)
+
+            params_s = jax.eval_shape(lambda k: R.sasrec_init(k, SASREC), jax.random.PRNGKey(0))
+            (seq,) = _sasrec_inputs(b)
+            in_sh = (_shard_params(params_s, mesh, policy), shard(mesh, policy.dp, None))
+            return BuiltCell(step, (params_s, seq), in_sh, _sasrec_flops(b), f"sasrec serve: B={b}")
+
+        return build
+
+    def retrieval_build(mesh, policy):
+        rows = _row_axes(mesh)
+
+        def step(params, seq, candidates):
+            return R.sasrec_retrieval_score(params, SASREC, seq, candidates, TOPK)
+
+        params_s = jax.eval_shape(lambda k: R.sasrec_init(k, SASREC), jax.random.PRNGKey(0))
+        (seq,) = _sasrec_inputs(1)
+        cands = jax.ShapeDtypeStruct((N_CAND, SASREC.embed_dim), jnp.float32)
+        in_sh = (
+            _shard_params(params_s, mesh, policy),
+            shard(mesh, None, None),
+            jax.sharding.NamedSharding(mesh, P(rows, None)),
+        )
+        return BuiltCell(step, (params_s, seq, cands), in_sh, 2.0 * N_CAND * SASREC.embed_dim,
+                         f"sasrec retrieval: 1×{N_CAND:,}")
+
+    return {
+        "train_batch": _recsys_cell("sasrec", "train_batch", "train", train_build),
+        "serve_p99": _recsys_cell("sasrec", "serve_p99", "serve", serve_build_factory(P99_B)),
+        "serve_bulk": _recsys_cell("sasrec", "serve_bulk", "serve", serve_build_factory(BULK_B)),
+        "retrieval_cand": _recsys_cell("sasrec", "retrieval_cand", "retrieval", retrieval_build),
+    }
+
+
+def _sasrec_flops(b):
+    d, l = SASREC.embed_dim, SASREC.seq_len
+    attn = 2 * b * SASREC.n_blocks * (3 * l * d * d + 2 * l * l * d)
+    ffn = 2 * b * SASREC.n_blocks * 2 * l * d * d
+    return float(attn + ffn)
+
+
+# --------------------------------------------------------------------------- #
+# Smokes                                                                       #
+# --------------------------------------------------------------------------- #
+def _dlrm_smoke():
+    cfg = R.DLRMConfig(name="dlrm_smoke", vocab_sizes=(50, 30, 20), embed_dim=8,
+                       bot_mlp=(16, 8), top_mlp=(16, 1))
+    p = R.dlrm_init(jax.random.PRNGKey(0), cfg)
+    dense = jax.random.normal(jax.random.PRNGKey(1), (8, 13))
+    sparse = jnp.stack([jax.random.randint(jax.random.PRNGKey(i), (8,), 0, v)
+                        for i, v in enumerate(cfg.vocab_sizes)], axis=1)
+    loss = R.dlrm_loss(p, cfg, dense, sparse, jnp.ones((8,)))
+    logits = R.dlrm_forward(p, cfg, dense, sparse)
+    return {"loss": float(loss), "finite": bool(np.isfinite(np.asarray(logits)).all()),
+            "logits_shape": tuple(logits.shape)}
+
+
+def _deepfm_smoke():
+    cfg = R.DeepFMConfig(name="fm_smoke", n_sparse=6, embed_dim=4, vocab_per_field=100, mlp=(16,))
+    p = R.deepfm_init(jax.random.PRNGKey(0), cfg)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (8, 6), 0, 100)
+    logits = R.deepfm_forward(p, cfg, ids)
+    loss = R.deepfm_loss(p, cfg, ids, jnp.zeros((8,)))
+    return {"loss": float(loss), "finite": bool(np.isfinite(np.asarray(logits)).all()),
+            "logits_shape": tuple(logits.shape)}
+
+
+def _mind_smoke():
+    cfg = R.MINDConfig(name="mind_smoke", n_items=100, embed_dim=8, hist_len=6, n_negatives=16)
+    p = R.mind_init(jax.random.PRNGKey(0), cfg)
+    hist = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, 100)
+    mask = jnp.ones((4, 6))
+    caps = R.mind_interests(p, cfg, hist, mask)
+    loss = R.mind_loss(p, cfg, hist, mask, jnp.zeros((4,), jnp.int32),
+                       jnp.arange(16, dtype=jnp.int32))
+    return {"loss": float(loss), "finite": bool(np.isfinite(np.asarray(caps)).all()),
+            "caps_shape": tuple(caps.shape)}
+
+
+def _sasrec_smoke():
+    cfg = R.SASRecConfig(name="sas_smoke", n_items=50, embed_dim=8, n_blocks=1, seq_len=6)
+    p = R.sasrec_init(jax.random.PRNGKey(0), cfg)
+    seq = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 1, 50)
+    h = R.sasrec_hidden(p, cfg, seq)
+    loss = R.sasrec_loss(p, cfg, seq, seq, seq)
+    return {"loss": float(loss), "finite": bool(np.isfinite(np.asarray(h)).all()),
+            "hidden_shape": tuple(h.shape)}
+
+
+@register("dlrm-mlperf")
+def _dlrm_arch() -> Arch:
+    return Arch("dlrm-mlperf", "recsys", _dlrm_cells, _dlrm_smoke,
+                notes="MLPerf Criteo-1TB vocab (187.7M rows); row-sharded table")
+
+
+@register("deepfm")
+def _deepfm_arch() -> Arch:
+    return Arch("deepfm", "recsys", _deepfm_cells, _deepfm_smoke, notes="FM identity + deep MLP")
+
+
+@register("mind")
+def _mind_arch() -> Arch:
+    return Arch("mind", "recsys", _mind_cells, _mind_smoke, notes="B2I capsule routing, 4 interests")
+
+
+@register("sasrec")
+def _sasrec_arch() -> Arch:
+    return Arch("sasrec", "recsys", _sasrec_cells, _sasrec_smoke, notes="2-block causal self-attn")

@@ -1,0 +1,38 @@
+"""CA-RAG core: the paper's primary contribution — per-query utility routing.
+
+Public surface:
+  signals    — QuerySignals + heuristic complexity (Eq. §V.A)
+  bundles    — strategy bundle catalog (Table I)
+  utility    — Eq. 1 selection utility + realized utility
+  router     — argmax routing, ε-greedy, fixed baselines
+  telemetry  — Appendix-F CSV logging + EMA prior refinement
+  policies   — the paper's seven evaluation policies
+  guardrails — confidence fallback / context cap / cost ceiling (§VIII)
+"""
+
+from repro.core.bundles import Bundle, BundleCatalog, DEFAULT_CATALOG, GenerationSpec
+from repro.core.guardrails import GuardrailConfig, Guardrails
+from repro.core.policies import POLICIES, make_policy
+from repro.core.router import FixedRouter, Router, RouterConfig, RoutingDecision
+from repro.core.signals import QuerySignals, batch_complexity, complexity, extract_signals
+from repro.core.telemetry import QueryRecord, TelemetryStore
+from repro.core.utility import (
+    COST_SENSITIVE_WEIGHTS,
+    DEFAULT_WEIGHTS,
+    LATENCY_SENSITIVE_WEIGHTS,
+    RealizedNormalization,
+    UtilityWeights,
+    realized_utility,
+    selection_utilities,
+)
+
+__all__ = [
+    "Bundle", "BundleCatalog", "DEFAULT_CATALOG", "GenerationSpec",
+    "GuardrailConfig", "Guardrails", "POLICIES", "make_policy",
+    "FixedRouter", "Router", "RouterConfig", "RoutingDecision",
+    "QuerySignals", "batch_complexity", "complexity", "extract_signals",
+    "QueryRecord", "TelemetryStore",
+    "COST_SENSITIVE_WEIGHTS", "DEFAULT_WEIGHTS", "LATENCY_SENSITIVE_WEIGHTS",
+    "RealizedNormalization", "UtilityWeights", "realized_utility",
+    "selection_utilities",
+]

@@ -1,0 +1,152 @@
+"""Strategy bundle catalog (paper §V.B, Table I).
+
+A *bundle* couples a retrieval depth (top-k, possibly zero = retrieval-free)
+with a fixed generation profile and the priors the router's utility function
+consumes: expected quality, expected latency, and expected total billed
+tokens ("context token usage", §V.B).
+
+The four paper bundles::
+
+    bundle      k   skip  qual.prior  lat.prior(ms)
+    direct_llm  0   yes   0.52        8
+    light_rag   3   no    0.66        45
+    medium_rag  5   no    0.74        60
+    heavy_rag   10  no    0.82        95
+
+All bundles share the paper's generation spec ``paper_gen``: 256 max output
+tokens, temperature 0.
+
+The catalog converts to a dict of jnp arrays (:meth:`BundleCatalog.as_arrays`)
+so utility evaluation and routing vectorize over (queries × bundles) on
+device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Mapping, Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationSpec:
+    """Fixed generation profile shared by all paper bundles (§V.B)."""
+
+    max_output_tokens: int = 256
+    temperature: float = 0.0
+    name: str = "paper_gen"
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    """One retrieval+generation strategy bundle.
+
+    ``depth_affinity`` ∈ [-1, 1] positions the bundle on the shallow↔deep
+    axis; the quality-prior modulation (utility.py) uses it so that complex
+    queries favour deep bundles. It is a derived, catalog-relative quantity —
+    ``BundleCatalog`` recomputes it from rank when not supplied.
+    """
+
+    name: str
+    top_k: int
+    skip_retrieval: bool
+    quality_prior: float
+    latency_prior_ms: float
+    cost_prior_tokens: float
+    generation: GenerationSpec = GenerationSpec()
+    depth_affinity: float = 0.0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.skip_retrieval and self.top_k != 0:
+            raise ValueError(f"skip_retrieval bundles must have top_k=0 ({self.name})")
+        if not self.skip_retrieval and self.top_k == 0:
+            raise ValueError(f"retrieval bundles must have top_k>0 ({self.name})")
+        if not (0.0 <= self.quality_prior <= 1.0):
+            raise ValueError(f"quality_prior must be in [0,1] ({self.name})")
+
+
+def _paper_bundles() -> tuple[Bundle, ...]:
+    """Table I, verbatim, plus cost priors.
+
+    Table I does not print token priors; §V.B says priors "encode expected
+    quality, latency, and context token usage". Cost priors below are the
+    expected *billed* tokens per bundle (prompt + completion + query
+    embedding) for the paper's benchmark regime and are consistent with the
+    per-strategy means in Table VI.
+    """
+    gen = GenerationSpec()
+    return (
+        Bundle("direct_llm", 0, True, 0.52, 8.0, 190.0, gen, -1.0),
+        Bundle("light_rag", 3, False, 0.66, 45.0, 215.0, gen, -0.45),
+        Bundle("medium_rag", 5, False, 0.74, 60.0, 275.0, gen, 1.0 / 3.0),
+        Bundle("heavy_rag", 10, False, 0.82, 95.0, 360.0, gen, 1.0),
+    )
+
+
+class BundleCatalog:
+    """An ordered, immutable catalog of bundles with array views.
+
+    The catalog is the unit the router maximizes over (paper §III:
+    ``b* = argmax_{b in B} U_b(q)``). Bundle order is significant — array
+    columns, CSV strategy indices and telemetry slots all follow it.
+    """
+
+    def __init__(self, bundles: Sequence[Bundle] | None = None):
+        bundles = tuple(bundles) if bundles is not None else _paper_bundles()
+        if len(bundles) == 0:
+            raise ValueError("catalog must contain at least one bundle")
+        names = [b.name for b in bundles]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate bundle names: {names}")
+        self._bundles = bundles
+        self._index = {b.name: i for i, b in enumerate(bundles)}
+
+    # -- container protocol -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._bundles)
+
+    def __iter__(self) -> Iterator[Bundle]:
+        return iter(self._bundles)
+
+    def __getitem__(self, key: int | str) -> Bundle:
+        if isinstance(key, str):
+            return self._bundles[self._index[key]]
+        return self._bundles[key]
+
+    def index_of(self, name: str) -> int:
+        return self._index[name]
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(b.name for b in self._bundles)
+
+    # -- array views ---------------------------------------------------------
+    def as_arrays(self) -> Mapping[str, jnp.ndarray]:
+        """Catalog priors as a dict of f32 arrays, shape ``(n_bundles,)``.
+
+        Keys: quality_prior, latency_prior_ms, cost_prior_tokens, top_k,
+        skip_retrieval, depth_affinity.
+        """
+        b = self._bundles
+        return {
+            "quality_prior": jnp.array([x.quality_prior for x in b], jnp.float32),
+            "latency_prior_ms": jnp.array([x.latency_prior_ms for x in b], jnp.float32),
+            "cost_prior_tokens": jnp.array([x.cost_prior_tokens for x in b], jnp.float32),
+            "top_k": jnp.array([x.top_k for x in b], jnp.int32),
+            "skip_retrieval": jnp.array([x.skip_retrieval for x in b], jnp.bool_),
+            "depth_affinity": jnp.array([x.depth_affinity for x in b], jnp.float32),
+        }
+
+    def with_bundle(self, bundle: Bundle) -> "BundleCatalog":
+        """Extended catalog — the §VIII.F scalability pathway (new bundles
+        compose without touching the routing API)."""
+        return BundleCatalog(self._bundles + (bundle,))
+
+    def __repr__(self) -> str:
+        return f"BundleCatalog({', '.join(self.names)})"
+
+
+DEFAULT_CATALOG = BundleCatalog()

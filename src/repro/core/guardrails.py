@@ -1,0 +1,81 @@
+"""Operational guardrails (paper §VII.C, §VIII.B, §VIII.E).
+
+The paper motivates three guardrails from its failure-mode analysis:
+
+* **Low-confidence fallback** (§VII.C): when retrieval confidence is below a
+  threshold the corpus likely lacks coverage — "low retrieval confidence
+  could trigger a fallback to direct_llm rather than generating a
+  poorly-grounded answer from low-quality context".
+* **Max-context-token guardrail** (§VIII.B): cap injected context tokens so
+  no query incurs a catastrophic cost overrun.
+* **Cost ceiling** (§VIII.D adjacent): hard per-query billed-token budget —
+  demote to the deepest bundle whose cost prior fits.
+
+These post-process routing decisions / retrieval outputs; they never modify
+the utility function itself, keeping the routing math auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bundles import BundleCatalog
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailConfig:
+    min_retrieval_confidence: float = 0.0  # 0 disables the fallback
+    max_context_tokens: int | None = None
+    max_cost_tokens: int | None = None
+    fallback_bundle: str = "direct_llm"
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailOutcome:
+    bundle_index: int
+    demoted: bool
+    reason: str | None
+
+
+class Guardrails:
+    def __init__(self, catalog: BundleCatalog, config: GuardrailConfig = GuardrailConfig()):
+        self.catalog = catalog
+        self.config = config
+        self._fallback_idx = catalog.index_of(config.fallback_bundle)
+
+    def pre_execution(self, bundle_index: int) -> GuardrailOutcome:
+        """Cost-ceiling demotion before any tokens are spent."""
+        cfg = self.config
+        if cfg.max_cost_tokens is not None:
+            b = self.catalog[bundle_index]
+            if b.cost_prior_tokens > cfg.max_cost_tokens:
+                # Demote to the deepest bundle whose cost prior fits.
+                best, best_k = None, -1
+                for i, cand in enumerate(self.catalog):
+                    if cand.cost_prior_tokens <= cfg.max_cost_tokens and cand.top_k > best_k:
+                        best, best_k = i, cand.top_k
+                if best is None:
+                    best = self._fallback_idx
+                if best != bundle_index:
+                    return GuardrailOutcome(best, True, "cost_ceiling")
+        return GuardrailOutcome(bundle_index, False, None)
+
+    def post_retrieval(
+        self, bundle_index: int, retrieval_confidence: float
+    ) -> GuardrailOutcome:
+        """Low-confidence fallback after retrieval, before generation."""
+        cfg = self.config
+        b = self.catalog[bundle_index]
+        if (
+            not b.skip_retrieval
+            and cfg.min_retrieval_confidence > 0.0
+            and retrieval_confidence < cfg.min_retrieval_confidence
+        ):
+            return GuardrailOutcome(self._fallback_idx, True, "low_retrieval_confidence")
+        return GuardrailOutcome(bundle_index, False, None)
+
+    def clamp_context(self, context_token_count: int) -> int:
+        """Max-context guardrail: how many context tokens may be injected."""
+        if self.config.max_context_tokens is None:
+            return context_token_count
+        return min(context_token_count, self.config.max_context_tokens)

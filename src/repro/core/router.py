@@ -1,0 +1,231 @@
+"""Per-query bundle selection (paper §IV, Appendix A).
+
+The router consumes query signals and a bundle catalog and emits a
+retrieval–generation specification per query: ``b* = argmax_b U_b(q)``,
+optionally ε-greedy (Appendix A step 3; the paper's benchmark disables
+exploration, §II.D).
+
+Two call paths:
+
+* :meth:`Router.route_batch_arrays` — the device path. Pure jnp over a
+  complexity vector; jit-compatible; used inside the serving engine so whole
+  request batches route on-device with no host round-trip.
+* :meth:`Router.route` — the host path. Takes strings, extracts signals,
+  returns :class:`RoutingDecision` records with full per-bundle utility
+  breakdowns for auditability (paper §IV: "routing decisions auditable and
+  reproducible at the query level").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bundles import Bundle, BundleCatalog, DEFAULT_CATALOG
+from repro.core.signals import (
+    DEFAULT_ALPHA,
+    DEFAULT_BETA,
+    DEFAULT_K_MAX,
+    DEFAULT_L_MAX,
+    batch_complexity,
+    extract_signal_matrix,
+)
+from repro.core.utility import (
+    DEFAULT_C0,
+    DEFAULT_C1,
+    DEFAULT_DELTA,
+    DEFAULT_GAMMA,
+    DEFAULT_GLOBAL_DECAY,
+    DEFAULT_WEIGHTS,
+    UtilityWeights,
+    selection_utilities,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingDecision:
+    """Auditable per-query routing record (paper §IV.A)."""
+
+    query: str
+    bundle: Bundle
+    bundle_index: int
+    complexity: float
+    utilities: Mapping[str, float]  # bundle name → U_b
+    explored: bool = False
+
+    @property
+    def selection_utility(self) -> float:
+        return self.utilities[self.bundle.name]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """All scalar knobs of the routing layer in one place."""
+
+    weights: UtilityWeights = DEFAULT_WEIGHTS
+    gamma: float = DEFAULT_GAMMA
+    c0: float = DEFAULT_C0
+    delta: float = DEFAULT_DELTA
+    c1: float = DEFAULT_C1
+    global_decay: float = DEFAULT_GLOBAL_DECAY
+    alpha: float = DEFAULT_ALPHA
+    beta: float = DEFAULT_BETA
+    l_max: float = DEFAULT_L_MAX
+    k_max: float = DEFAULT_K_MAX
+    epsilon: float = 0.0  # exploration; 0 in the paper's benchmark
+
+
+class Router:
+    """Discrete utility-maximizing router over a bundle catalog."""
+
+    def __init__(
+        self,
+        catalog: BundleCatalog = DEFAULT_CATALOG,
+        config: RouterConfig = RouterConfig(),
+    ):
+        self.catalog = catalog
+        self.config = config
+        self._arrays = catalog.as_arrays()
+
+    # ------------------------------------------------------------------ #
+    # Device path                                                         #
+    # ------------------------------------------------------------------ #
+    def utilities_from_complexity(
+        self,
+        complexity: jnp.ndarray,
+        *,
+        latency_override: jnp.ndarray | None = None,
+        cost_override: jnp.ndarray | None = None,
+    ) -> jnp.ndarray:
+        """Eq. 1 utilities ``(N, B)`` from a complexity vector ``(N,)``."""
+        return selection_utilities(
+            self._arrays,
+            complexity,
+            weights=self.config.weights,
+            gamma=self.config.gamma,
+            c0=self.config.c0,
+            delta=self.config.delta,
+            c1=self.config.c1,
+            global_decay=self.config.global_decay,
+            latency_override=latency_override,
+            cost_override=cost_override,
+        )
+
+    def route_batch_arrays(
+        self,
+        complexity: jnp.ndarray,
+        *,
+        key: jax.Array | None = None,
+        latency_override: jnp.ndarray | None = None,
+        cost_override: jnp.ndarray | None = None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Route a complexity batch → (bundle_idx ``(N,)`` i32, U ``(N,B)``).
+
+        jit-compatible. With ``key`` and ``config.epsilon > 0``, applies
+        ε-greedy exploration: with prob ε a uniform random bundle replaces
+        the argmax (Appendix A step 3).
+        """
+        utilities = self.utilities_from_complexity(
+            complexity,
+            latency_override=latency_override,
+            cost_override=cost_override,
+        )
+        choice = jnp.argmax(utilities, axis=-1).astype(jnp.int32)
+        eps = self.config.epsilon
+        if eps > 0.0:
+            if key is None:
+                raise ValueError("epsilon > 0 requires a PRNG key")
+            k_explore, k_pick = jax.random.split(key)
+            n, b = utilities.shape
+            explore = jax.random.uniform(k_explore, (n,)) < eps
+            random_pick = jax.random.randint(k_pick, (n,), 0, b, dtype=jnp.int32)
+            choice = jnp.where(explore, random_pick, choice)
+        return choice, utilities
+
+    # ------------------------------------------------------------------ #
+    # Host path                                                           #
+    # ------------------------------------------------------------------ #
+    def route(
+        self,
+        queries: Sequence[str] | str,
+        *,
+        key: jax.Array | None = None,
+        latency_override: np.ndarray | None = None,
+        cost_override: np.ndarray | None = None,
+    ) -> list[RoutingDecision]:
+        """Route query strings; returns full audit records."""
+        single = isinstance(queries, str)
+        qs: Sequence[str] = [queries] if single else list(queries)
+        sig = extract_signal_matrix(qs)
+        cplx = batch_complexity(
+            sig,
+            alpha=self.config.alpha,
+            beta=self.config.beta,
+            l_max=self.config.l_max,
+            k_max=self.config.k_max,
+        )
+        idx, utilities = self.route_batch_arrays(
+            cplx,
+            key=key,
+            latency_override=latency_override,
+            cost_override=cost_override,
+        )
+        idx_np = np.asarray(idx)
+        util_np = np.asarray(utilities)
+        cplx_np = np.asarray(cplx)
+        greedy = np.asarray(jnp.argmax(utilities, axis=-1))
+        decisions = []
+        for i, q in enumerate(qs):
+            b_i = int(idx_np[i])
+            decisions.append(
+                RoutingDecision(
+                    query=q,
+                    bundle=self.catalog[b_i],
+                    bundle_index=b_i,
+                    complexity=float(cplx_np[i]),
+                    utilities={
+                        name: float(util_np[i, j]) for j, name in enumerate(self.catalog.names)
+                    },
+                    explored=bool(b_i != int(greedy[i])),
+                )
+            )
+        return decisions
+
+    def complexity_of(self, query: str) -> float:
+        sig = extract_signal_matrix([query])
+        return float(
+            batch_complexity(
+                sig,
+                alpha=self.config.alpha,
+                beta=self.config.beta,
+                l_max=self.config.l_max,
+                k_max=self.config.k_max,
+            )[0]
+        )
+
+
+class FixedRouter(Router):
+    """Degenerate router: always selects one bundle (the paper's fixed-*
+    baselines, §VI.C). Utilities are still computed for telemetry parity."""
+
+    def __init__(
+        self,
+        bundle_name: str,
+        catalog: BundleCatalog = DEFAULT_CATALOG,
+        config: RouterConfig = RouterConfig(),
+    ):
+        super().__init__(catalog, config)
+        self.fixed_index = catalog.index_of(bundle_name)
+
+    def route_batch_arrays(self, complexity, *, key=None, latency_override=None, cost_override=None):
+        utilities = self.utilities_from_complexity(
+            complexity,
+            latency_override=latency_override,
+            cost_override=cost_override,
+        )
+        n = utilities.shape[0]
+        return jnp.full((n,), self.fixed_index, dtype=jnp.int32), utilities

@@ -1,0 +1,116 @@
+"""Query signals and heuristic complexity (paper §V.A).
+
+Two layers:
+
+* ``extract_signals`` — pure-Python string processing producing numeric
+  :class:`QuerySignals` (character length, word count, interrogative cue
+  count). Strings cannot be jitted, so this runs on host; it is O(len(q))
+  and deterministic.
+* ``complexity_from_signals`` / ``batch_complexity`` — pure ``jnp`` and fully
+  vectorized, so whole query batches are scored on-device inside the routing
+  step.
+
+The paper's formula (§V.A)::
+
+    c(q) = clip(alpha * wordlen(q)/L_max + beta * cues(q)/K_max, 0, 1)
+
+with alpha=0.6, beta=0.4, L_max=20, K_max=3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Interrogative / imperative cue words (paper: "interrogative cue-word
+# counts"). Includes the imperative analysis verbs that appear in the
+# benchmark query set (Appendix D).
+CUE_WORDS: frozenset[str] = frozenset(
+    {
+        "what",
+        "why",
+        "how",
+        "when",
+        "where",
+        "which",
+        "who",
+        "whom",
+        "whose",
+        "explain",
+        "describe",
+        "compare",
+        "contrast",
+        "list",
+        "define",
+        "derive",
+    }
+)
+
+DEFAULT_ALPHA = 0.6
+DEFAULT_BETA = 0.4
+DEFAULT_L_MAX = 20.0
+DEFAULT_K_MAX = 3.0
+
+_WORD_RE = re.compile(r"[A-Za-z0-9']+")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySignals:
+    """Numeric per-query signals (paper §IV.A step 1)."""
+
+    char_len: int
+    word_count: int
+    cue_count: int
+
+    def as_row(self) -> np.ndarray:
+        return np.array([self.char_len, self.word_count, self.cue_count], dtype=np.float32)
+
+
+def extract_signals(query: str) -> QuerySignals:
+    """Host-side signal extraction for a single query string."""
+    words = _WORD_RE.findall(query.lower())
+    cues = sum(1 for w in words if w in CUE_WORDS)
+    return QuerySignals(char_len=len(query), word_count=len(words), cue_count=cues)
+
+
+def extract_signal_matrix(queries: Sequence[str]) -> np.ndarray:
+    """Stack signals for a batch of queries into a float32 ``(n, 3)`` matrix.
+
+    Column order: char_len, word_count, cue_count — the layout consumed by
+    :func:`batch_complexity`.
+    """
+    if len(queries) == 0:
+        return np.zeros((0, 3), dtype=np.float32)
+    return np.stack([extract_signals(q).as_row() for q in queries])
+
+
+def complexity_from_signals(
+    word_count,
+    cue_count,
+    *,
+    alpha: float = DEFAULT_ALPHA,
+    beta: float = DEFAULT_BETA,
+    l_max: float = DEFAULT_L_MAX,
+    k_max: float = DEFAULT_K_MAX,
+):
+    """Paper Eq. (§V.A): heuristic complexity in [0, 1]. jnp, vectorized."""
+    word_count = jnp.asarray(word_count, dtype=jnp.float32)
+    cue_count = jnp.asarray(cue_count, dtype=jnp.float32)
+    raw = alpha * word_count / l_max + beta * cue_count / k_max
+    return jnp.clip(raw, 0.0, 1.0)
+
+
+def batch_complexity(signal_matrix, **kwargs):
+    """Complexity for an ``(n, 3)`` signal matrix (see extract_signal_matrix)."""
+    sig = jnp.asarray(signal_matrix, dtype=jnp.float32)
+    return complexity_from_signals(sig[:, 1], sig[:, 2], **kwargs)
+
+
+def complexity(query: str, **kwargs) -> float:
+    """Convenience scalar path: string → c(q)."""
+    s = extract_signals(query)
+    return float(complexity_from_signals(s.word_count, s.cue_count, **kwargs))

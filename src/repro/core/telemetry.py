@@ -1,0 +1,324 @@
+"""Telemetry store and prior refinement (paper §IV.A step 6, §V.C, App. F).
+
+Responsibilities:
+
+* Log per-query execution records in the paper's CSV schema (Appendix F) —
+  every figure/table benchmark in ``benchmarks/`` reads *only* these
+  artifacts, mirroring the paper's "all results generated directly from
+  logged CSV artifacts".
+* Maintain per-bundle EMA estimates of observed latency and billed tokens.
+  These feed back into utility estimation (§IV.A step 2: "using priors and
+  optional telemetry"; corpus line 12: "Telemetry can refine latency and
+  quality estimates per bundle after sufficient query volume").
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import json
+import os
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
+
+# Appendix F schema, in order.
+CSV_FIELDS: tuple[str, ...] = (
+    "query",
+    "strategy",
+    "bundle",
+    "utility",
+    "quality_proxy",
+    "realized_utility",
+    "latency",
+    "prompt_tokens",
+    "completion_tokens",
+    "embedding_tokens",
+    "retrieval_confidence",
+    "complexity_score",
+    "index_embedding_tokens",
+)
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    """One executed query — the Appendix F row."""
+
+    query: str
+    strategy: str
+    bundle: str
+    utility: float
+    quality_proxy: float
+    realized_utility: float
+    latency: float  # ms, end-to-end
+    prompt_tokens: int
+    completion_tokens: int
+    embedding_tokens: int
+    retrieval_confidence: float  # max cosine sim; NaN when retrieval skipped
+    complexity_score: float
+    index_embedding_tokens: int = 0  # offline bookkeeping (Eq. 2 note)
+
+    @property
+    def total_billed_tokens(self) -> int:
+        """Eq. 2: τ_billed = τ_prompt + τ_completion + τ_embed."""
+        return self.prompt_tokens + self.completion_tokens + self.embedding_tokens
+
+    def as_csv_row(self) -> dict:
+        d = dataclasses.asdict(self)
+        return {k: d[k] for k in CSV_FIELDS}
+
+
+@dataclasses.dataclass
+class BundleStats:
+    """Streaming per-bundle statistics with EMA refinement."""
+
+    count: int = 0
+    ema_latency_ms: float = float("nan")
+    ema_cost_tokens: float = float("nan")
+    ema_quality: float = float("nan")
+    sum_latency: float = 0.0
+    sum_cost: float = 0.0
+    sum_quality: float = 0.0
+
+    def update(self, latency_ms: float, cost_tokens: float, quality: float, ema_beta: float):
+        if self.count == 0:
+            self.ema_latency_ms = latency_ms
+            self.ema_cost_tokens = cost_tokens
+            self.ema_quality = quality
+        else:
+            b = ema_beta
+            self.ema_latency_ms = b * self.ema_latency_ms + (1 - b) * latency_ms
+            self.ema_cost_tokens = b * self.ema_cost_tokens + (1 - b) * cost_tokens
+            self.ema_quality = b * self.ema_quality + (1 - b) * quality
+        self.count += 1
+        self.sum_latency += latency_ms
+        self.sum_cost += cost_tokens
+        self.sum_quality += quality
+
+
+class TelemetryStore:
+    """Accumulates QueryRecords; provides refined priors + CSV/JSON export.
+
+    ``min_volume`` gates refinement ("after sufficient query volume"): until a
+    bundle has that many observations, its static prior is used. ``blend``
+    mixes prior and EMA so refinement is gradual and auditable.
+    """
+
+    def __init__(
+        self,
+        catalog: BundleCatalog = DEFAULT_CATALOG,
+        *,
+        ema_beta: float = 0.7,
+        min_volume: int = 1,
+        blend: float = 0.5,
+        refine_latency: bool = True,
+        refine_cost: bool = True,
+        structural_latency: np.ndarray | None = None,
+        structural_cost: np.ndarray | None = None,
+    ):
+        self.catalog = catalog
+        self.ema_beta = ema_beta
+        self.min_volume = min_volume
+        self.blend = blend
+        self.refine_latency = refine_latency
+        self.refine_cost = refine_cost
+        # Per-bundle end-to-end predictions from the serving system's own
+        # latency/billing models (observed units). Used as the estimate for
+        # bundles telemetry hasn't sampled yet, and as the blend anchor.
+        self.structural_latency = structural_latency
+        self.structural_cost = structural_cost
+        self.records: list[QueryRecord] = []
+        self.stats: dict[str, BundleStats] = {name: BundleStats() for name in catalog.names}
+
+    # -- ingestion ----------------------------------------------------------
+    def log(self, record: QueryRecord) -> None:
+        self.records.append(record)
+        if record.strategy in self.stats:
+            self.stats[record.strategy].update(
+                record.latency,
+                float(record.total_billed_tokens),
+                record.quality_proxy,
+                self.ema_beta,
+            )
+
+    def extend(self, records: Iterable[QueryRecord]) -> None:
+        for r in records:
+            self.log(r)
+
+    # -- refined priors -------------------------------------------------------
+    @property
+    def refinement_active(self) -> bool:
+        """True once >= 2 bundles have reached min_volume."""
+        ready = sum(
+            1 for st in self.stats.values()
+            if st.count >= self.min_volume and np.isfinite(st.ema_latency_ms)
+        )
+        return ready >= 2
+
+    def refined_latency_priors(self) -> np.ndarray:
+        """Per-bundle latency estimates for Eq. 1 (consistent units)."""
+        priors = np.array(
+            [self.catalog[n].latency_prior_ms for n in self.catalog.names], np.float64
+        )
+        if not self.refine_latency:
+            return priors
+        return self._refine(priors, attr="ema_latency_ms", structural=self.structural_latency)
+
+    def refined_cost_priors(self) -> np.ndarray:
+        priors = np.array(
+            [self.catalog[n].cost_prior_tokens for n in self.catalog.names], np.float64
+        )
+        if not self.refine_cost:
+            return priors
+        return self._refine(priors, attr="ema_cost_tokens", structural=self.structural_cost)
+
+    def _refine(self, priors: np.ndarray, attr: str, structural: np.ndarray | None) -> np.ndarray:
+        """Refinement in *observed* units (paper §IV.A step 2: "priors and
+        optional telemetry").
+
+        Selection priors (Table I) are naive model-scale estimates; observed
+        EMAs are end-to-end. Eq. 1 normalizes across the catalog, so the
+        refined vector only needs internally consistent units. Until >= 2
+        bundles reach ``min_volume`` the static priors are used unchanged
+        ("after sufficient query volume"). Afterwards, per bundle:
+
+        * observed → its EMA;
+        * unobserved, when the serving system supplied ``structural``
+          end-to-end predictions (from its own latency/billing models) →
+          the prediction;
+        * unobserved otherwise → a linear fit of EMA vs. top_k over the
+          observed retrieval bundles (>= 2 needed), else the prior mapped
+          rank-preservingly onto the observed range;
+        * then blend with the structural anchor (or mapped prior) by
+          ``blend`` — 0 trusts observations fully.
+        """
+        names = self.catalog.names
+        emas = np.array([getattr(self.stats[n], attr) for n in names], np.float64)
+        counts = np.array([self.stats[n].count for n in names])
+        top_k = np.array([self.catalog[n].top_k for n in names], np.float64)
+        is_retrieval = np.array([not self.catalog[n].skip_retrieval for n in names])
+        ready = (counts >= self.min_volume) & np.isfinite(emas)
+        if ready.sum() < 2:
+            return priors
+        e_lo, e_hi = emas[ready].min(), emas[ready].max()
+        p_lo, p_hi = priors.min(), priors.max()
+        if p_hi - p_lo < 1e-9:
+            return priors
+        span = max(e_hi - e_lo, 1e-9)
+        # full-catalog priors mapped into observed units (rank-preserving)
+        p_scaled = e_lo + (priors - p_lo) / (p_hi - p_lo) * span
+        anchor = np.asarray(structural, np.float64) if structural is not None else p_scaled
+
+        estimate = np.where(ready, emas, anchor)
+        if structural is None:
+            fit_mask = ready & is_retrieval
+            if fit_mask.sum() >= 2:
+                b, a = np.polyfit(top_k[fit_mask], emas[fit_mask], 1)
+                estimate = np.where((~ready) & is_retrieval, a + b * top_k, estimate)
+        return self.blend * anchor + (1 - self.blend) * estimate
+
+    # -- summaries ------------------------------------------------------------
+    def strategy_counts(self) -> dict[str, int]:
+        counts = {name: 0 for name in self.catalog.names}
+        for r in self.records:
+            counts[r.strategy] = counts.get(r.strategy, 0) + 1
+        return counts
+
+    def mean(self, field: str) -> float:
+        if not self.records:
+            return float("nan")
+        if field == "cost":
+            return float(np.mean([r.total_billed_tokens for r in self.records]))
+        return float(np.mean([getattr(r, field) for r in self.records]))
+
+    def per_strategy_means(self) -> dict[str, dict[str, float]]:
+        """Table VI: per-strategy mean ± std of cost / latency / utility."""
+        out: dict[str, dict[str, float]] = {}
+        for name in self.catalog.names:
+            rows = [r for r in self.records if r.strategy == name]
+            if not rows:
+                continue
+            costs = np.array([r.total_billed_tokens for r in rows], np.float64)
+            lats = np.array([r.latency for r in rows], np.float64)
+            utils = np.array([r.utility for r in rows], np.float64)
+            quals = np.array([r.quality_proxy for r in rows], np.float64)
+            out[name] = {
+                "n": float(len(rows)),
+                "mean_cost": float(costs.mean()),
+                "std_cost": float(costs.std()),
+                "mean_latency": float(lats.mean()),
+                "std_latency": float(lats.std()),
+                "mean_utility": float(utils.mean()),
+                "std_utility": float(utils.std()),
+                "mean_quality": float(quals.mean()),
+            }
+        return out
+
+    def correlation_matrix(self) -> tuple[np.ndarray, list[str]]:
+        """Table VII: Pearson correlations among cost/latency/U/complexity."""
+        if len(self.records) < 2:
+            raise ValueError("need >= 2 records for correlations")
+        cols = {
+            "cost": [r.total_billed_tokens for r in self.records],
+            "lat.": [r.latency for r in self.records],
+            "U": [r.utility for r in self.records],
+            "cplx.": [r.complexity_score for r in self.records],
+        }
+        mat = np.corrcoef(np.array(list(cols.values()), np.float64))
+        return mat, list(cols.keys())
+
+    # -- export ---------------------------------------------------------------
+    def to_csv(self, path: str | None = None) -> str:
+        buf = io.StringIO()
+        writer = csv.DictWriter(buf, fieldnames=list(CSV_FIELDS))
+        writer.writeheader()
+        for r in self.records:
+            writer.writerow(r.as_csv_row())
+        text = buf.getvalue()
+        if path is not None:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)  # atomic publish
+        return text
+
+    @staticmethod
+    def read_csv(path: str) -> list[QueryRecord]:
+        records = []
+        with open(path) as f:
+            for row in csv.DictReader(f):
+                records.append(
+                    QueryRecord(
+                        query=row["query"],
+                        strategy=row["strategy"],
+                        bundle=row["bundle"],
+                        utility=float(row["utility"]),
+                        quality_proxy=float(row["quality_proxy"]),
+                        realized_utility=float(row["realized_utility"]),
+                        latency=float(row["latency"]),
+                        prompt_tokens=int(row["prompt_tokens"]),
+                        completion_tokens=int(row["completion_tokens"]),
+                        embedding_tokens=int(row["embedding_tokens"]),
+                        retrieval_confidence=float(row["retrieval_confidence"]),
+                        complexity_score=float(row["complexity_score"]),
+                        index_embedding_tokens=int(row.get("index_embedding_tokens", 0) or 0),
+                    )
+                )
+        return records
+
+    def summary_json(self) -> str:
+        return json.dumps(
+            {
+                "n_queries": len(self.records),
+                "strategy_counts": self.strategy_counts(),
+                "mean_cost": self.mean("cost"),
+                "mean_latency": self.mean("latency"),
+                "mean_quality": self.mean("quality_proxy"),
+                "mean_utility": self.mean("utility"),
+            },
+            indent=2,
+        )

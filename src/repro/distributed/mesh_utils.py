@@ -1,0 +1,27 @@
+"""Mesh construction helpers shared by launch/ and tests.
+
+``jax.make_mesh`` defaults will flip axis_types to Explicit in jax 0.9; we
+pin Auto explicitly so pjit/shard_map semantics stay stable across versions.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec(*spec))
+
+
+def mesh_device_count(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files (see EXAMPLE.md):
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (backend dispatch, layout glue)
+  ref.py    — pure-jnp oracle used by tests (interpret=True on CPU)
+
+Kernels: flash_attention (prefill), decode_attention (flash-decoding),
+mips_topk (fused retrieval scoring+selection), embedding_bag (recsys
+gather-reduce).
+"""

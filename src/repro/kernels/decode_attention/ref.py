@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the decode-attention (flash-decoding) kernel.
+
+Layout: q (B, H, dh) — one new token per sequence; cache k/v (B, S, Hk, dh);
+lengths (B,) valid KV prefix per sequence. GQA via H = Hk * G.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, H, dh)
+    k: jnp.ndarray,  # (B, S, Hk, dh)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    _, s, hk, _ = k.shape
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, hk, g, dh).astype(jnp.float32)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg * scale, k.astype(jnp.float32)
+    )  # (B, Hk, G, S)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""jit'd wrapper for the EmbeddingBag kernel.
+
+Handles the kernel's preconditions: sorts lookups by bag (stable), runs the
+kernel, and zeroes bags that received no lookups (their output blocks are
+never visited by the kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "use_pallas", "interpret", "assume_sorted"))
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    n_bags: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    assume_sorted: bool = False,
+) -> jnp.ndarray:
+    """Sum-mode EmbeddingBag: (V, D) table, flat (indices, segment_ids) → (n_bags, D)."""
+    use_pallas = (jax.default_backend() == "tpu") if use_pallas is None else use_pallas
+    if not use_pallas:
+        return embedding_bag_ref(table, indices, segment_ids, n_bags)
+    if not assume_sorted:
+        order = jnp.argsort(segment_ids, stable=True)
+        indices = indices[order]
+        segment_ids = segment_ids[order]
+    out = embedding_bag_pallas(table, indices, segment_ids, n_bags, interpret=interpret)
+    # zero never-visited bags
+    visited = jnp.zeros((n_bags,), jnp.bool_).at[segment_ids].set(True)
+    return jnp.where(visited[:, None], out, 0.0)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the embedding-bag kernel (= models.recsys.embedding_bag)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (n_lookups,) int32
+    segment_ids: jnp.ndarray,  # (n_lookups,) int32 → bag
+    n_bags: int,
+    *,
+    mode: str = "sum",
+) -> jnp.ndarray:
+    rows = table[indices]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, rows.dtype), segment_ids, num_segments=n_bags
+        )
+        return s / jnp.maximum(c, 1.0)[:, None]
+    raise ValueError(f"unsupported mode {mode!r}")

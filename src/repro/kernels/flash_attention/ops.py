@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``flash_attention(q, k, v)`` takes the model-layout tensors
+(B, S, H, dh)/(B, S, Hk, dh) (see models/layers.py), transposes to the
+kernel's (B, H, S, dh) layout, pads sequence to block multiples, and
+dispatches to the Pallas kernel (TPU) or the jnp oracle (other backends).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "use_pallas", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, dh) — model layout
+    k: jnp.ndarray,  # (B, S, Hk, dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    qt = jnp.swapaxes(q, 1, 2)  # (B, H, S, dh)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if not use_pallas:
+        out = attention_ref(qt, kt, vt, causal=causal)
+    else:
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+        )
+    return jnp.swapaxes(out, 1, 2)

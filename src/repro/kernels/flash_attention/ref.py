@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout contract (matches kernel.py): q (B, H, Sq, dh); k, v (B, Hk, Skv, dh)
+with H = Hk * G. Causal masking aligns the *ends* of q and kv (standard
+prefill: q_pos = i + Skv - Sq).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, sq, dh = q.shape
+    _, hk, skv, _ = k.shape
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, hk, g, sq, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg * scale, k.astype(jnp.float32))
+    if causal:
+        q_pos = jnp.arange(sq) + (skv - sq)
+        kv_pos = jnp.arange(skv)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, dh).astype(q.dtype)

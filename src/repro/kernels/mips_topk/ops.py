@@ -1,0 +1,33 @@
+"""jit'd wrapper for fused MIPS top-k retrieval scoring."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mips_topk.kernel import mips_topk_pallas
+from repro.kernels.mips_topk.ref import mips_topk_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_n", "use_pallas", "interpret")
+)
+def mips_topk(
+    queries: jnp.ndarray,
+    corpus: jnp.ndarray,
+    k: int,
+    *,
+    block_q: int = 8,
+    block_n: int = 1024,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Exact MIPS top-k: (Q, D) × (N, D) → ((Q, k) scores, (Q, k) int32 ids)."""
+    use_pallas = (jax.default_backend() == "tpu") if use_pallas is None else use_pallas
+    if use_pallas:
+        return mips_topk_pallas(
+            queries, corpus, k, block_q=block_q, block_n=block_n, interpret=interpret
+        )
+    return mips_topk_ref(queries, corpus, k)

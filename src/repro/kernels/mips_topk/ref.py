@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused MIPS+top-k retrieval kernel.
+
+Contract: queries (Q, D), corpus (N, D) → (scores (Q, K), indices (Q, K)),
+scores descending per row; indices are corpus rows. Ties broken by lower
+index (matches the kernel's first-match argmax emulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mips_topk_ref(queries: jnp.ndarray, corpus: jnp.ndarray, k: int):
+    scores = queries.astype(jnp.float32) @ corpus.astype(jnp.float32).T  # (Q, N)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,172 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Sources (per assignment §ROOFLINE):
+* ``compiled.cost_analysis()`` → HLO FLOPs + bytes accessed (per device —
+  the post-SPMD module is the per-device program),
+* ``compiled.as_text()`` → collective operand bytes, parsed per op kind
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute), per-device shapes.
+
+Terms (seconds), v5e constants from configs.base:
+    compute    = flops_per_device / PEAK_FLOPS_BF16
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# matches e.g.  bf16[256,4096,6144]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum output-operand bytes of every collective op, by kind.
+
+    Operates on post-optimization per-device HLO: each line defining a
+    collective looks like ``%x = TYPE[dims]{layout} all-reduce(...)`` or a
+    tuple ``%x = (T1[..], T2[..]) all-gather(...)``.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "fusion" in stripped.split("(")[0] and not any(
+            f" {c}(" in stripped or f"{c}-start(" in stripped for c in _COLLECTIVES
+        ):
+            continue
+        for kind in _COLLECTIVES:
+            # match "= <shapes> kind(" and async "-start(" forms; skip -done
+            # (same bytes would double-count)
+            marker_plain = f" {kind}("
+            marker_start = f" {kind}-start("
+            if marker_plain in stripped or marker_start in stripped:
+                lhs = stripped.split(f" {kind}", 1)[0]
+                if "=" not in lhs:
+                    continue
+                shapes_part = lhs.split("=", 1)[1]
+                nbytes = sum(
+                    _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(shapes_part)
+                )
+                out[kind] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops_total: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def hlo_flops_total(self) -> float:
+        return self.flops_per_device * self.n_devices
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops_total / max(self.hlo_flops_total, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound: what fraction of the
+        dominant term's time the *model* FLOPs would ideally need."""
+        ideal = (self.model_flops_total / self.n_devices) / PEAK_FLOPS_BF16
+        return ideal / max(self.bound_s, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "n_devices": self.n_devices,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze_compiled(
+    compiled,
+    n_devices: int,
+    model_flops: float,
+    *,
+    extra_flops: float = 0.0,
+    extra_bytes: float = 0.0,
+    extra_collective: float = 0.0,
+) -> tuple[RooflineTerms, dict]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) + extra_flops
+    byts = float(cost.get("bytes accessed", 0.0)) + extra_bytes
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    terms = RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=float(coll["total"]) + extra_collective,
+        n_devices=n_devices,
+        model_flops_total=model_flops,
+    )
+    mem = compiled.memory_analysis()
+    memory = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    return terms, {"collectives": coll, "memory": memory}

@@ -1,0 +1,69 @@
+"""CA-RAG serving entry point: route → retrieve → generate over a query file.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --docs data/documents.txt --questions data/questions.txt \
+        --policy router_default --out results/serve.csv
+
+Defaults reproduce the paper benchmark exactly (Appendix D/E artifacts).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", default=None, help="newline-separated passages (default: paper corpus)")
+    ap.add_argument("--questions", default=None, help="one query per line (default: paper queries)")
+    ap.add_argument("--policy", default="router_default")
+    ap.add_argument("--out", default="results/serve.csv")
+    ap.add_argument("--epsilon", type=float, default=0.0)
+    ap.add_argument("--min-confidence", type=float, default=0.0)
+    ap.add_argument("--max-cost-tokens", type=int, default=None)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    from repro.core.guardrails import GuardrailConfig
+    from repro.core.policies import make_policy
+    from repro.core.router import RouterConfig
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS, corpus_document
+    from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages
+    from repro.serving.engine import EngineConfig, RAGEngine
+
+    if args.questions:
+        with open(args.questions) as f:
+            queries = [line.strip() for line in f if line.strip()]
+        references = None
+    else:
+        queries = list(BENCHMARK_QUERIES)
+        references = list(REFERENCE_ANSWERS)
+
+    doc = open(args.docs).read() if args.docs else corpus_document()
+
+    router = make_policy(args.policy, config=RouterConfig(epsilon=args.epsilon))
+    embedder = HashedNGramEmbedder(dim=256)
+    passages = line_passages(doc)
+    index, index_tokens = DenseIndex.build(passages, embedder)
+    engine = RAGEngine(
+        router,
+        index,
+        embedder,
+        catalog=router.catalog,
+        config=EngineConfig(
+            guardrails=GuardrailConfig(
+                min_retrieval_confidence=args.min_confidence,
+                max_cost_tokens=args.max_cost_tokens,
+            )
+        ),
+        index_embedding_tokens=index_tokens,
+    )
+    telemetry = engine.run(queries, references)
+    telemetry.to_csv(args.out)
+    print(telemetry.summary_json())
+    print(f"wrote {len(telemetry.records)} records to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

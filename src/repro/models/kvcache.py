@@ -1,0 +1,147 @@
+"""KV caches: contiguous (dry-run/serving default) and paged (vLLM-style).
+
+Contiguous layout: k, v ``(L, B, S_max, Hk, dh)`` + per-sequence lengths
+``(B,)``. Under the SP policy the S_max axis shards over ``model`` —
+each model shard owns a sequence slice and decode attention reduces over it
+(distributed flash-decoding; see distributed/partition.py).
+
+Paged layout: a global page pool ``(n_pages, page_size, Hk, dh)`` per k/v
+per layer plus a block table ``(B, max_pages)`` — the PagedAttention
+indirection adapted to JAX static shapes (block tables are dense int32 with
+-1 padding). Serving's scheduler allocates/frees pages on the host;
+gather-by-table happens on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Contiguous cache pytree (registered manually via tree_util)."""
+
+    k: jnp.ndarray  # (L, B, S_max, Hk, dh)
+    v: jnp.ndarray
+    lengths: jnp.ndarray  # (B,) int32 valid prefix per sequence
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+    @classmethod
+    def zeros(cls, n_layers, batch, max_len, n_kv_heads, d_head, dtype=jnp.bfloat16):
+        shape = (n_layers, batch, max_len, n_kv_heads, d_head)
+        return cls(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            lengths=jnp.zeros((batch,), jnp.int32),
+        )
+
+    @classmethod
+    def spec(cls, n_layers, batch, max_len, n_kv_heads, d_head, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-in for dry-runs (no allocation)."""
+        shape = (n_layers, batch, max_len, n_kv_heads, d_head)
+        return cls(
+            k=jax.ShapeDtypeStruct(shape, dtype),
+            v=jax.ShapeDtypeStruct(shape, dtype),
+            lengths=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+
+    def write_token(self, layer: int, k_new: jnp.ndarray, v_new: jnp.ndarray, positions: jnp.ndarray):
+        """Write one token per sequence at per-sequence ``positions`` (B,).
+
+        k_new/v_new: (B, Hk, dh). Returns updated cache arrays for ``layer``.
+        """
+        b = positions.shape[0]
+        batch_idx = jnp.arange(b)
+        k = self.k.at[layer, batch_idx, positions].set(k_new.astype(self.k.dtype))
+        v = self.v.at[layer, batch_idx, positions].set(v_new.astype(self.v.dtype))
+        return dataclasses.replace(self, k=k, v=v)
+
+    def advanced(self, n: int = 1) -> "KVCache":
+        return dataclasses.replace(self, lengths=self.lengths + n)
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "lengths"], meta_fields=[]
+)
+
+
+# --------------------------------------------------------------------------- #
+# Paged cache                                                                  #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class PagedKVCache:
+    """Page-pool cache with dense block tables (PagedAttention, TPU-adapted)."""
+
+    k_pages: jnp.ndarray  # (L, n_pages, page, Hk, dh)
+    v_pages: jnp.ndarray
+    block_table: jnp.ndarray  # (B, max_pages) int32; -1 = unallocated
+    lengths: jnp.ndarray  # (B,)
+    page_size: int
+
+    @classmethod
+    def zeros(cls, n_layers, n_pages, page_size, batch, max_pages, n_kv_heads, d_head, dtype=jnp.bfloat16):
+        return cls(
+            k_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, d_head), dtype),
+            v_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, d_head), dtype),
+            block_table=jnp.full((batch, max_pages), -1, jnp.int32),
+            lengths=jnp.zeros((batch,), jnp.int32),
+            page_size=page_size,
+        )
+
+    def gather_kv(self, layer: int, max_len: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Materialize (B, max_len, Hk, dh) views via the block table.
+
+        max_len must be a multiple of page_size. Returns (k, v, valid_mask).
+        """
+        if max_len % self.page_size:
+            raise ValueError("max_len must be a multiple of page_size")
+        n = max_len // self.page_size
+        table = self.block_table[:, :n]  # (B, n)
+        safe = jnp.maximum(table, 0)
+        k = self.k_pages[layer][safe]  # (B, n, page, Hk, dh)
+        v = self.v_pages[layer][safe]
+        b = table.shape[0]
+        k = k.reshape(b, max_len, *k.shape[3:])
+        v = v.reshape(b, max_len, *v.shape[3:])
+        pos = jnp.arange(max_len)[None, :]
+        page_ok = jnp.repeat(table >= 0, self.page_size, axis=1)
+        valid = (pos < self.lengths[:, None]) & page_ok
+        return k, v, valid
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache,
+    data_fields=["k_pages", "v_pages", "block_table", "lengths"],
+    meta_fields=["page_size"],
+)
+
+
+class PageAllocator:
+    """Host-side page pool bookkeeping for the serving scheduler."""
+
+    def __init__(self, n_pages: int):
+        self.free = list(range(n_pages - 1, -1, -1))
+        self.owned: dict[int, list[int]] = {}
+
+    def alloc(self, seq_id: int, n: int) -> list[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"page pool exhausted (need {n}, have {len(self.free)})")
+        pages = [self.free.pop() for _ in range(n)]
+        self.owned.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def free_seq(self, seq_id: int) -> int:
+        pages = self.owned.pop(seq_id, [])
+        self.free.extend(pages)
+        return len(pages)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)

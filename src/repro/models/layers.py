@@ -1,0 +1,210 @@
+"""Model building blocks: norms, linear, RoPE, GQA attention, gated FFN.
+
+Conventions (used across the whole model zoo):
+
+* Parameters are plain pytrees (nested dicts of jnp arrays); every module is
+  an ``init_*`` + ``apply``-style pure function pair. No framework deps.
+* ``param_dtype`` is the storage dtype, ``compute_dtype`` the math dtype
+  (bf16 on TPU); norms/softmax accumulate in f32.
+* Attention comes in two interchangeable impls: ``"xla"`` (einsum + online
+  q-block chunking, SPMD-shardable — the dry-run/roofline path) and
+  ``"pallas"`` (kernels/flash_attention — the TPU hot path, validated in
+  interpret mode). Both share this module's RoPE/GQA layout: q ``(B,S,H,dh)``,
+  kv ``(B,S,Hk,dh)`` with H = Hk * group_size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# Init helpers                                                                 #
+# --------------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    """Variance-scaling (fan-in) init for a (d_in, d_out) matrix."""
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms                                                                        #
+# --------------------------------------------------------------------------- #
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    """RMSNorm with f32 accumulation (LLaMA-style)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE                                                                         #
+# --------------------------------------------------------------------------- #
+def rope_frequencies(d_head: int, theta: float = 10_000.0) -> jnp.ndarray:
+    """Inverse frequencies, shape (d_head // 2,)."""
+    if d_head % 2:
+        raise ValueError("RoPE requires even head dim")
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]) by position*freq.
+
+    x: (B, S, H, dh); positions: (B, S) or (S,) int32.
+    """
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B, S, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention (XLA path)                                                     #
+# --------------------------------------------------------------------------- #
+def _gqa_scores_einsum(q, k):
+    """q (B,Sq,Hk,G,dh), k (B,Skv,Hk,dh) → scores (B,Hk,G,Sq,Skv) in f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, Sq, H, dh)
+    k: jnp.ndarray,  # (B, Skv, Hk, dh)
+    v: jnp.ndarray,  # (B, Skv, Hk, dh)
+    *,
+    causal: bool = True,
+    q_offset: jnp.ndarray | int = 0,
+    kv_length: jnp.ndarray | None = None,
+    q_block: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Grouped-query attention, f32 softmax, optional q-block chunking.
+
+    ``q_offset``: absolute position of q[:, 0] (prefill continuation/decode).
+    ``kv_length``: (B,) valid KV prefix lengths (decode against a cache).
+    ``q_block``: chunk queries through a lax.scan so the (Sq, Skv) score
+    matrix never materializes beyond (q_block, Skv) — the XLA-path analogue
+    of flash attention's memory behaviour (prefill_32k would otherwise
+    allocate O(S²)).
+    """
+    b, sq, h, dh = q.shape
+    _, skv, hk, _ = k.shape
+    if h % hk:
+        raise ValueError(f"q heads {h} not divisible by kv heads {hk}")
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, sq, hk, g, dh)
+
+    def attend(q_chunk, chunk_offset):
+        # q_chunk: (B, Sc, Hk, G, dh); chunk_offset: scalar abs pos of row 0
+        scores = _gqa_scores_einsum(q_chunk * scale, k)  # (B,Hk,G,Sc,Skv) f32
+        kv_pos = jnp.arange(skv)
+        mask = None
+        if causal:
+            q_pos = chunk_offset + jnp.arange(q_chunk.shape[1])
+            mask = kv_pos[None, :] <= q_pos[:, None]  # (Sc, Skv)
+            mask = mask[None, None, None]
+        if kv_length is not None:
+            len_mask = kv_pos[None, :] < kv_length[:, None]  # (B, Skv)
+            len_mask = len_mask[:, None, None, None, :]
+            mask = len_mask if mask is None else (mask & len_mask)
+        if mask is not None:
+            scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        # guard fully-masked rows (all -inf → nan)
+        probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+        return out.reshape(b, q_chunk.shape[1], h, dh)
+
+    if q_block is None or q_block >= sq:
+        return attend(qg, jnp.asarray(q_offset))
+
+    if sq % q_block:
+        raise ValueError(f"seq len {sq} not divisible by q_block {q_block}")
+    n_chunks = sq // q_block
+    qs = qg.reshape(b, n_chunks, q_block, hk, g, dh)
+    # Unrolled (Python) chunk loop: XLA reuses the chunk buffers across the
+    # sequential ops (same memory behaviour as a scan) but cost_analysis and
+    # the backward pass see every chunk — a nested scan would undercount
+    # FLOPs by n_chunks in the roofline accounting. Each chunk is
+    # checkpointed so the backward recomputes its probs instead of keeping
+    # every chunk's (bq × Skv) matrix live — flash-attention's recompute
+    # semantics, expressed at the XLA level.
+    attend_ckpt = jax.checkpoint(attend, static_argnums=())
+    outs = [
+        attend_ckpt(qs[:, i], jnp.asarray(q_offset) + i * q_block) for i in range(n_chunks)
+    ]
+    return jnp.concatenate(outs, axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# FFN activations                                                              #
+# --------------------------------------------------------------------------- #
+def swiglu(x_gate: jnp.ndarray, x_up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(x_gate) * x_up
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "silu": jax.nn.silu,
+}
+
+
+def mlp_init(key, sizes: list[int], dtype=jnp.float32, bias: bool = True):
+    """Plain MLP params for [d0, d1, ..., dn] layer sizes."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        layer = {"w": dense_init(k, sizes[i], sizes[i + 1], dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((sizes[i + 1],), dtype)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def mlp_apply(params, x, *, activation: str = "relu", final_activation: bool = False):
+    n = len(params["layers"])
+    act = ACTIVATIONS[activation]
+    for i, layer in enumerate(params["layers"]):
+        x = x @ layer["w"]
+        if "b" in layer:
+            x = x + layer["b"]
+        if i < n - 1 or final_activation:
+            x = act(x)
+    return x

@@ -1,0 +1,274 @@
+"""Mixture-of-Experts FFN with capacity-based sparse dispatch (EP-ready).
+
+Top-k routing (GShard/Switch lineage) with *static shapes* throughout — the
+TPU constraint. Instead of a dense (tokens × experts) einsum (which would
+inflate FLOPs by E/k — 48× for kimi's 384-expert top-8), tokens are
+physically dispatched to per-expert capacity buffers:
+
+    router probs (T, E) → top-k (ids, gates)
+    sort token-expert pairs by expert → position-in-expert
+    keep = position < capacity                  (overflow tokens drop)
+    scatter x → dispatch buffer (E, C, d)       [all-to-all under EP]
+    per-expert FFN: (E, C, d) @ (E, d, f) → … → (E, C, d)
+    gather back + gate-weighted combine
+
+so compiled FLOPs track *active* expert compute (≈ T·k·cf · expert FLOPs) —
+the quantity the roofline's MODEL_FLOPS/HLO_FLOPs ratio checks.
+
+Load-balancing aux loss (Switch: E · Σ_e f_e · p̄_e) and router z-loss are
+returned for the training objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_shared_experts: int = 0  # DeepSeek/Kimi-style always-on experts
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+    @property
+    def capacity(self) -> int:
+        # per-expert slots for T tokens is computed at call time; this is the
+        # per-token multiplier
+        return 0
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    params = {
+        "router": dense_init(ks[0], cfg.d_model, cfg.n_experts, jnp.float32),
+        "e_gate": _expert_init(ks[1], cfg.n_experts, cfg.d_model, cfg.d_ff, dtype),
+        "e_up": _expert_init(ks[2], cfg.n_experts, cfg.d_model, cfg.d_ff, dtype),
+        "e_down": _expert_init(ks[3], cfg.n_experts, cfg.d_ff, cfg.d_model, dtype),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.d_ff * cfg.n_shared_experts
+        params["s_gate"] = dense_init(ks[4], cfg.d_model, sf, dtype)
+        params["s_up"] = dense_init(ks[5], cfg.d_model, sf, dtype)
+        params["s_down"] = dense_init(ks[6], sf, cfg.d_model, dtype)
+    return params
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (e, d_in, d_out)) * scale).astype(dtype)
+
+
+def router_topk(
+    logits: jnp.ndarray, top_k: int, *, normalize_gates: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """(T, E) logits → (T, k) expert ids + gates + aux losses."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, k)
+    if normalize_gates:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e (token_fraction_e * mean_prob_e)
+    t, e = probs.shape
+    onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    frac = onehot_top1.mean(0)
+    mean_prob = probs.mean(0)
+    aux = e * jnp.sum(frac * mean_prob)
+    zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+    return expert_ids, gate_vals, {"aux_loss": aux, "z_loss": zloss}
+
+
+def dispatch_indices(
+    expert_ids: jnp.ndarray, n_experts: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based position-in-expert computation.
+
+    expert_ids: (T, k) → returns (dest_slot (T*k,), keep (T*k,)) where
+    dest_slot ∈ [0, E*C) is the flat dispatch-buffer row. Dropped (overflow)
+    pairs get keep=False and an arbitrary in-range slot.
+    """
+    flat = expert_ids.reshape(-1)  # (T*k,)
+    tk = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)  # token-expert pairs grouped by expert
+    sorted_e = flat[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat, jnp.int32), flat, num_segments=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e]
+    # undo the sort: position for pair i
+    pos = jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < capacity
+    dest = flat * capacity + jnp.minimum(pos, capacity - 1)
+    return dest, keep
+
+
+def moe_apply(
+    params,
+    cfg: MoEConfig,
+    x: jnp.ndarray,  # (..., d)
+    *,
+    dispatch_constraint=None,
+    token_constraint=None,
+) -> tuple[jnp.ndarray, dict]:
+    """Sparse-dispatch MoE forward. Returns (y, aux_losses).
+
+    ``dispatch_constraint``: optional fn applied to the (E, C, d) buffers
+    (``lax.with_sharding_constraint`` under pjit → EP all-to-all).
+    ``token_constraint``: optional fn applied to the flat per-pair
+    (T·k, d) tensors — without it XLA is free to replicate the gathered
+    token copies across the mesh, which at kimi scale is a 120 GB tensor
+    per layer (§Perf iteration 1).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)  # (T, d)
+    t = xt.shape[0]
+
+    logits = xt.astype(jnp.float32) @ params["router"]  # (T, E)
+    expert_ids, gates, aux = router_topk(logits, cfg.top_k)
+
+    capacity = int(np.ceil(t * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    capacity = max(capacity, 1)
+    dest, keep = dispatch_indices(expert_ids, cfg.n_experts, capacity)
+
+    # scatter tokens into (E*C, d); dropped pairs contribute zero
+    token_of_pair = jnp.repeat(jnp.arange(t, dtype=jnp.int32), cfg.top_k)
+    src = xt[token_of_pair] * keep[:, None].astype(xt.dtype)
+    if token_constraint is not None:
+        src = token_constraint(src)
+    buf = jnp.zeros((cfg.n_experts * capacity, d), xt.dtype).at[dest].add(src)
+    buf = buf.reshape(cfg.n_experts, capacity, d)
+    if dispatch_constraint is not None:
+        buf = dispatch_constraint(buf)
+
+    # per-expert SwiGLU FFN
+    h = swiglu(
+        jnp.einsum("ecd,edf->ecf", buf, params["e_gate"]),
+        jnp.einsum("ecd,edf->ecf", buf, params["e_up"]),
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, params["e_down"])
+    if dispatch_constraint is not None:
+        out = dispatch_constraint(out)
+    out = out.reshape(cfg.n_experts * capacity, d)
+
+    # combine: gather each pair's expert output, weight by gate
+    pair_out = out[dest] * (gates.reshape(-1) * keep.astype(jnp.float32))[:, None].astype(out.dtype)
+    if token_constraint is not None:
+        pair_out = token_constraint(pair_out)
+    y = jax.ops.segment_sum(pair_out, token_of_pair, num_segments=t)
+
+    if cfg.n_shared_experts:
+        y = y + (swiglu(xt @ params["s_gate"], xt @ params["s_up"]) @ params["s_down"])
+
+    return y.reshape(orig_shape).astype(x.dtype), aux
+
+
+def moe_apply_grouped(
+    params,
+    cfg: MoEConfig,
+    x: jnp.ndarray,  # (..., d)
+    n_groups: int,
+    *,
+    dispatch_constraint=None,
+    token_constraint=None,
+) -> tuple[jnp.ndarray, dict]:
+    """Group-local sparse dispatch (per-device-capacity MoE).
+
+    §Perf iteration 2: the global scatter in :func:`moe_apply` partial-sums
+    the whole (E·C, d) dispatch buffer across the data axis — XLA lowers it
+    as scatter + full-buffer all-reduce (measured: the dominant collective
+    of both MoE train cells). Grouping tokens by their data shard and
+    scattering *within* the group turns it into a batched scatter over a
+    dp-sharded leading axis: the only cross-device movement left is the
+    EP exchange implied by the (group, expert, cap, d) → expert-sharded
+    einsum, which is the all-to-all a production MoE actually performs.
+
+    Capacity is per-group (ceil(T_g·k/E·cf)) — the per-device capacity
+    semantics of real deployments (slightly different drop pattern than the
+    global formulation; covered by capacity_factor).
+
+    ``dispatch_constraint`` receives the (G, E, C_g, d) buffers;
+    ``token_constraint`` the (G, T_g·k, d) pair tensors.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    if t % n_groups:
+        raise ValueError(f"tokens {t} not divisible by n_groups {n_groups}")
+    tg = t // n_groups
+    xg = xt.reshape(n_groups, tg, d)
+
+    logits = xg.astype(jnp.float32) @ params["router"]  # (G, Tg, E)
+    expert_ids, gates, aux = router_topk(logits.reshape(t, cfg.n_experts), cfg.top_k)
+    expert_ids = expert_ids.reshape(n_groups, tg * cfg.top_k // cfg.top_k, cfg.top_k)
+    gates = gates.reshape(n_groups, tg, cfg.top_k)
+
+    capacity = max(int(np.ceil(tg * cfg.top_k / cfg.n_experts * cfg.capacity_factor)), 1)
+    dest, keep = jax.vmap(
+        lambda ids: dispatch_indices(ids, cfg.n_experts, capacity)
+    )(expert_ids)  # (G, Tg·k) each
+
+    token_of_pair = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), cfg.top_k)  # per group
+    src = jnp.take_along_axis(
+        xg, jnp.broadcast_to(token_of_pair[None, :, None], (n_groups, tg * cfg.top_k, 1)), axis=1
+    ) * keep[..., None].astype(xt.dtype)  # (G, Tg·k, d)
+    if token_constraint is not None:
+        src = token_constraint(src)
+
+    def group_scatter(dest_g, src_g):
+        return jnp.zeros((cfg.n_experts * capacity, d), src_g.dtype).at[dest_g].add(src_g)
+
+    buf = jax.vmap(group_scatter)(dest, src)  # (G, E·C, d)
+    buf = buf.reshape(n_groups, cfg.n_experts, capacity, d)
+    if dispatch_constraint is not None:
+        buf = dispatch_constraint(buf)
+
+    h = swiglu(
+        jnp.einsum("gecd,edf->gecf", buf, params["e_gate"]),
+        jnp.einsum("gecd,edf->gecf", buf, params["e_up"]),
+    )
+    out = jnp.einsum("gecf,efd->gecd", h, params["e_down"])
+    if dispatch_constraint is not None:
+        out = dispatch_constraint(out)
+    out = out.reshape(n_groups, cfg.n_experts * capacity, d)
+
+    pair_out = jnp.take_along_axis(
+        out, jnp.broadcast_to(dest[..., None], (*dest.shape, d)), axis=1
+    )  # (G, Tg·k, d)
+    pair_out = pair_out * (
+        gates.reshape(n_groups, -1) * keep.astype(jnp.float32)
+    )[..., None].astype(out.dtype)
+    if token_constraint is not None:
+        pair_out = token_constraint(pair_out)
+    y = jax.vmap(
+        lambda p: jax.ops.segment_sum(p, token_of_pair, num_segments=tg)
+    )(pair_out)  # (G, Tg, d)
+
+    y = y.reshape(t, d)
+    if cfg.n_shared_experts:
+        y = y + (swiglu(xt @ params["s_gate"], xt @ params["s_up"]) @ params["s_down"])
+    return y.reshape(orig_shape).astype(x.dtype), aux
+
+
+def moe_param_count(cfg: MoEConfig) -> int:
+    n = cfg.d_model * cfg.n_experts  # router
+    n += 3 * cfg.n_experts * cfg.d_model * cfg.d_ff
+    if cfg.n_shared_experts:
+        n += 3 * cfg.d_model * cfg.d_ff * cfg.n_shared_experts
+    return n
+
+
+def moe_active_param_count(cfg: MoEConfig) -> int:
+    n = cfg.d_model * cfg.n_experts
+    n += 3 * cfg.top_k * cfg.d_model * cfg.d_ff
+    if cfg.n_shared_experts:
+        n += 3 * cfg.d_model * cfg.d_ff * cfg.n_shared_experts
+    return n

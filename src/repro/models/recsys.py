@@ -1,0 +1,355 @@
+"""RecSys model family: DLRM, DeepFM, MIND, SASRec + manual EmbeddingBag.
+
+JAX has no native EmbeddingBag or CSR sparse — per kernel_taxonomy §B.6 the
+lookup is implemented as ``jnp.take`` + ``jax.ops.segment_sum`` (and the
+Pallas ``embedding_bag`` kernel is its TPU hot-path twin). All four models
+share one combined-table convention: per-field vocabs are concatenated into
+a single ``(Σ vocab_f, dim)`` table with per-field row offsets, so a batch
+of categorical ids does ONE gather — the layout FBGEMM's TBE uses, and what
+lets the table shard row-wise over the mesh.
+
+Shapes contract (assigned cells): ``train_step(params, batch)`` for
+train_batch; ``serve_step(params, batch) → scores`` for serve_p99 /
+serve_bulk; ``retrieval_score(query, candidates) → top-k`` for
+retrieval_cand (1 query × 10⁶ candidates — batched dot + blocked top-k,
+never a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import mlp_apply, mlp_init
+from repro.retrieval.topk import blocked_topk
+
+
+# --------------------------------------------------------------------------- #
+# EmbeddingBag (manual: gather + segment-reduce)                                #
+# --------------------------------------------------------------------------- #
+def embedding_bag(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (n_lookups,) int32 flat ids
+    segment_ids: jnp.ndarray,  # (n_lookups,) int32 → output bag
+    n_bags: int,
+    *,
+    mode: str = "sum",
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag equivalent: (n_bags, D)."""
+    rows = table[indices]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(segment_ids, rows.dtype), segment_ids, n_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """Combined-table layout for n_fields categorical features."""
+
+    vocab_sizes: tuple[int, ...]
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int64)
+
+
+def field_lookup(table: jnp.ndarray, spec: FieldSpec, ids: jnp.ndarray) -> jnp.ndarray:
+    """Single-hot per-field lookup: ids (B, F) → (B, F, D), one gather."""
+    offs = jnp.asarray(spec.offsets, ids.dtype)
+    return table[ids + offs[None, :]]
+
+
+# --------------------------------------------------------------------------- #
+# DLRM (MLPerf config; arXiv:1906.00091)                                       #
+# --------------------------------------------------------------------------- #
+# Criteo-1TB per-field vocabulary sizes (MLPerf DLRM reference).
+CRITEO_VOCAB_SIZES: tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    vocab_sizes: tuple[int, ...] = CRITEO_VOCAB_SIZES
+    param_dtype: object = jnp.float32
+
+    @property
+    def fields(self) -> FieldSpec:
+        return FieldSpec(self.vocab_sizes)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def interaction_dim(self) -> int:
+        f = self.n_sparse + 1  # embeddings + bottom-MLP output
+        return f * (f - 1) // 2 + self.bot_mlp[-1]
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> dict:
+    k_emb, k_bot, k_top = jax.random.split(key, 3)
+    scale = 1.0 / np.sqrt(cfg.embed_dim)
+    return {
+        "table": (jax.random.uniform(k_emb, (cfg.fields.total_rows, cfg.embed_dim), minval=-scale, maxval=scale)).astype(cfg.param_dtype),
+        "bot": mlp_init(k_bot, [cfg.n_dense, *cfg.bot_mlp]),
+        "top": mlp_init(k_top, [cfg.interaction_dim, *cfg.top_mlp]),
+    }
+
+
+def dlrm_abstract(cfg: DLRMConfig) -> dict:
+    """ShapeDtypeStruct params (the 96 GB table is never allocated host-side)."""
+    return jax.eval_shape(lambda k: dlrm_init(k, cfg), jax.random.PRNGKey(0))
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense: jnp.ndarray, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """dense (B, 13) f32, sparse_ids (B, 26) int32 (field-local) → logits (B,)."""
+    b = dense.shape[0]
+    bot = mlp_apply(params["bot"], dense, activation="relu", final_activation=True)  # (B, 128)
+    emb = field_lookup(params["table"], cfg.fields, sparse_ids)  # (B, 26, 128)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, 27, 128)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)  # dot interaction
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = inter[:, iu, ju]  # (B, f(f-1)/2)
+    z = jnp.concatenate([bot, pairs], axis=-1)
+    return mlp_apply(params["top"], z, activation="relu")[:, 0]
+
+
+def dlrm_loss(params, cfg, dense, sparse_ids, labels):
+    logits = dlrm_forward(params, cfg, dense, sparse_ids)
+    return _bce(logits, labels)
+
+
+def _bce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# --------------------------------------------------------------------------- #
+# DeepFM (arXiv:1703.04247)                                                     #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    mlp: tuple[int, ...] = (400, 400, 400)
+    vocab_per_field: int = 100_000
+    param_dtype: object = jnp.float32
+
+    @property
+    def fields(self) -> FieldSpec:
+        return FieldSpec((self.vocab_per_field,) * self.n_sparse)
+
+
+def deepfm_init(key, cfg: DeepFMConfig) -> dict:
+    k_emb, k_w, k_mlp = jax.random.split(key, 3)
+    rows = cfg.fields.total_rows
+    return {
+        "table": (jax.random.normal(k_emb, (rows, cfg.embed_dim)) * 0.01).astype(cfg.param_dtype),
+        "first_order": (jax.random.normal(k_w, (rows, 1)) * 0.01).astype(cfg.param_dtype),
+        "bias": jnp.zeros((), jnp.float32),
+        "mlp": mlp_init(k_mlp, [cfg.n_sparse * cfg.embed_dim, *cfg.mlp, 1]),
+    }
+
+
+def deepfm_forward(params, cfg: DeepFMConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """sparse_ids (B, 39) field-local → logits (B,)."""
+    b = sparse_ids.shape[0]
+    emb = field_lookup(params["table"], cfg.fields, sparse_ids)  # (B, F, D)
+    offs = jnp.asarray(cfg.fields.offsets, sparse_ids.dtype)
+    fo = params["first_order"][sparse_ids + offs[None, :]][..., 0].sum(-1)  # (B,)
+    # FM 2nd order: ½((Σv)² − Σv²) summed over dim
+    sum_v = emb.sum(axis=1)
+    fm = 0.5 * (jnp.square(sum_v) - jnp.square(emb).sum(axis=1)).sum(-1)
+    deep = mlp_apply(params["mlp"], emb.reshape(b, -1), activation="relu")[:, 0]
+    return params["bias"] + fo + fm + deep
+
+
+def deepfm_loss(params, cfg, sparse_ids, labels):
+    return _bce(deepfm_forward(params, cfg, sparse_ids), labels)
+
+
+# --------------------------------------------------------------------------- #
+# MIND (multi-interest capsules; arXiv:1904.08030)                              #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 400_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    n_negatives: int = 1024
+    power: float = 2.0  # label-aware attention sharpness
+    param_dtype: object = jnp.float32
+
+
+def mind_init(key, cfg: MINDConfig) -> dict:
+    k_emb, k_s = jax.random.split(key)
+    return {
+        "item_embed": (jax.random.normal(k_emb, (cfg.n_items, cfg.embed_dim)) * 0.02).astype(cfg.param_dtype),
+        "s_matrix": (jax.random.normal(k_s, (cfg.embed_dim, cfg.embed_dim)) * (1 / np.sqrt(cfg.embed_dim))).astype(cfg.param_dtype),
+    }
+
+
+def _squash(x, axis=-1, eps=1e-9):
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + eps)
+
+
+def mind_interests(params, cfg: MINDConfig, hist_ids: jnp.ndarray, hist_mask: jnp.ndarray) -> jnp.ndarray:
+    """B2I dynamic routing: history (B, L) → interest capsules (B, K, D)."""
+    e = params["item_embed"][hist_ids]  # (B, L, D)
+    eh = e @ params["s_matrix"]  # bilinear map (shared, per MIND B2I)
+    b_logits = jnp.zeros((e.shape[0], cfg.n_interests, e.shape[1]), jnp.float32)
+    mask = hist_mask[:, None, :].astype(jnp.float32)  # (B, 1, L)
+
+    def routing_iter(b_logits, _):
+        w = jax.nn.softmax(b_logits, axis=1) * mask  # compete over capsules
+        z = jnp.einsum("bkl,bld->bkd", w, eh)
+        caps = _squash(z)
+        b_new = b_logits + jnp.einsum("bkd,bld->bkl", caps, eh)
+        return b_new, caps
+
+    b_final, caps_seq = jax.lax.scan(routing_iter, b_logits, None, length=cfg.capsule_iters)
+    return caps_seq[-1]  # (B, K, D)
+
+
+def mind_loss(params, cfg: MINDConfig, hist_ids, hist_mask, target_ids, neg_ids):
+    """Sampled-softmax with label-aware attention over interests."""
+    caps = mind_interests(params, cfg, hist_ids, hist_mask)  # (B, K, D)
+    tgt = params["item_embed"][target_ids]  # (B, D)
+    att = jax.nn.softmax(
+        cfg.power * jnp.einsum("bkd,bd->bk", caps, tgt).astype(jnp.float32), axis=-1
+    )
+    user = jnp.einsum("bk,bkd->bd", att.astype(caps.dtype), caps)  # (B, D)
+    pos = jnp.einsum("bd,bd->b", user, tgt).astype(jnp.float32)
+    negs = params["item_embed"][neg_ids]  # (N, D) shared negatives
+    neg = (user @ negs.T).astype(jnp.float32)  # (B, N)
+    logits = jnp.concatenate([pos[:, None], neg], axis=-1)
+    return jnp.mean(jax.nn.logsumexp(logits, -1) - pos)
+
+
+def mind_retrieval_score(params, cfg: MINDConfig, hist_ids, hist_mask, candidate_emb, k: int):
+    """Serve path: max-over-interests dot against candidates + top-k."""
+    caps = mind_interests(params, cfg, hist_ids, hist_mask)  # (B, K, D)
+    scores = jnp.einsum("bkd,nd->bkn", caps, candidate_emb).max(axis=1)  # (B, N)
+    return blocked_topk(scores, k)
+
+
+# --------------------------------------------------------------------------- #
+# SASRec (arXiv:1808.09781)                                                     #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 54_542  # Amazon Beauty
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    param_dtype: object = jnp.float32
+
+
+def sasrec_init(key, cfg: SASRecConfig) -> dict:
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 5)
+        d = cfg.embed_dim
+        blocks.append(
+            {
+                "wq": (jax.random.normal(kb[0], (d, d)) / np.sqrt(d)).astype(cfg.param_dtype),
+                "wk": (jax.random.normal(kb[1], (d, d)) / np.sqrt(d)).astype(cfg.param_dtype),
+                "wv": (jax.random.normal(kb[2], (d, d)) / np.sqrt(d)).astype(cfg.param_dtype),
+                "ln1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+                "ln2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+                "ffn": mlp_init(kb[3], [d, d, d]),
+            }
+        )
+    return {
+        # row 0 is the padding item
+        "item_embed": (jax.random.normal(ks[0], (cfg.n_items + 1, cfg.embed_dim)) * 0.02).astype(cfg.param_dtype),
+        "pos_embed": (jax.random.normal(ks[1], (cfg.seq_len, cfg.embed_dim)) * 0.02).astype(cfg.param_dtype),
+        "blocks": blocks,
+    }
+
+
+def sasrec_hidden(params, cfg: SASRecConfig, seq_ids: jnp.ndarray) -> jnp.ndarray:
+    """seq_ids (B, L) (0 = pad) → hidden states (B, L, D), causal."""
+    from repro.models.layers import layernorm
+
+    b, l = seq_ids.shape
+    x = params["item_embed"][seq_ids] + params["pos_embed"][None, :l]
+    pad_mask = (seq_ids > 0)[:, None, None, :]  # (B,1,1,L) keys
+    causal = jnp.tril(jnp.ones((l, l), bool))[None, None]
+    mask = causal & pad_mask
+    d = cfg.embed_dim
+    scale = 1.0 / np.sqrt(d)
+    for blk in params["blocks"]:
+        h = layernorm(blk["ln1"], x)
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        # single-head (paper config) attention
+        scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32)[:, None] * scale
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)[:, 0]
+        probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+        x = x + jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)
+        h2 = layernorm(blk["ln2"], x)
+        x = x + mlp_apply(blk["ffn"], h2, activation="relu")
+    # zero out pad positions
+    return x * (seq_ids > 0)[..., None].astype(x.dtype)
+
+
+def sasrec_loss(params, cfg: SASRecConfig, seq_ids, pos_ids, neg_ids):
+    """Paper objective: BCE(pos) + BCE(neg) at every valid position."""
+    h = sasrec_hidden(params, cfg, seq_ids)  # (B, L, D)
+    pos_e = params["item_embed"][pos_ids]
+    neg_e = params["item_embed"][neg_ids]
+    pos_logit = jnp.einsum("bld,bld->bl", h, pos_e).astype(jnp.float32)
+    neg_logit = jnp.einsum("bld,bld->bl", h, neg_e).astype(jnp.float32)
+    valid = (pos_ids > 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(pos_logit) + jax.nn.log_sigmoid(-neg_logit)) * valid
+    return jnp.sum(loss) / jnp.maximum(valid.sum(), 1.0)
+
+
+def sasrec_retrieval_score(params, cfg: SASRecConfig, seq_ids, candidate_emb, k: int):
+    """Last-position user state vs candidate items → top-k."""
+    h = sasrec_hidden(params, cfg, seq_ids)
+    # last valid position per sequence
+    lengths = (seq_ids > 0).sum(-1)
+    last = h[jnp.arange(h.shape[0]), jnp.maximum(lengths - 1, 0)]  # (B, D)
+    scores = last @ candidate_emb.T
+    return blocked_topk(scores, k)

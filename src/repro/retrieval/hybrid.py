@@ -1,0 +1,95 @@
+"""Hybrid dense–sparse fusion (paper §II.B, corpus line 6).
+
+Two standard fusions over (dense MIPS, BM25) candidate lists:
+
+* **RRF** (reciprocal-rank fusion): rank-based, scale-free —
+  ``score(p) = Σ_lists 1 / (rrf_k + rank_list(p))``.
+* **Weighted-sum**: min-max normalize each list's scores, then
+  ``w_dense * dense + (1-w_dense) * sparse``.
+
+The fused retriever exposes the same (scores, ids) contract as DenseIndex so
+a hybrid bundle drops into the catalog without touching the routing API
+(paper §VIII.F).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.retrieval.bm25 import BM25Index
+from repro.retrieval.embedder import Embedder
+from repro.retrieval.index import DenseIndex, SearchResult
+
+
+def rrf_fuse(
+    lists: list[tuple[np.ndarray, np.ndarray]], k: int, *, rrf_k: float = 60.0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fuse ranked (scores, ids) lists by reciprocal rank."""
+    agg: dict[int, float] = {}
+    for _, ids in lists:
+        for rank, pid in enumerate(np.asarray(ids).tolist()):
+            agg[pid] = agg.get(pid, 0.0) + 1.0 / (rrf_k + rank + 1.0)
+    order = sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    ids = np.array([pid for pid, _ in order], np.int32)
+    scores = np.array([s for _, s in order], np.float32)
+    return scores, ids
+
+
+def weighted_fuse(
+    dense: tuple[np.ndarray, np.ndarray],
+    sparse: tuple[np.ndarray, np.ndarray],
+    k: int,
+    *,
+    w_dense: float = 0.5,
+) -> tuple[np.ndarray, np.ndarray]:
+    def _norm(scores: np.ndarray) -> np.ndarray:
+        s = np.asarray(scores, np.float64)
+        span = s.max() - s.min() if s.size else 0.0
+        return (s - s.min()) / span if span > 0 else np.zeros_like(s)
+
+    agg: dict[int, float] = {}
+    for (scores, ids), w in ((dense, w_dense), (sparse, 1.0 - w_dense)):
+        for s, pid in zip(_norm(scores), np.asarray(ids).tolist()):
+            agg[pid] = agg.get(pid, 0.0) + w * float(s)
+    order = sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return (
+        np.array([s for _, s in order], np.float32),
+        np.array([pid for pid, _ in order], np.int32),
+    )
+
+
+class HybridRetriever:
+    """Dense + BM25 retriever with configurable fusion."""
+
+    def __init__(
+        self,
+        dense: DenseIndex,
+        sparse: BM25Index,
+        embedder: Embedder,
+        *,
+        fusion: str = "rrf",
+        w_dense: float = 0.5,
+        candidates_per_list: int = 20,
+    ):
+        if fusion not in ("rrf", "weighted"):
+            raise ValueError(f"unknown fusion {fusion!r}")
+        self.dense = dense
+        self.sparse = sparse
+        self.embedder = embedder
+        self.fusion = fusion
+        self.w_dense = w_dense
+        self.candidates_per_list = candidates_per_list
+
+    def search(self, query: str, k: int) -> SearchResult:
+        m = min(max(k, self.candidates_per_list), self.dense.size)
+        qv = self.embedder.embed([query])[0]
+        d = self.dense.search(qv, m)
+        s_scores, s_ids = self.sparse.search(query, m)
+        if self.fusion == "rrf":
+            scores, ids = rrf_fuse([(d.scores, d.passage_ids), (s_scores, s_ids)], k)
+        else:
+            scores, ids = weighted_fuse((d.scores, d.passage_ids), (s_scores, s_ids), k, w_dense=self.w_dense)
+        # Confidence stays cosine-based (comparable across retrievers).
+        dense_by_id = {int(i): float(s) for s, i in zip(d.scores, d.passage_ids)}
+        conf_scores = np.array([dense_by_id.get(int(i), 0.0) for i in ids], np.float32)
+        return SearchResult(ids, conf_scores if self.fusion == "rrf" else scores)

@@ -1,0 +1,136 @@
+"""Dense MIPS retrieval index — the framework's FAISS role (paper §V.E).
+
+``DenseIndex`` holds L2-normalized passage embeddings so inner product ==
+cosine similarity ("FAISS inner-product index", §V.E). Three search paths:
+
+* :meth:`search` — single-device exact MIPS: blocked matmul + running top-k
+  (``topk.blocked_topk``); the Pallas ``mips_topk`` kernel slots in here via
+  ``scorer="pallas"`` on TPU.
+* :meth:`sharded_search` — corpus rows sharded over mesh axes with
+  ``shard_map``; per-shard local top-k then hierarchical merge
+  (``topk.distributed_topk``). This is the production path and the
+  ``retrieval_cand`` dry-run cell.
+* IVF approximate search lives in ``ivf.py`` and reuses this index's vectors.
+
+Retrieval confidence = max similarity among returned hits (paper §VI.B),
+logged per query and consumed by the low-confidence guardrail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.chunking import Passage
+from repro.retrieval.embedder import Embedder
+from repro.retrieval.topk import blocked_topk, distributed_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Hits for one query, descending by score."""
+
+    passage_ids: np.ndarray  # (k,) int32
+    scores: np.ndarray  # (k,) float32
+
+    @property
+    def confidence(self) -> float:
+        """Max cosine similarity — the paper's retrieval confidence."""
+        return float(self.scores[0]) if self.scores.size else float("nan")
+
+
+def l2_normalize(x: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+class DenseIndex:
+    """Exact MIPS index over passage embeddings."""
+
+    def __init__(self, embeddings: jnp.ndarray, passages: Sequence[Passage] | None = None):
+        if embeddings.ndim != 2:
+            raise ValueError(f"embeddings must be (n, d), got {embeddings.shape}")
+        self.embeddings = l2_normalize(jnp.asarray(embeddings, jnp.float32))
+        self.passages = list(passages) if passages is not None else None
+        if self.passages is not None and len(self.passages) != embeddings.shape[0]:
+            raise ValueError("passages/embeddings length mismatch")
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def build(cls, passages: Sequence[Passage], embedder: Embedder) -> tuple["DenseIndex", int]:
+        """Embed passages once and build the index (paper: "The corpus is
+        embedded once; all queries share the same FAISS index").
+
+        Returns (index, index_embedding_tokens) — the offline billing
+        bookkeeping of §V.D.
+        """
+        texts = [p.text for p in passages]
+        emb = embedder.embed(texts)
+        return cls(emb, passages), embedder.billed_tokens(texts)
+
+    @property
+    def size(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    # -- single-device search ---------------------------------------------------
+    def search_batch(self, query_vecs: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(nq, d) → (scores (nq,k), ids (nq,k)); jit-compatible."""
+        k = min(k, self.size)
+        q = l2_normalize(jnp.asarray(query_vecs, jnp.float32))
+        scores = q @ self.embeddings.T  # (nq, n)
+        return blocked_topk(scores, k)
+
+    def search(self, query_vec: jnp.ndarray, k: int) -> SearchResult:
+        scores, ids = self.search_batch(jnp.asarray(query_vec)[None, :], k)
+        return SearchResult(np.asarray(ids[0], np.int32), np.asarray(scores[0], np.float32))
+
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        if self.passages is None:
+            raise ValueError("index built without passage payloads")
+        return [self.passages[int(i)] for i in ids]
+
+    # -- distributed search -------------------------------------------------------
+    def sharded_search_fn(self, mesh: jax.sharding.Mesh, k: int, shard_axes: tuple[str, ...]):
+        """Build a shard_map'd exact search over corpus rows.
+
+        Corpus rows are sharded over ``shard_axes`` (e.g. ``("data","model")``
+        → 256-way row sharding); queries are replicated; each shard computes
+        a local blocked top-k and the k-candidate lists merge with one
+        all-gather per axis. Returns ``fn(corpus, queries) -> (scores, ids)``
+        with global ids.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+        corpus_spec = P(shard_axes, None)
+        out_spec = P(None, None)
+
+        def local_search(corpus_shard: jnp.ndarray, queries: jnp.ndarray):
+            # global row offset of this shard
+            idx = jax.lax.axis_index(shard_axes)
+            rows = corpus_shard.shape[0]
+            queries = l2_normalize(queries)  # cosine, matching search_batch
+            scores = queries @ corpus_shard.T  # (nq, rows_local)
+            v, i = blocked_topk(scores, min(k, rows))
+            i = i + idx * rows  # globalize
+            for ax in shard_axes:
+                v, i = distributed_topk(v, i, k, ax)
+            return v, i
+
+        return jax.jit(
+            jax.shard_map(
+                local_search,
+                mesh=mesh,
+                in_specs=(corpus_spec, P(None, None)),
+                out_specs=(out_spec, out_spec),
+                check_vma=False,
+            )
+        ), n_shards

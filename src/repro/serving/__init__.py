@@ -1,0 +1,5 @@
+"""Serving layer: RAG engine, scheduler, billing, latency model, experiment CLI."""
+from repro.serving.billing import BillingLedger, TokenBill, bill_query
+from repro.serving.engine import EngineConfig, EngineResponse, RAGEngine, build_paper_engine
+from repro.serving.generator import ExtractiveGenerator, LMGenerator, build_prompt
+from repro.serving.latency import LatencyModel, LatencyModelConfig

@@ -1,0 +1,244 @@
+"""The CA-RAG serving engine: route → retrieve → generate → log (paper §IV).
+
+One :class:`RAGEngine` wires the whole pipeline:
+
+    1. signal extraction      (core/signals)
+    2. utility estimation     (core/utility, + telemetry-refined priors)
+    3. bundle selection       (core/router; policy-injected)
+    4. retrieval              (retrieval/DenseIndex or HybridRetriever)
+    5. generation             (serving/generator)
+    6. telemetry logging      (core/telemetry, Appendix-F CSV schema)
+
+plus the §VIII guardrails between 3→4 and 4→5. Every query produces an
+auditable QueryRecord; benchmarks read only the CSV artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
+from repro.core.guardrails import GuardrailConfig, Guardrails
+from repro.core.router import Router
+from repro.core.telemetry import QueryRecord, TelemetryStore
+from repro.core.utility import RealizedNormalization, realized_utility
+from repro.retrieval.chunking import Passage, line_passages
+from repro.retrieval.embedder import Embedder, HashedNGramEmbedder
+from repro.retrieval.index import DenseIndex
+from repro.retrieval.tokenizer import lexical_overlap
+from repro.serving.billing import BillingLedger, bill_query
+from repro.serving.generator import ExtractiveGenerator, Generator, build_prompt
+from repro.serving.latency import LatencyModel
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    use_telemetry_refinement: bool = True
+    telemetry_min_volume: int = 2
+    telemetry_blend: float = 0.35
+    # Start from the engine's structural latency/cost predictions instead of
+    # the naive Table-I priors (used for the weight-sensitivity analysis,
+    # where the operator tunes weights with knowledge of the deployed
+    # system's behaviour — paper §VIII.D):
+    warm_start_telemetry: bool = False
+    guardrails: GuardrailConfig = GuardrailConfig()
+    realized_norm: RealizedNormalization = RealizedNormalization()
+    measure_wallclock: bool = False  # also record real pipeline wall time
+
+
+@dataclasses.dataclass
+class EngineResponse:
+    answer: str
+    record: QueryRecord
+    passages: list[str]
+    wallclock_ms: float | None = None
+
+
+class RAGEngine:
+    def __init__(
+        self,
+        router: Router,
+        index: DenseIndex,
+        embedder: Embedder,
+        generator: Generator | None = None,
+        latency_model: LatencyModel | None = None,
+        *,
+        catalog: BundleCatalog = DEFAULT_CATALOG,
+        config: EngineConfig = EngineConfig(),
+        index_embedding_tokens: int = 0,
+    ):
+        self.router = router
+        self.index = index
+        self.embedder = embedder
+        self.generator = generator or ExtractiveGenerator()
+        self.latency_model = latency_model or LatencyModel()
+        self.catalog = catalog
+        self.config = config
+        struct_lat, struct_cost = self._structural_predictions()
+        self.telemetry = TelemetryStore(
+            catalog,
+            min_volume=config.telemetry_min_volume,
+            blend=config.telemetry_blend,
+            structural_latency=struct_lat,
+            structural_cost=struct_cost,
+        )
+        self.guardrails = Guardrails(catalog, config.guardrails)
+        self.ledger = BillingLedger(index_embedding_tokens)
+        self._query_counter = 0
+
+    # ------------------------------------------------------------------ #
+    def _structural_predictions(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-bundle end-to-end (latency_ms, billed_tokens) predicted from
+        the engine's own latency model + prompt-template token structure.
+
+        This is what a production deployment calibrates before launch; the
+        telemetry EMAs then correct residual modeling error (§IV.A step 2).
+        """
+        base_prompt = 28  # grounded template + question tokens
+        direct_prompt = 16
+        tokens_per_passage = 19  # corpus line + citation tag
+        embed_tokens = 8
+        grounded_completion = 80  # context-constrained answers
+        direct_completion = 170  # unconstrained answers run long (§VII.B)
+        lat, cost = [], []
+        for b in self.catalog:
+            if b.skip_retrieval:
+                prompt = direct_prompt
+                completion = direct_completion
+                emb = 0
+            else:
+                prompt = base_prompt + tokens_per_passage * b.top_k
+                emb = embed_tokens
+                completion = grounded_completion
+            stages = self.latency_model.stages_ms(
+                embed_tokens=emb,
+                retrieval_k=b.top_k,
+                prompt_tokens=prompt,
+                completion_tokens=completion,
+            )
+            lat.append(sum(stages.values()))
+            cost.append(prompt + completion + emb)
+        return np.asarray(lat, np.float64), np.asarray(cost, np.float64)
+
+    def _priors(self):
+        if not self.config.use_telemetry_refinement:
+            return None, None
+        if self.config.warm_start_telemetry and not self.telemetry.refinement_active:
+            return (
+                np.asarray(self.telemetry.structural_latency, np.float32),
+                np.asarray(self.telemetry.structural_cost, np.float32),
+            )
+        return (
+            self.telemetry.refined_latency_priors().astype(np.float32),
+            self.telemetry.refined_cost_priors().astype(np.float32),
+        )
+
+    def answer(self, query: str, *, reference: str | None = None) -> EngineResponse:
+        t0 = time.perf_counter()
+        qid = self._query_counter
+        self._query_counter += 1
+
+        # 1-3: signals → utilities (telemetry-refined) → selection
+        lat_prior, cost_prior = self._priors()
+        decision = self.router.route(
+            query, latency_override=lat_prior, cost_override=cost_prior
+        )[0]
+        bundle_idx = decision.bundle_index
+
+        # guardrail: cost ceiling before spending tokens
+        pre = self.guardrails.pre_execution(bundle_idx)
+        bundle_idx = pre.bundle_index
+        bundle = self.catalog[bundle_idx]
+
+        # 4: retrieval
+        passages: list[str] = []
+        confidence = float("nan")
+        embedded_texts: list[str] = []
+        if not bundle.skip_retrieval:
+            qv = self.embedder.embed([query])[0]
+            embedded_texts.append(query)
+            result = self.index.search(qv, bundle.top_k)
+            confidence = result.confidence
+            # guardrail: low-confidence fallback to direct
+            post = self.guardrails.post_retrieval(bundle_idx, confidence)
+            if post.demoted:
+                bundle_idx = post.bundle_index
+                bundle = self.catalog[bundle_idx]
+                passages = []
+            else:
+                passages = [p.text for p in self.index.get_passages(result.passage_ids)]
+
+        # 5: generation
+        prompt = build_prompt(query, passages)
+        answer = self.generator.generate(query, passages, bundle.generation, query_id=qid)
+
+        # 6: telemetry + billing
+        bill = bill_query(prompt, answer, embedded_texts)
+        self.ledger.add(bill)
+        latency_ms = self.latency_model.sample_ms(
+            query_id=qid,
+            embed_tokens=bill.embedding_tokens,
+            retrieval_k=bundle.top_k,
+            prompt_tokens=bill.prompt_tokens,
+            completion_tokens=bill.completion_tokens,
+        )
+        quality = lexical_overlap(answer, reference) if reference is not None else float("nan")
+        realized = float(
+            realized_utility(
+                np.float32(quality if reference is not None else 0.0),
+                np.float32(latency_ms),
+                np.float32(bill.total),
+                weights=self.router.config.weights,
+                norm=self.config.realized_norm,
+            )
+        )
+        record = QueryRecord(
+            query=query,
+            strategy=bundle.name,
+            bundle=bundle.name,
+            utility=decision.selection_utility,
+            quality_proxy=quality,
+            realized_utility=realized,
+            latency=latency_ms,
+            prompt_tokens=bill.prompt_tokens,
+            completion_tokens=bill.completion_tokens,
+            embedding_tokens=bill.embedding_tokens,
+            retrieval_confidence=confidence,
+            complexity_score=decision.complexity,
+            index_embedding_tokens=self.ledger.index_embedding_tokens if qid == 0 else 0,
+        )
+        self.telemetry.log(record)
+        wall = (time.perf_counter() - t0) * 1000 if self.config.measure_wallclock else None
+        return EngineResponse(answer=answer, record=record, passages=passages, wallclock_ms=wall)
+
+    def run(self, queries: Sequence[str], references: Sequence[str] | None = None) -> TelemetryStore:
+        refs = references if references is not None else [None] * len(queries)
+        for q, r in zip(queries, refs):
+            self.answer(q, reference=r)
+        return self.telemetry
+
+
+def build_paper_engine(
+    policy_router: Router,
+    *,
+    embed_dim: int = 256,
+    config: EngineConfig = EngineConfig(),
+) -> RAGEngine:
+    """Engine wired to the paper's benchmark corpus (Appendix E)."""
+    from repro.data.benchmark import corpus_document
+
+    embedder = HashedNGramEmbedder(dim=embed_dim)
+    passages = line_passages(corpus_document())
+    index, index_tokens = DenseIndex.build(passages, embedder)
+    return RAGEngine(
+        policy_router,
+        index,
+        embedder,
+        catalog=policy_router.catalog,
+        config=config,
+        index_embedding_tokens=index_tokens,
+    )

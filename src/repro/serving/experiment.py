@@ -1,0 +1,109 @@
+"""The paper's experiment CLI (``ca-rag-experiment`` analogue).
+
+Runs one policy over a (documents, questions) pair and writes the
+Appendix-F CSV. The full paper benchmark (7 policies × 28 queries) is
+``run_all_policies`` / ``python -m repro.serving.experiment --all``.
+
+    python -m repro.serving.experiment --policy router_default \
+        --out results/router_default.csv
+    python -m repro.serving.experiment --mode fixed --fixed-strategy heavy_rag \
+        --out results/fixed_heavy.csv
+    python -m repro.serving.experiment --latency-weight 0.5 --out results/router_latency.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+from repro.core.policies import POLICIES, make_policy
+from repro.core.router import RouterConfig
+from repro.core.telemetry import TelemetryStore
+from repro.core.utility import UtilityWeights
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.serving.engine import EngineConfig, build_paper_engine
+
+RESULTS_DIR = "results"
+
+POLICY_TO_CSV = {
+    "router_default": "router_default.csv",
+    "router_latency_sensitive": "router_latency.csv",
+    "router_cost_sensitive": "router_cost.csv",
+    "fixed_direct": "fixed_direct.csv",
+    "fixed_light": "fixed_light.csv",
+    "fixed_medium": "fixed_medium.csv",
+    "fixed_heavy": "fixed_heavy.csv",
+}
+
+
+def run_policy(
+    policy_name: str,
+    *,
+    queries=BENCHMARK_QUERIES,
+    references=REFERENCE_ANSWERS,
+    router_config: RouterConfig = RouterConfig(),
+    engine_config: EngineConfig = EngineConfig(),
+    out_csv: str | None = None,
+) -> TelemetryStore:
+    router = make_policy(policy_name, config=router_config)
+    engine = build_paper_engine(router, config=engine_config)
+    telemetry = engine.run(list(queries), list(references))
+    if out_csv:
+        telemetry.to_csv(out_csv)
+    return telemetry
+
+
+def run_all_policies(results_dir: str = RESULTS_DIR, **kwargs) -> dict[str, TelemetryStore]:
+    os.makedirs(results_dir, exist_ok=True)
+    out = {}
+    for name, csv_name in POLICY_TO_CSV.items():
+        out[name] = run_policy(name, out_csv=os.path.join(results_dir, csv_name), **kwargs)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="ca-rag-experiment")
+    ap.add_argument("--policy", default="router_default", choices=sorted(POLICIES))
+    ap.add_argument("--mode", default="router", choices=["router", "fixed"])
+    ap.add_argument("--fixed-strategy", default="heavy_rag")
+    ap.add_argument("--latency-weight", type=float, default=None)
+    ap.add_argument("--cost-weight", type=float, default=None)
+    ap.add_argument("--quality-weight", type=float, default=None)
+    ap.add_argument("--out", default="results/router_default.csv")
+    ap.add_argument("--all", action="store_true", help="run all 7 paper policies")
+    ap.add_argument("--no-telemetry-refinement", action="store_true")
+    args = ap.parse_args()
+
+    engine_config = EngineConfig(use_telemetry_refinement=not args.no_telemetry_refinement)
+
+    if args.all:
+        stores = run_all_policies(os.path.dirname(args.out) or RESULTS_DIR, engine_config=engine_config)
+        for name, t in stores.items():
+            print(f"{name}: {t.summary_json()}")
+        return
+
+    policy = args.policy
+    if args.mode == "fixed":
+        policy = {
+            "direct_llm": "fixed_direct",
+            "light_rag": "fixed_light",
+            "medium_rag": "fixed_medium",
+            "heavy_rag": "fixed_heavy",
+        }[args.fixed_strategy]
+
+    router_config = RouterConfig()
+    if any(w is not None for w in (args.latency_weight, args.cost_weight, args.quality_weight)):
+        w = UtilityWeights(
+            quality=args.quality_weight if args.quality_weight is not None else 0.6,
+            latency=args.latency_weight if args.latency_weight is not None else 0.2,
+            cost=args.cost_weight if args.cost_weight is not None else 0.2,
+        )
+        router_config = dataclasses.replace(router_config, weights=w)
+
+    t = run_policy(policy, router_config=router_config, engine_config=engine_config, out_csv=args.out)
+    print(t.summary_json())
+
+
+if __name__ == "__main__":
+    main()

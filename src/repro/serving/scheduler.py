@@ -1,0 +1,158 @@
+"""Routing-aware continuous-batching scheduler for LLM serving.
+
+The production serving loop around the router: requests are routed on
+arrival (bundle choice fixes their retrieval work and generation budget),
+admitted into the decode batch as slots and KV pages allow, and decoded one
+token per step for all active sequences simultaneously (continuous batching
+— finished sequences free their slot immediately, new requests join without
+draining the batch).
+
+Host-side simulation-friendly: the decode function is injected
+(``decode_fn(tokens, state) → (next_tokens, done_mask, state)``), so tests
+drive it with a tiny real model (models/transformer.decode_step) or a stub.
+Admission control = free slots ∧ free KV pages (models/kvcache.PageAllocator
+bookkeeping) ∧ per-bundle token budgets. The scheduler emits per-request
+metrics (queue wait, time-to-first-token steps, decode steps) — the latency
+telemetry a deployed CA-RAG feeds back into routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable
+
+from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
+from repro.models.kvcache import PageAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    query: str
+    bundle_name: str
+    prompt_tokens: int
+    max_new_tokens: int
+    arrived_step: int = 0
+    # filled by the scheduler:
+    admitted_step: int | None = None
+    finished_step: int | None = None
+    generated: int = 0
+
+    @property
+    def queue_wait(self) -> int | None:
+        return None if self.admitted_step is None else self.admitted_step - self.arrived_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch_slots: int = 8
+    page_size: int = 16
+    n_pages: int = 256
+    max_queue: int = 1024
+
+
+class ContinuousBatchScheduler:
+    """Slot + page admission, FIFO per-bundle queues, one token per step."""
+
+    def __init__(
+        self,
+        config: SchedulerConfig = SchedulerConfig(),
+        catalog: BundleCatalog = DEFAULT_CATALOG,
+    ):
+        self.config = config
+        self.catalog = catalog
+        self.queues: dict[str, deque[Request]] = {n: deque() for n in catalog.names}
+        self.active: dict[int, Request] = {}
+        self.allocator = PageAllocator(config.n_pages)
+        self.step_count = 0
+        self.completed: list[Request] = []
+        self._rr = 0  # round-robin cursor over bundle queues
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        q = self.queues[req.bundle_name]
+        if sum(len(x) for x in self.queues.values()) >= self.config.max_queue:
+            return False
+        req.arrived_step = self.step_count
+        q.append(req)
+        return True
+
+    def _pages_needed(self, req: Request) -> int:
+        total = req.prompt_tokens + req.max_new_tokens
+        return -(-total // self.config.page_size)
+
+    # -- admission ------------------------------------------------------------
+    def _admit(self) -> list[Request]:
+        admitted = []
+        names = list(self.queues)
+        checked = 0
+        while len(self.active) < self.config.max_batch_slots and checked < len(names):
+            name = names[self._rr % len(names)]
+            self._rr += 1
+            checked += 1
+            q = self.queues[name]
+            if not q:
+                continue
+            req = q[0]
+            need = self._pages_needed(req)
+            if need > self.allocator.n_free:
+                continue  # page-bound: leave queued
+            q.popleft()
+            self.allocator.alloc(req.request_id, need)
+            req.admitted_step = self.step_count
+            self.active[req.request_id] = req
+            admitted.append(req)
+            checked = 0  # keep round-robining while slots remain
+        return admitted
+
+    # -- one decode step -----------------------------------------------------
+    def step(self, decode_fn: Callable[[list[Request]], list[bool]]) -> dict:
+        """Admit, decode one token for all active, retire finished.
+
+        ``decode_fn(active_requests)`` returns a done flag per request
+        (EOS); budget exhaustion is enforced by the scheduler.
+        """
+        admitted = self._admit()
+        active = list(self.active.values())
+        done_flags = decode_fn(active) if active else []
+        finished = []
+        for req, eos in zip(active, done_flags):
+            req.generated += 1
+            if eos or req.generated >= req.max_new_tokens:
+                req.finished_step = self.step_count
+                finished.append(req)
+        for req in finished:
+            del self.active[req.request_id]
+            self.allocator.free_seq(req.request_id)
+            self.completed.append(req)
+        self.step_count += 1
+        return {
+            "step": self.step_count - 1,
+            "admitted": len(admitted),
+            "active": len(self.active),
+            "finished": len(finished),
+            "free_pages": self.allocator.n_free,
+            "queued": sum(len(q) for q in self.queues.values()),
+        }
+
+    def run_until_drained(self, decode_fn, *, max_steps: int = 100_000) -> list[dict]:
+        history = []
+        while (self.active or any(self.queues.values())) and len(history) < max_steps:
+            history.append(self.step(decode_fn))
+        return history
+
+    # -- metrics ------------------------------------------------------------
+    def summary(self) -> dict:
+        if not self.completed:
+            return {"completed": 0}
+        waits = [r.queue_wait for r in self.completed]
+        decode_steps = [r.finished_step - r.admitted_step + 1 for r in self.completed]
+        return {
+            "completed": len(self.completed),
+            "mean_queue_wait_steps": sum(waits) / len(waits),
+            "max_queue_wait_steps": max(waits),
+            "mean_decode_steps": sum(decode_steps) / len(decode_steps),
+            "total_steps": self.step_count,
+        }

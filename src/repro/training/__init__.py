@@ -1,0 +1,24 @@
+"""Training substrate: optimizers, train loop, checkpointing, fault
+tolerance, gradient compression, data pipeline."""
+
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import Int8Compressor, TopKCompressor, compressed_psum
+from repro.training.data import LMDataConfig, Prefetcher, TokenStream, pack_documents
+from repro.training.fault_tolerance import (
+    HeartbeatMonitor,
+    RestartSupervisor,
+    StragglerDetector,
+    TrainingFailure,
+)
+from repro.training.optimizer import (
+    AdamWConfig,
+    SGDConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    make_adamw,
+    make_sgd,
+    warmup_cosine,
+)
+from repro.training.train_loop import TrainStepConfig, make_train_step, microbatch

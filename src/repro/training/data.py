@@ -1,0 +1,141 @@
+"""Data pipeline: deterministic synthetic streams + batching + prefetch.
+
+Offline container ⇒ corpora are synthesized, but the pipeline shape is
+production-grade: seeded shard-aware generators (each DP shard draws a
+disjoint substream), sequence packing for LM training, host-side prefetch
+with a bounded queue, and per-model batch synthesizers matching the assigned
+input shapes (LM tokens, DLRM dense+sparse, MIND/SASRec histories, GIN
+graphs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+
+
+class TokenStream:
+    """Deterministic token stream with Zipf-ish unigram statistics.
+
+    ``shard(i, n)`` gives shard i of n a disjoint substream (fold the shard
+    index into the seed) — the DP data-sharding contract.
+    """
+
+    def __init__(self, cfg: LMDataConfig, shard_index: int = 0, n_shards: int = 1):
+        self.cfg = cfg
+        self.rng = np.random.default_rng((cfg.seed * 1_000_003 + shard_index) % (2**63))
+        self.n_shards = n_shards
+        # Zipf-like distribution over vocab (bounded support)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.p = p / p.sum()
+
+    def batches(self) -> Iterator[dict]:
+        c = self.cfg
+        while True:
+            tokens = self.rng.choice(c.vocab, size=(c.batch, c.seq_len + 1), p=self.p)
+            yield {
+                "tokens": tokens[:, :-1].astype(np.int32),
+                "targets": tokens[:, 1:].astype(np.int32),
+            }
+
+
+def pack_documents(docs: list[np.ndarray], seq_len: int, pad_id: int = 0) -> np.ndarray:
+    """Pack variable-length token docs into fixed (n, seq_len) rows
+    (greedy first-fit in arrival order, split long docs)."""
+    rows: list[np.ndarray] = []
+    cur: list[np.ndarray] = []
+    cur_len = 0
+    for d in docs:
+        d = np.asarray(d)
+        while d.size:
+            space = seq_len - cur_len
+            take = min(space, d.size)
+            cur.append(d[:take])
+            cur_len += take
+            d = d[take:]
+            if cur_len == seq_len:
+                rows.append(np.concatenate(cur))
+                cur, cur_len = [], 0
+    if cur_len:
+        tail = np.concatenate(cur)
+        rows.append(np.pad(tail, (0, seq_len - cur_len), constant_values=pad_id))
+    return np.stack(rows) if rows else np.zeros((0, seq_len), np.int32)
+
+
+class Prefetcher:
+    """Host-side bounded prefetch queue around any batch iterator."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.it = it
+        self.thread = threading.Thread(target=self._fill, daemon=True)
+        self.thread.start()
+
+    def _fill(self):
+        try:
+            for item in self.it:
+                self.q.put(item)
+        finally:
+            self.q.put(self._SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is self._SENTINEL:
+            raise StopIteration
+        return item
+
+
+# --------------------------------------------------------------------------- #
+# Per-family batch synthesizers (smoke tests + benchmarks + dry-run feeding)    #
+# --------------------------------------------------------------------------- #
+def synth_lm_batch(rng: np.random.Generator, batch: int, seq: int, vocab: int) -> dict:
+    t = rng.integers(0, vocab, (batch, seq + 1))
+    return {"tokens": t[:, :-1].astype(np.int32), "targets": t[:, 1:].astype(np.int32)}
+
+
+def synth_dlrm_batch(rng: np.random.Generator, batch: int, vocab_sizes) -> dict:
+    return {
+        "dense": rng.normal(size=(batch, 13)).astype(np.float32),
+        "sparse_ids": np.stack(
+            [rng.integers(0, v, batch) for v in vocab_sizes], axis=1
+        ).astype(np.int32),
+        "labels": rng.integers(0, 2, batch).astype(np.float32),
+    }
+
+
+def synth_mind_batch(rng: np.random.Generator, batch: int, hist_len: int, n_items: int, n_neg: int) -> dict:
+    lengths = rng.integers(1, hist_len + 1, batch)
+    hist = rng.integers(0, n_items, (batch, hist_len)).astype(np.int32)
+    mask = (np.arange(hist_len)[None, :] < lengths[:, None]).astype(np.float32)
+    return {
+        "hist_ids": hist,
+        "hist_mask": mask,
+        "target_ids": rng.integers(0, n_items, batch).astype(np.int32),
+        "neg_ids": rng.integers(0, n_items, n_neg).astype(np.int32),
+    }
+
+
+def synth_sasrec_batch(rng: np.random.Generator, batch: int, seq_len: int, n_items: int) -> dict:
+    return {
+        "seq_ids": rng.integers(1, n_items + 1, (batch, seq_len)).astype(np.int32),
+        "pos_ids": rng.integers(1, n_items + 1, (batch, seq_len)).astype(np.int32),
+        "neg_ids": rng.integers(1, n_items + 1, (batch, seq_len)).astype(np.int32),
+    }

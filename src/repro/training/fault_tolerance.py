@@ -1,0 +1,144 @@
+"""Fault tolerance: restart supervision, heartbeats, straggler mitigation.
+
+On a 1000+-node cluster the failure model is: hosts die (checkpoint/restart),
+hosts slow down (stragglers), and topology changes between restarts (elastic
+rescale — handled by checkpoint.restore's sharding_fn). This module provides
+the host-side supervision:
+
+* :class:`RestartSupervisor` — run a training loop with automatic restore
+  from the latest complete checkpoint after a (simulated or real) failure;
+  bounded restart budget; exercised end-to-end in tests.
+* :class:`HeartbeatMonitor` — per-worker liveness with deadline detection.
+* :class:`StragglerDetector` — per-worker step-time EMA; flags workers
+  slower than ``threshold ×`` the fleet median; the mitigation hook (e.g.
+  re-shard, drop to standby) is injectable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.training.checkpoint import CheckpointManager
+
+
+class TrainingFailure(Exception):
+    """Injected or detected worker failure."""
+
+
+@dataclasses.dataclass
+class RestartReport:
+    completed_steps: int
+    restarts: int
+    restored_from: list[int]
+
+
+class RestartSupervisor:
+    """Checkpoint/restart driver around a step function.
+
+    ``init_fn() → state``; ``step_fn(state, step) → state`` (may raise
+    TrainingFailure); state must be a checkpointable pytree.
+    """
+
+    def __init__(
+        self,
+        manager: CheckpointManager,
+        *,
+        checkpoint_every: int = 10,
+        max_restarts: int = 5,
+    ):
+        self.manager = manager
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+
+    def run(
+        self,
+        init_fn: Callable[[], object],
+        step_fn: Callable[[object, int], object],
+        total_steps: int,
+        *,
+        sharding_fn=None,
+    ) -> tuple[object, RestartReport]:
+        restarts = 0
+        restored_from: list[int] = []
+        state = init_fn()
+        start = 0
+        latest = self.manager.latest_step()
+        if latest is not None:
+            state, _ = self.manager.restore(state, step=latest, sharding_fn=sharding_fn)
+            start = latest
+            restored_from.append(latest)
+
+        step = start
+        while step < total_steps:
+            try:
+                state = step_fn(state, step)
+                step += 1
+                if step % self.checkpoint_every == 0 or step == total_steps:
+                    self.manager.save(step, state)
+            except TrainingFailure:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.manager.latest_step()
+                fresh = init_fn()
+                if latest is not None:
+                    state, _ = self.manager.restore(fresh, step=latest, sharding_fn=sharding_fn)
+                    step = latest
+                    restored_from.append(latest)
+                else:
+                    state, step = fresh, 0
+        return state, RestartReport(step, restarts, restored_from)
+
+
+class HeartbeatMonitor:
+    """Deadline-based liveness: workers beat(); monitor reports the dead."""
+
+    def __init__(self, worker_ids, *, timeout_s: float = 60.0, clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        now = clock()
+        self.last_beat = {w: now for w in worker_ids}
+
+    def beat(self, worker_id):
+        self.last_beat[worker_id] = self.clock()
+
+    def dead_workers(self) -> list:
+        now = self.clock()
+        return [w for w, t in self.last_beat.items() if now - t > self.timeout_s]
+
+    def all_alive(self) -> bool:
+        return not self.dead_workers()
+
+
+class StragglerDetector:
+    """Flags workers whose step-time EMA exceeds threshold × fleet median."""
+
+    def __init__(self, worker_ids, *, ema_beta: float = 0.8, threshold: float = 1.5, min_samples: int = 3):
+        self.ema_beta = ema_beta
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.ema = {w: None for w in worker_ids}
+        self.counts = {w: 0 for w in worker_ids}
+
+    def record(self, worker_id, step_time_s: float):
+        prev = self.ema[worker_id]
+        self.ema[worker_id] = (
+            step_time_s if prev is None else self.ema_beta * prev + (1 - self.ema_beta) * step_time_s
+        )
+        self.counts[worker_id] += 1
+
+    def stragglers(self) -> list:
+        ready = {w: e for w, e in self.ema.items() if e is not None and self.counts[w] >= self.min_samples}
+        if len(ready) < 2:
+            return []
+        med = float(np.median(list(ready.values())))
+        return [w for w, e in ready.items() if e > self.threshold * med]
+
+    def mitigation_plan(self) -> dict:
+        """What a scheduler would do: reassign straggler shards to spares."""
+        s = self.stragglers()
+        return {"stragglers": s, "action": "reassign" if s else "none"}

@@ -1,0 +1,233 @@
+"""Optimizers in pure JAX: AdamW (f32 or int8-quantized moments), SGD,
+schedules, global-norm clipping.
+
+The int8 moment path (Dettmers-style blockwise quantization, block = 2048
+flattened elements with per-block absmax scales) is what lets the 1T-param
+kimi-k2 config's optimizer state fit 16 GB/chip HBM at 512 chips: moments go
+from 8 bytes/param (2×f32) to ~2 bytes/param (2×int8 + scales/2048). This is
+a first-class distributed-optimization feature, exercised by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 2048
+
+
+# --------------------------------------------------------------------------- #
+# Blockwise int8 quantization                                                  #
+# --------------------------------------------------------------------------- #
+class Quantized(NamedTuple):
+    q: jnp.ndarray  # int8, original shape
+    scale: jnp.ndarray  # f32, (*leading_dims, ceil(last/QBLOCK))
+
+
+def quantize_blockwise(x: jnp.ndarray) -> Quantized:
+    """Blockwise int8 along the LAST axis only.
+
+    Blocking the last axis (instead of a global flatten) keeps every
+    leading dim — and therefore the tensor's SPMD sharding — intact; a
+    flatten/reshape across sharded dims forces XLA to re-gather the full
+    tensor per device (measured as multi-TB temps on the 1T-param config).
+    """
+    x32 = x.astype(jnp.float32)
+    shape = x32.shape
+    last = shape[-1] if shape else 1
+    flat = x32.reshape(*shape[:-1], last) if shape else x32.reshape(1)
+    pad = (-last) % QBLOCK
+    if pad:
+        pad_widths = [(0, 0)] * (len(shape) - 1) + [(0, pad)]
+        flat = jnp.pad(flat, pad_widths)
+    nb = (last + pad) // QBLOCK
+    blocks = flat.reshape(*shape[:-1], nb, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0  # (*lead, nb)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*shape[:-1], last + pad)[..., :last]
+    return Quantized(q=q, scale=scale)
+
+
+def dequantize_blockwise(qx: Quantized, shape) -> jnp.ndarray:
+    shape = tuple(shape)
+    last = shape[-1] if shape else 1
+    pad = (-last) % QBLOCK
+    flat = qx.q.astype(jnp.float32)
+    if pad:
+        pad_widths = [(0, 0)] * (len(shape) - 1) + [(0, pad)]
+        flat = jnp.pad(flat, pad_widths)
+    nb = (last + pad) // QBLOCK
+    blocks = flat.reshape(*shape[:-1], nb, QBLOCK)
+    safe = jnp.where(qx.scale > 0, qx.scale, 1.0)
+    out = blocks * safe[..., None]
+    return out.reshape(*shape[:-1], last + pad)[..., :last]
+
+
+# --------------------------------------------------------------------------- #
+# Schedules                                                                    #
+# --------------------------------------------------------------------------- #
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_lr(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Grad utilities                                                               #
+# --------------------------------------------------------------------------- #
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * factor).astype(x.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW                                                                        #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: float | None = 1.0
+    moment_dtype: str = "float32"  # float32 | int8
+
+    def lr_fn(self):
+        return self.lr if callable(self.lr) else constant_lr(self.lr)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zero_moment(p):
+        if cfg.moment_dtype == "int8":
+            return quantize_blockwise(jnp.zeros(p.shape, jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_moment, params),
+        "v": jax.tree.map(zero_moment, params),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr_fn()(step)
+    gnorm = global_norm(grads)
+    if cfg.max_grad_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
+
+    quantized = cfg.moment_dtype == "int8"
+
+    def leaf_update(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        if quantized:
+            m32 = dequantize_blockwise(m, p.shape)
+            v32 = dequantize_blockwise(v, p.shape)
+        else:
+            m32, v32 = m, v
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        if quantized:
+            return new_p, quantize_blockwise(m32), quantize_blockwise(v32)
+        return new_p, m32, v32
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    is_q = lambda x: isinstance(x, Quantized)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+    out = [leaf_update(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------------------- #
+# SGD (momentum)                                                               #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    max_grad_norm: float | None = None
+
+    def lr_fn(self):
+        return self.lr if callable(self.lr) else constant_lr(self.lr)
+
+
+def sgd_init(params, cfg: SGDConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def sgd_update(grads, state, params, cfg: SGDConfig):
+    step = state["step"] + 1
+    lr = cfg.lr_fn()(step)
+    gnorm = global_norm(grads)
+    if cfg.max_grad_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
+
+    def leaf(p, g, mom):
+        mom = cfg.momentum * mom + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * mom).astype(p.dtype), mom
+
+    flat = jax.tree.map(leaf, params, grads, state["mom"])
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "mom": new_mom}, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------------------- #
+# Optimizer facade                                                             #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def make_adamw(cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    return Optimizer(
+        init=lambda p: adamw_init(p, cfg),
+        update=lambda g, s, p: adamw_update(g, s, p, cfg),
+    )
+
+
+def make_sgd(cfg: SGDConfig = SGDConfig()) -> Optimizer:
+    return Optimizer(
+        init=lambda p: sgd_init(p, cfg),
+        update=lambda g, s, p: sgd_update(g, s, p, cfg),
+    )

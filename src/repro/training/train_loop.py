@@ -1,0 +1,84 @@
+"""Train-step factory: grads (+accumulation) → (compressed) reduction → update.
+
+``make_train_step(loss_fn, optimizer)`` returns a pure
+``step(params, opt_state, batch, *extras) → (params, opt_state, metrics)``
+suitable for jit/pjit. Features:
+
+* gradient accumulation over a leading microbatch axis (lax.scan — the
+  batch pytree is reshaped to (n_micro, micro, ...) by the caller or by
+  ``microbatch()``),
+* optional gradient-compression hook (training/compression.py) applied
+  before the (implicit, SPMD) DP reduction,
+* metrics: loss, grad norm, lr, plus whatever the loss returns as aux.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Optimizer
+
+
+def microbatch(batch, n_micro: int):
+    """Reshape every leaf (B, ...) → (n_micro, B/n_micro, ...)."""
+
+    def leaf(x):
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} not divisible by n_micro {n_micro}")
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(leaf, batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_microbatches: int = 1
+    compressor: object | None = None  # training/compression.py object
+    dp_axis: str | None = None  # axis name when used inside shard_map
+
+
+def make_train_step(
+    loss_fn: Callable,  # loss_fn(params, batch) → (loss, aux_dict)
+    optimizer: Optimizer,
+    config: TrainStepConfig = TrainStepConfig(),
+):
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if config.n_microbatches <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+
+        micro = microbatch(batch, config.n_microbatches)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, aux), grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), aux
+
+        zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), auxs = jax.lax.scan(body, (0.0, zero_grads), micro)
+        n = config.n_microbatches
+        grads = jax.tree.map(lambda g: g / n, grads_sum)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return loss_sum / n, aux, grads
+
+    def step(params, opt_state, batch, residual=None):
+        loss, aux, grads = compute_grads(params, batch)
+        if config.compressor is not None:
+            from repro.training.compression import compressed_psum
+
+            grads, residual = compressed_psum(grads, residual, config.compressor, config.dp_axis)
+        new_params, new_opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **opt_metrics, **{k: v for k, v in aux.items()}}
+        if config.compressor is not None:
+            return new_params, new_opt_state, residual, metrics
+        return new_params, new_opt_state, metrics
+
+    return step

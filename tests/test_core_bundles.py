@@ -1,0 +1,59 @@
+"""Tests for the strategy bundle catalog (paper Table I)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bundles import Bundle, BundleCatalog, DEFAULT_CATALOG, GenerationSpec
+
+
+def test_table_i_catalog_exact():
+    cat = DEFAULT_CATALOG
+    assert cat.names == ("direct_llm", "light_rag", "medium_rag", "heavy_rag")
+    assert [cat[n].top_k for n in cat.names] == [0, 3, 5, 10]
+    assert [cat[n].skip_retrieval for n in cat.names] == [True, False, False, False]
+    assert [cat[n].quality_prior for n in cat.names] == [0.52, 0.66, 0.74, 0.82]
+    assert [cat[n].latency_prior_ms for n in cat.names] == [8.0, 45.0, 60.0, 95.0]
+
+
+def test_shared_generation_spec():
+    # Paper §V.B: all bundles share paper_gen (256 max tokens, temp 0).
+    for b in DEFAULT_CATALOG:
+        assert b.generation == GenerationSpec(max_output_tokens=256, temperature=0.0)
+
+
+def test_as_arrays_shapes_and_order():
+    arrs = DEFAULT_CATALOG.as_arrays()
+    assert arrs["top_k"].shape == (4,)
+    np.testing.assert_array_equal(np.asarray(arrs["top_k"]), [0, 3, 5, 10])
+    assert arrs["quality_prior"].dtype == jnp.float32
+
+
+def test_indexing_by_name_and_position():
+    assert DEFAULT_CATALOG["medium_rag"] is DEFAULT_CATALOG[2]
+    assert DEFAULT_CATALOG.index_of("heavy_rag") == 3
+
+
+def test_invalid_bundles_rejected():
+    with pytest.raises(ValueError):
+        Bundle("bad", -1, False, 0.5, 10, 100)
+    with pytest.raises(ValueError):
+        Bundle("bad", 3, True, 0.5, 10, 100)  # skip_retrieval with top_k>0
+    with pytest.raises(ValueError):
+        Bundle("bad", 0, False, 0.5, 10, 100)  # retrieval bundle with k=0
+    with pytest.raises(ValueError):
+        Bundle("bad", 0, True, 1.5, 10, 100)  # quality prior out of range
+
+
+def test_duplicate_names_rejected():
+    b = DEFAULT_CATALOG[0]
+    with pytest.raises(ValueError):
+        BundleCatalog([b, b])
+
+
+def test_with_bundle_extends_catalog():
+    # §VIII.F: new bundles compose without touching the routing API.
+    rerank = Bundle("rerank_rag", 20, False, 0.88, 140.0, 420.0, depth_affinity=1.0)
+    cat2 = DEFAULT_CATALOG.with_bundle(rerank)
+    assert len(cat2) == 5 and cat2["rerank_rag"].top_k == 20
+    assert len(DEFAULT_CATALOG) == 4  # original untouched

@@ -1,0 +1,152 @@
+"""Tests for telemetry logging, EMA prior refinement and CSV round-trip."""
+
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.bundles import DEFAULT_CATALOG
+from repro.core.telemetry import CSV_FIELDS, BundleStats, QueryRecord, TelemetryStore
+
+
+def _rec(strategy="medium_rag", lat=1500.0, pt=150, ct=80, et=10, qual=0.8, util=0.25, q="q?"):
+    return QueryRecord(
+        query=q,
+        strategy=strategy,
+        bundle=strategy,
+        utility=util,
+        quality_proxy=qual,
+        realized_utility=0.1,
+        latency=lat,
+        prompt_tokens=pt,
+        completion_tokens=ct,
+        embedding_tokens=et,
+        retrieval_confidence=0.9 if strategy != "direct_llm" else float("nan"),
+        complexity_score=0.4,
+    )
+
+
+def test_eq2_token_billing():
+    r = _rec(pt=150, ct=80, et=12)
+    assert r.total_billed_tokens == 242  # Eq. 2
+
+
+def test_strategy_counts_and_means():
+    t = TelemetryStore()
+    t.extend([_rec("direct_llm", lat=4000.0), _rec("medium_rag", lat=1500.0), _rec("medium_rag", lat=1700.0)])
+    counts = t.strategy_counts()
+    assert counts["medium_rag"] == 2 and counts["direct_llm"] == 1
+    assert t.mean("latency") == pytest.approx((4000 + 1500 + 1700) / 3)
+    assert t.mean("cost") == pytest.approx(240.0)
+
+
+def test_ema_refinement_inverts_observed_ranking():
+    t = TelemetryStore(min_volume=1, blend=0.5)
+    # medium_rag observed much slower than heavy_rag (prior says the reverse)
+    for _ in range(5):
+        t.log(_rec("medium_rag", lat=5000.0))
+        t.log(_rec("heavy_rag", lat=1000.0))
+    lat = t.refined_latency_priors()
+    names = list(DEFAULT_CATALOG.names)
+    med, heavy = names.index("medium_rag"), names.index("heavy_rag")
+    # Eq. 1 consumes relative position: refined estimates must reflect the
+    # observed inversion (medium slower than heavy despite priors 60 < 95).
+    assert lat[med] > lat[heavy]
+
+
+def test_refinement_inactive_until_two_bundles():
+    t = TelemetryStore(min_volume=1)
+    assert not t.refinement_active
+    for _ in range(5):
+        t.log(_rec("medium_rag", lat=5000.0))
+    assert not t.refinement_active  # one bundle only → no relative info
+    np.testing.assert_allclose(
+        t.refined_latency_priors(), [b.latency_prior_ms for b in DEFAULT_CATALOG]
+    )
+    t.log(_rec("heavy_rag", lat=1000.0))
+    assert t.refinement_active
+
+
+def test_structural_predictions_used_for_unobserved():
+    t = TelemetryStore(
+        min_volume=1,
+        blend=0.0,
+        structural_latency=np.array([4000.0, 1900.0, 2000.0, 2200.0]),
+        structural_cost=np.array([240.0, 170.0, 210.0, 300.0]),
+    )
+    t.log(_rec("medium_rag", lat=2500.0))
+    t.log(_rec("heavy_rag", lat=2600.0))
+    lat = t.refined_latency_priors()
+    # observed bundles → EMA; unobserved → structural prediction
+    np.testing.assert_allclose(lat, [4000.0, 1900.0, 2500.0, 2600.0])
+
+
+def test_refinement_gated_by_min_volume():
+    t = TelemetryStore(min_volume=10)
+    t.log(_rec("medium_rag", lat=9999.0))
+    lat = t.refined_latency_priors()
+    np.testing.assert_allclose(
+        lat, [b.latency_prior_ms for b in DEFAULT_CATALOG], rtol=1e-9
+    )
+
+
+def test_refinement_disabled_flags():
+    t = TelemetryStore(refine_latency=False, refine_cost=False)
+    for _ in range(3):
+        t.log(_rec("light_rag", lat=9000.0, pt=900))
+        t.log(_rec("heavy_rag", lat=1.0, pt=1))
+    np.testing.assert_allclose(t.refined_latency_priors(), [8, 45, 60, 95])
+    np.testing.assert_allclose(t.refined_cost_priors(), [190, 215, 275, 360])
+
+
+def test_csv_roundtrip(tmp_path):
+    t = TelemetryStore()
+    t.extend([_rec("direct_llm"), _rec("heavy_rag", q="complex, with commas?")])
+    path = str(tmp_path / "log.csv")
+    text = t.to_csv(path)
+    assert text.splitlines()[0] == ",".join(CSV_FIELDS)  # Appendix F schema order
+    back = TelemetryStore.read_csv(path)
+    assert len(back) == 2
+    assert back[1].query == "complex, with commas?"
+    assert back[0].total_billed_tokens == t.records[0].total_billed_tokens
+    assert math.isnan(back[0].retrieval_confidence)
+
+
+def test_per_strategy_means_table_vi_shape():
+    t = TelemetryStore()
+    for s in ("direct_llm", "light_rag", "medium_rag", "heavy_rag"):
+        t.log(_rec(s))
+        t.log(_rec(s, lat=2000.0))
+    table = t.per_strategy_means()
+    assert set(table) == set(DEFAULT_CATALOG.names)
+    for row in table.values():
+        assert row["n"] == 2 and "std_latency" in row
+
+
+def test_correlation_matrix_structure():
+    rng = np.random.default_rng(0)
+    t = TelemetryStore()
+    for i in range(30):
+        lat = 1000 + 100 * i + rng.normal(0, 50)
+        t.log(_rec("medium_rag", lat=lat, pt=100 + 10 * i, util=0.3 - 0.005 * i))
+    mat, labels = t.correlation_matrix()
+    assert labels == ["cost", "lat.", "U", "cplx."]
+    np.testing.assert_allclose(np.diag(mat), 1.0, atol=1e-9)
+    assert mat[0, 1] > 0.9  # cost and latency co-move by construction
+    assert mat[0, 2] < -0.9  # utility anti-correlates with cost
+
+
+def test_correlation_requires_two_records():
+    t = TelemetryStore()
+    t.log(_rec())
+    with pytest.raises(ValueError):
+        t.correlation_matrix()
+
+
+def test_atomic_csv_write_no_partial_file(tmp_path):
+    t = TelemetryStore()
+    t.log(_rec())
+    path = str(tmp_path / "sub" / "log.csv")
+    t.to_csv(path)
+    assert os.path.exists(path) and not os.path.exists(path + ".tmp")

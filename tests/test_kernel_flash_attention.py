@@ -1,0 +1,81 @@
+"""Flash-attention kernel vs jnp oracle: shape/dtype sweep, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _qkv(b, h, hk, s, dh, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hk, s, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hk, s, dh)).astype(dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # (b, h, hk, s, dh, bq, bk, dtype, rtol)
+    (1, 2, 2, 128, 64, 64, 64, jnp.float32, 2e-5),
+    (2, 4, 2, 256, 64, 128, 128, jnp.float32, 2e-5),  # GQA group 2
+    (1, 8, 1, 128, 128, 64, 64, jnp.float32, 2e-5),  # MQA
+    (1, 2, 2, 256, 64, 128, 64, jnp.bfloat16, 2e-2),
+    (2, 6, 2, 384, 32, 128, 128, jnp.bfloat16, 2e-2),  # group 3, non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("b,h,hk,s,dh,bq,bk,dtype,rtol", SWEEP)
+def test_flash_matches_ref_causal(b, h, hk, s, dh, bq, bk, dtype, rtol):
+    q, k, v = _qkv(b, h, hk, s, dh, dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=rtol
+    )
+
+
+@pytest.mark.parametrize("b,h,hk,s,dh,bq,bk,dtype,rtol", SWEEP[:3])
+def test_flash_matches_ref_noncausal(b, h, hk, s, dh, bq, bk, dtype, rtol):
+    q, k, v = _qkv(b, h, hk, s, dh, dtype, seed=3)
+    out = flash_attention_pallas(q, k, v, causal=False, block_q=bq, block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=rtol
+    )
+
+
+def test_flash_matches_model_attention():
+    """Kernel must agree with the model's XLA attention path (layers.py)."""
+    from repro.models.layers import gqa_attention
+
+    b, s, h, hk, dh = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hk, dh))
+    v = jax.random.normal(ks[2], (b, s, hk, dh))
+    model_out = gqa_attention(q, k, v, causal=True)
+    kernel_out = flash_attention(q, k, v, causal=True, use_pallas=True, interpret=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(kernel_out), np.asarray(model_out), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_rejects_bad_shapes():
+    q, k, v = _qkv(1, 3, 2, 128, 64, jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention_pallas(q, k, v, interpret=True)  # 3 % 2 != 0
+    q, k, v = _qkv(1, 2, 2, 100, 64, jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention_pallas(q, k, v, block_q=64, block_k=64, interpret=True)  # 100 % 64
+
+
+def test_flash_softmax_rows_sum_to_one():
+    """v=1 ⇒ every output element is exactly 1 (row-stochastic probs)."""
+    b, h, s, dh = 1, 2, 256, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, dh))
+    v = jnp.ones((b, h, s, dh))
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,116 @@
+"""MIPS top-k kernel vs oracle: sweeps + set-equality properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mips_topk.kernel import mips_topk_pallas
+from repro.kernels.mips_topk.ops import mips_topk
+from repro.kernels.mips_topk.ref import mips_topk_ref
+
+
+def _qc(q, n, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return (
+        jax.random.normal(ks[0], (q, d)).astype(dtype),
+        jax.random.normal(ks[1], (n, d)).astype(dtype),
+    )
+
+
+SWEEP = [
+    # (q, n, d, k, bq, bn, dtype)
+    (8, 1024, 64, 10, 8, 256, jnp.float32),
+    (4, 2048, 128, 5, 4, 512, jnp.float32),
+    (16, 512, 32, 3, 8, 128, jnp.float32),
+    (8, 1024, 64, 10, 8, 256, jnp.bfloat16),
+    (2, 256, 256, 16, 2, 256, jnp.float32),  # single corpus block
+]
+
+
+@pytest.mark.parametrize("q,n,d,k,bq,bn,dtype", SWEEP)
+def test_mips_topk_matches_ref(q, n, d, k, bq, bn, dtype):
+    queries, corpus = _qc(q, n, d, dtype)
+    v, i = mips_topk_pallas(queries, corpus, k, block_q=bq, block_n=bn, interpret=True)
+    rv, ri = mips_topk_ref(queries, corpus, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-5, atol=1e-5)
+    # indices: set equality per row (tie order may differ across impls)
+    for row in range(q):
+        assert set(np.asarray(i)[row].tolist()) == set(np.asarray(ri)[row].tolist())
+
+
+def test_scores_descending_and_consistent():
+    queries, corpus = _qc(4, 512, 64, jnp.float32, seed=1)
+    v, i = mips_topk_pallas(queries, corpus, 8, block_n=128, interpret=True)
+    v_np, i_np = np.asarray(v), np.asarray(i)
+    assert (np.diff(v_np, axis=1) <= 1e-6).all()  # descending
+    # reported scores must equal the actual dot products of reported indices
+    full = np.asarray(queries) @ np.asarray(corpus).T
+    np.testing.assert_allclose(
+        v_np, np.take_along_axis(full, i_np, axis=1), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_duplicate_rows_tie_handling():
+    """Corpus with exact duplicates: top-k still returns k distinct slots."""
+    q = jnp.ones((2, 16))
+    base = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    corpus = jnp.concatenate([base[:32], base[:32]], axis=0)  # dup block
+    v, i = mips_topk_pallas(q, corpus, 6, block_q=2, block_n=32, interpret=True)
+    i_np = np.asarray(i)
+    for row in range(2):
+        assert len(set(i_np[row].tolist())) == 6  # distinct corpus slots
+
+
+def test_invalid_args():
+    queries, corpus = _qc(4, 128, 16, jnp.float32)
+    with pytest.raises(ValueError):
+        mips_topk_pallas(queries, corpus, 200, interpret=True)  # k > N
+    with pytest.raises(ValueError):
+        mips_topk_pallas(queries, corpus, 100, block_n=64, interpret=True)  # k > bn
+    with pytest.raises(ValueError):
+        mips_topk_pallas(queries, corpus, 4, block_q=3, block_n=64, interpret=True)
+
+
+def test_wrapper_oracle_on_cpu():
+    queries, corpus = _qc(4, 256, 32, jnp.float32)
+    v, i = mips_topk(queries, corpus, 5)
+    rv, ri = mips_topk_ref(queries, corpus, 5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv))
+
+
+@hypothesis.given(
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=0, max_value=10_000),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_mips_topk_property_set_equality(k, seed):
+    queries, corpus = _qc(4, 256, 16, jnp.float32, seed=seed)
+    v, i = mips_topk_pallas(queries, corpus, k, block_q=4, block_n=64, interpret=True)
+    rv, _ = mips_topk_ref(queries, corpus, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-5, atol=1e-5)
+
+
+def test_matches_dense_index_search():
+    """Kernel and retrieval.DenseIndex must agree on the paper corpus."""
+    from repro.data import BENCHMARK_QUERIES, corpus_document
+    from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages
+
+    emb = HashedNGramEmbedder(dim=64)
+    ps = line_passages(corpus_document())
+    # pad corpus to 16 rows for blocking (zero row normalizes to zero score)
+    vecs = np.asarray(emb.embed([p.text for p in ps]))
+    vecs = np.concatenate([vecs, np.zeros((1, 64), np.float32)])
+    idx = DenseIndex(jnp.asarray(vecs))
+    q = emb.embed(list(BENCHMARK_QUERIES[:4]))
+    kv, ki = mips_topk_pallas(q, jnp.asarray(vecs), 5, block_q=4, block_n=16, interpret=True)
+    ev, ei = idx.search_batch(q, 5)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(ev), rtol=1e-5, atol=1e-5)
+    # index sets may differ only at (near-)score-ties: verify the reported
+    # indices actually reproduce the reported scores
+    full = np.asarray(q) @ np.asarray(vecs).T
+    np.testing.assert_allclose(
+        np.asarray(kv), np.take_along_axis(full, np.asarray(ki), axis=1), rtol=1e-5, atol=1e-5
+    )

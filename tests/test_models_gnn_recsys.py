@@ -1,0 +1,320 @@
+"""GIN + recsys model tests: message passing, sampler, EmbeddingBag, models."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import (
+    GINConfig,
+    NeighborSampler,
+    gin_conv,
+    graph_logits,
+    graph_loss,
+    init_params as gin_init,
+    node_logits,
+    node_loss,
+    random_graph,
+)
+from repro.models.recsys import (
+    CRITEO_VOCAB_SIZES,
+    DLRMConfig,
+    DeepFMConfig,
+    FieldSpec,
+    MINDConfig,
+    SASRecConfig,
+    deepfm_forward,
+    deepfm_init,
+    deepfm_loss,
+    dlrm_forward,
+    dlrm_init,
+    dlrm_loss,
+    embedding_bag,
+    field_lookup,
+    mind_init,
+    mind_interests,
+    mind_loss,
+    mind_retrieval_score,
+    sasrec_hidden,
+    sasrec_init,
+    sasrec_loss,
+    sasrec_retrieval_score,
+)
+
+
+# --------------------------------------------------------------------------- #
+# GIN                                                                          #
+# --------------------------------------------------------------------------- #
+SMALL_GIN = GINConfig(name="gin_small", n_layers=2, d_hidden=16, d_feat=8, n_classes=3)
+
+
+def _line_graph(n=5):
+    """0→1→2→…→n-1 path; message flows src→dst."""
+    src = jnp.arange(n - 1, dtype=jnp.int32)
+    dst = src + 1
+    return src, dst
+
+
+def test_gin_conv_sum_aggregation_exact():
+    """Hand-check: (1+eps)·x_i + Σ_j x_j with identity-ish MLP replaced."""
+    src, dst = _line_graph(3)
+    x = jnp.array([[1.0], [10.0], [100.0]])
+    agg = jax.ops.segment_sum(x[src], dst, num_segments=3)
+    np.testing.assert_allclose(np.asarray(agg), [[0.0], [1.0], [10.0]])
+
+
+def test_gin_node_pipeline_shapes_and_grads():
+    p = gin_init(jax.random.PRNGKey(0), SMALL_GIN)
+    src, dst = _line_graph(6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 8))
+    logits = node_logits(p, SMALL_GIN, x, src, dst)
+    assert logits.shape == (6, 3)
+    labels = jnp.array([0, 1, 2, 0, 1, 2])
+    mask = jnp.ones((6,))
+    loss = node_loss(p, SMALL_GIN, x, src, dst, labels, mask)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: node_loss(p, SMALL_GIN, x, src, dst, labels, mask))(p)
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+    assert float(jnp.abs(g["layers"][0]["eps"])) >= 0  # learnable eps gets grads
+
+
+def test_gin_isolated_node_gets_only_self():
+    """A node with no in-edges must still produce finite output."""
+    p = gin_init(jax.random.PRNGKey(0), SMALL_GIN)
+    src = jnp.array([0], jnp.int32)
+    dst = jnp.array([1], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 8))  # node 2 isolated
+    logits = node_logits(p, SMALL_GIN, x, src, dst)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_gin_graph_classification():
+    cfg = GINConfig(name="g", n_layers=2, d_hidden=16, d_feat=8, n_classes=2, readout="graph")
+    p = gin_init(jax.random.PRNGKey(0), cfg)
+    # two disjoint graphs of 3 nodes each
+    src = jnp.array([0, 1, 3, 4], jnp.int32)
+    dst = jnp.array([1, 2, 4, 5], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 8))
+    gid = jnp.array([0, 0, 0, 1, 1, 1], jnp.int32)
+    logits = graph_logits(p, cfg, x, src, dst, gid, n_graphs=2)
+    assert logits.shape == (2, 2)
+    loss = graph_loss(p, cfg, x, src, dst, gid, 2, jnp.array([0, 1]))
+    assert np.isfinite(float(loss))
+
+
+def test_gin_permutation_invariance():
+    """Sum aggregation ⇒ permuting edge order must not change outputs."""
+    p = gin_init(jax.random.PRNGKey(0), SMALL_GIN)
+    src = jnp.array([0, 2, 3, 1], jnp.int32)
+    dst = jnp.array([1, 1, 1, 0], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    perm = jnp.array([2, 0, 3, 1])
+    l1 = node_logits(p, SMALL_GIN, x, src, dst)
+    l2 = node_logits(p, SMALL_GIN, x, src[perm], dst[perm])
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_neighbor_sampler_shapes_and_locality():
+    indptr, indices = random_graph(1000, 20_000, seed=0)
+    s = NeighborSampler(indptr, indices, seed=1)
+    seeds = np.arange(32)
+    sub = s.sample(seeds, fanouts=[5, 3])
+    n_nodes, n_edges = NeighborSampler.subgraph_shape(32, [5, 3])
+    assert n_nodes == 32 + 160 + 480 and n_edges == 160 + 480
+    assert sub["node_ids"].shape == (n_nodes,)
+    assert sub["edge_src"].shape == (n_edges,)
+    np.testing.assert_array_equal(sub["node_ids"][:32], seeds)  # seeds first
+    assert sub["edge_src"].max() < n_nodes
+    assert sub["edge_dst"].max() < 32 + 160  # dst only in earlier hops
+
+
+def test_sampler_isolated_nodes_self_loop():
+    indptr = np.array([0, 0, 0])  # 2 nodes, no edges
+    indices = np.array([], np.int64)
+    s = NeighborSampler(indptr, indices)
+    sub = s.sample(np.array([0, 1]), fanouts=[3])
+    np.testing.assert_array_equal(
+        sub["node_ids"][2:], np.repeat([0, 1], 3)
+    )  # self-loops
+
+
+def test_sampled_subgraph_trains():
+    indptr, indices = random_graph(500, 5000, seed=2)
+    s = NeighborSampler(indptr, indices, seed=3)
+    sub = s.sample(np.arange(8), fanouts=[4, 2])
+    cfg = GINConfig(name="mb", n_layers=2, d_hidden=16, d_feat=12, n_classes=4)
+    p = gin_init(jax.random.PRNGKey(0), cfg)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (len(sub["node_ids"]), 12))
+    labels = jnp.zeros((feats.shape[0],), jnp.int32)
+    mask = jnp.zeros((feats.shape[0],)).at[: sub["n_seeds"]].set(1.0)  # seed loss only
+    loss = node_loss(p, cfg, feats, jnp.asarray(sub["edge_src"]), jnp.asarray(sub["edge_dst"]), labels, mask)
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------------- #
+# EmbeddingBag                                                                 #
+# --------------------------------------------------------------------------- #
+def test_embedding_bag_modes_match_manual():
+    table = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    idx = jnp.array([1, 2, 3, 7], jnp.int32)
+    seg = jnp.array([0, 0, 1, 1], jnp.int32)
+    s = embedding_bag(table, idx, seg, 2, mode="sum")
+    np.testing.assert_allclose(np.asarray(s[0]), np.asarray(table[1] + table[2]))
+    m = embedding_bag(table, idx, seg, 2, mode="mean")
+    np.testing.assert_allclose(np.asarray(m[1]), np.asarray((table[3] + table[7]) / 2))
+    mx = embedding_bag(table, idx, seg, 2, mode="max")
+    np.testing.assert_allclose(np.asarray(mx[1]), np.asarray(jnp.maximum(table[3], table[7])))
+    with pytest.raises(ValueError):
+        embedding_bag(table, idx, seg, 2, mode="median")
+
+
+def test_embedding_bag_weighted():
+    table = jnp.ones((4, 3))
+    idx = jnp.array([0, 1], jnp.int32)
+    seg = jnp.array([0, 0], jnp.int32)
+    w = jnp.array([2.0, 3.0])
+    out = embedding_bag(table, idx, seg, 1, weights=w)
+    np.testing.assert_allclose(np.asarray(out), 5.0)
+
+
+def test_field_lookup_offsets():
+    spec = FieldSpec((3, 2, 4))
+    assert spec.total_rows == 9
+    np.testing.assert_array_equal(spec.offsets, [0, 3, 5])
+    table = jnp.asarray(np.arange(9, dtype=np.float32))[:, None]
+    ids = jnp.array([[2, 1, 0]], jnp.int32)  # field-local
+    out = field_lookup(table, spec, ids)
+    np.testing.assert_allclose(np.asarray(out[0, :, 0]), [2.0, 4.0, 5.0])
+
+
+# --------------------------------------------------------------------------- #
+# DLRM / DeepFM                                                                #
+# --------------------------------------------------------------------------- #
+SMALL_DLRM = DLRMConfig(
+    name="dlrm_small", vocab_sizes=(50, 30, 20), embed_dim=8,
+    bot_mlp=(16, 8), top_mlp=(16, 1),
+)
+
+
+def test_dlrm_exact_mlperf_vocab():
+    assert len(CRITEO_VOCAB_SIZES) == 26
+    cfg = DLRMConfig()
+    assert cfg.interaction_dim == 27 * 26 // 2 + 128  # 479
+
+
+def test_dlrm_forward_and_loss():
+    p = dlrm_init(jax.random.PRNGKey(0), SMALL_DLRM)
+    dense = jax.random.normal(jax.random.PRNGKey(1), (16, 13))
+    sparse = jnp.stack(
+        [jax.random.randint(jax.random.PRNGKey(i), (16,), 0, v) for i, v in enumerate(SMALL_DLRM.vocab_sizes)],
+        axis=1,
+    )
+    logits = dlrm_forward(p, SMALL_DLRM, dense, sparse)
+    assert logits.shape == (16,)
+    labels = jnp.asarray(np.random.default_rng(0).integers(0, 2, 16))
+    loss = dlrm_loss(p, SMALL_DLRM, dense, sparse, labels)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    g = jax.grad(lambda p: dlrm_loss(p, SMALL_DLRM, dense, sparse, labels))(p)
+    assert float(jnp.abs(g["table"]).sum()) > 0
+
+
+def test_deepfm_fm_term_identity():
+    """FM identity: ½((Σv)²−Σv²) equals explicit pairwise sum."""
+    cfg = DeepFMConfig(name="fm_small", n_sparse=4, embed_dim=3, vocab_per_field=10, mlp=(8,))
+    p = deepfm_init(jax.random.PRNGKey(0), cfg)
+    ids = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    emb = np.asarray(field_lookup(p["table"], cfg.fields, ids))[0]  # (4, 3)
+    explicit = sum(
+        float(np.dot(emb[i], emb[j])) for i in range(4) for j in range(i + 1, 4)
+    )
+    sum_v = emb.sum(0)
+    identity = 0.5 * float((sum_v**2 - (emb**2).sum(0)).sum())
+    assert identity == pytest.approx(explicit, rel=1e-5)
+
+
+def test_deepfm_forward_loss():
+    cfg = DeepFMConfig(name="fm_small", n_sparse=4, embed_dim=3, vocab_per_field=10, mlp=(8, 8))
+    p = deepfm_init(jax.random.PRNGKey(0), cfg)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (32, 4), 0, 10)
+    logits = deepfm_forward(p, cfg, ids)
+    assert logits.shape == (32,)
+    loss = deepfm_loss(p, cfg, ids, jnp.ones((32,)))
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------------- #
+# MIND                                                                         #
+# --------------------------------------------------------------------------- #
+SMALL_MIND = MINDConfig(name="mind_small", n_items=200, embed_dim=16, n_interests=4, hist_len=10, n_negatives=32)
+
+
+def test_mind_interests_shapes_and_norm():
+    p = mind_init(jax.random.PRNGKey(0), SMALL_MIND)
+    hist = jax.random.randint(jax.random.PRNGKey(1), (8, 10), 0, 200)
+    mask = jnp.ones((8, 10))
+    caps = mind_interests(p, SMALL_MIND, hist, mask)
+    assert caps.shape == (8, 4, 16)
+    # squash keeps capsule norms < 1
+    norms = np.linalg.norm(np.asarray(caps), axis=-1)
+    assert (norms < 1.0 + 1e-5).all()
+
+
+def test_mind_mask_blocks_padding():
+    p = mind_init(jax.random.PRNGKey(0), SMALL_MIND)
+    hist = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 200)
+    mask_full = jnp.ones((2, 10))
+    mask_half = mask_full.at[:, 5:].set(0.0)
+    hist_garbage = hist.at[:, 5:].set(3)  # same masked ids → same caps
+    c1 = mind_interests(p, SMALL_MIND, hist_garbage, mask_half)
+    hist_garbage2 = hist.at[:, 5:].set(7)
+    c2 = mind_interests(p, SMALL_MIND, hist_garbage2, mask_half)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+
+
+def test_mind_loss_and_retrieval():
+    p = mind_init(jax.random.PRNGKey(0), SMALL_MIND)
+    hist = jax.random.randint(jax.random.PRNGKey(1), (8, 10), 0, 200)
+    mask = jnp.ones((8, 10))
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 200)
+    neg = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 200)
+    loss = mind_loss(p, SMALL_MIND, hist, mask, tgt, neg)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    cands = p["item_embed"][:100]
+    scores, ids = mind_retrieval_score(p, SMALL_MIND, hist, mask, cands, k=5)
+    assert scores.shape == (8, 5) and int(ids.max()) < 100
+
+
+# --------------------------------------------------------------------------- #
+# SASRec                                                                       #
+# --------------------------------------------------------------------------- #
+SMALL_SAS = SASRecConfig(name="sas_small", n_items=100, embed_dim=16, n_blocks=2, seq_len=12)
+
+
+def test_sasrec_hidden_and_padding():
+    p = sasrec_init(jax.random.PRNGKey(0), SMALL_SAS)
+    seq = jnp.array([[0, 0, 5, 9, 3, 0, 0, 0, 0, 0, 0, 0]], jnp.int32).at[0, :2].set(jnp.array([4, 7]))
+    h = sasrec_hidden(p, SMALL_SAS, seq)
+    assert h.shape == (1, 12, 16)
+    # pad positions (id 0) are zeroed
+    np.testing.assert_allclose(np.asarray(h[0, 5:]), 0.0, atol=1e-6)
+
+
+def test_sasrec_causality():
+    p = sasrec_init(jax.random.PRNGKey(0), SMALL_SAS)
+    s1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 1, 100)
+    s2 = s1.at[0, 8].set((s1[0, 8] % 99) + 1)
+    h1 = sasrec_hidden(p, SMALL_SAS, s1)
+    h2 = sasrec_hidden(p, SMALL_SAS, s2)
+    np.testing.assert_allclose(np.asarray(h1[0, :8]), np.asarray(h2[0, :8]), atol=1e-5)
+
+
+def test_sasrec_loss_and_retrieval():
+    p = sasrec_init(jax.random.PRNGKey(0), SMALL_SAS)
+    seq = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 1, 100)
+    pos = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 1, 100)
+    neg = jax.random.randint(jax.random.PRNGKey(3), (4, 12), 1, 100)
+    loss = sasrec_loss(p, SMALL_SAS, seq, pos, neg)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    cands = p["item_embed"][1:51]
+    scores, ids = sasrec_retrieval_score(p, SMALL_SAS, seq, cands, k=7)
+    assert scores.shape == (4, 7)

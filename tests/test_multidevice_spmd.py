@@ -1,0 +1,120 @@
+"""True multi-device SPMD correctness (8 host devices via subprocess).
+
+The dry-runs prove the production shardings *compile*; these tests prove the
+distributed algorithms are *numerically correct* when actually executed
+across devices: sharded MIPS search, distributed flash-decode (SP combine),
+DP gradient equivalence, and the grouped-MoE EP layout. Each test body runs
+in a subprocess because jax locks the device count at first init.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(body: str):
+    code = textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=900, env=ENV)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout[-1500:]}\nSTDERR:\n{proc.stderr[-3000:]}"
+    return proc.stdout
+
+
+def test_sharded_mips_search_8_devices():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import make_mesh
+        from repro.retrieval.index import DenseIndex
+        rng = np.random.default_rng(0)
+        corpus = jnp.asarray(rng.normal(size=(1024, 64)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+        idx = DenseIndex(corpus)
+        mesh = make_mesh((8,), ("data",))
+        fn, n = idx.sharded_search_fn(mesh, k=7, shard_axes=("data",))
+        assert n == 8
+        v, i = fn(idx.embeddings, q)
+        ev, ei = idx.search_batch(q, 7)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(ev), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+        print("sharded search == exact over 8 shards")
+    """)
+
+
+def test_distributed_flash_decode_8_way_sp():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import make_mesh
+        from repro.kernels.decode_attention.ops import decode_attention_sharded_body
+        from repro.kernels.decode_attention.ref import decode_attention_ref
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        b, h, hk, s, dh = 4, 8, 4, 512, 32
+        q = jax.random.normal(ks[0], (b, h, dh))
+        k = jax.random.normal(ks[1], (b, s, hk, dh))
+        v = jax.random.normal(ks[2], (b, s, hk, dh))
+        lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+        mesh = make_mesh((8,), ("model",))
+        fn = jax.jit(jax.shard_map(
+            lambda q, k, v, l: decode_attention_sharded_body(q, k, v, l, axis_name="model"),
+            mesh=mesh,
+            in_specs=(P(), P(None, "model", None, None), P(None, "model", None, None), P()),
+            out_specs=P(), check_vma=False))
+        out = fn(q, k, v, lengths)
+        ref = decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+        print("8-way SP flash-decode == single-device oracle")
+    """)
+
+
+def test_dp_sharded_train_step_matches_single_device():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import make_mesh
+        from repro.models.transformer import TransformerConfig, init_params, loss_fn
+        cfg = TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                                d_ff=64, vocab=97, compute_dtype=jnp.float32,
+                                param_dtype=jnp.float32, max_seq_len=32)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, 97)
+        grad_fn = jax.grad(lambda p, t: loss_fn(p, cfg, t, t)[0])
+        g_single = grad_fn(params, toks)
+        mesh = make_mesh((8, 1), ("data", "model"))
+        rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+        g_sharded = jax.jit(grad_fn, in_shardings=(rep, NamedSharding(mesh, P("data", None))))(params, toks)
+        for a, b in zip(jax.tree.leaves(g_single), jax.tree.leaves(g_sharded)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5)
+        print("8-way DP grads == single-device grads")
+    """)
+
+
+def test_grouped_moe_executes_on_ep_mesh():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import make_mesh
+        from repro.models.moe import MoEConfig, moe_apply, moe_apply_grouped, moe_init
+        cfg = MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=32, capacity_factor=16.0)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+        mesh = make_mesh((4, 2), ("data", "model"))
+        with mesh:
+            p_sh = jax.tree.map(lambda l: NamedSharding(mesh, P()), p)
+            fn = jax.jit(
+                lambda p, x: moe_apply_grouped(
+                    p, cfg, x, 4,
+                    dispatch_constraint=lambda b: jax.lax.with_sharding_constraint(
+                        b, P("data", "model", None, None)),
+                )[0],
+                in_shardings=(p_sh, NamedSharding(mesh, P("data", None, None))),
+            )
+            y = fn(p, x)
+        ref, _ = moe_apply(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)
+        print("grouped MoE on 4x2 DPxEP mesh == global reference")
+    """)

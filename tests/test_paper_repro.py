@@ -1,0 +1,174 @@
+"""End-to-end reproduction of the paper's claims (RQ1–RQ4, §VII).
+
+Runs the full 28-query benchmark through the seven policies and asserts the
+paper's findings inside pre-registered bands (DESIGN.md §7):
+
+  RQ1  all four bundles exercised; medium_rag plurality
+  RQ2a router saves 20–32% billed tokens vs fixed-heavy (paper: 26.4%)
+  RQ2b router saves 25–45% latency vs fixed-direct   (paper: 34.3%)
+  RQ2c quality parity within 0.05                     (paper: 0.80 vs 0.81)
+  RQ3  savings concentrated in shallow-routed queries; no catastrophic overrun
+  RQ4  weight changes alone re-steer the operating point
+
+Everything here derives from the logged telemetry (Appendix-F records), as
+in the paper ("all results are generated directly from logged CSV
+artifacts").
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.benchmark import BENCHMARK_QUERIES, PAPER_ASSIGNMENTS
+from repro.serving.engine import EngineConfig
+from repro.serving.experiment import run_policy
+
+
+@pytest.fixture(scope="module")
+def stores():
+    names = ["router_default", "fixed_direct", "fixed_light", "fixed_medium", "fixed_heavy"]
+    out = {n: run_policy(n) for n in names}
+    warm = EngineConfig(warm_start_telemetry=True)
+    out["router_latency_sensitive"] = run_policy("router_latency_sensitive", engine_config=warm)
+    out["router_cost_sensitive"] = run_policy("router_cost_sensitive", engine_config=warm)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RQ1 — routing behaviour                                                       #
+# --------------------------------------------------------------------------- #
+def test_rq1_all_bundles_exercised(stores):
+    counts = stores["router_default"].strategy_counts()
+    assert all(v > 0 for v in counts.values()), counts  # Fig. 1: genuine diversity
+
+
+def test_rq1_medium_rag_plurality(stores):
+    counts = stores["router_default"].strategy_counts()
+    assert counts["medium_rag"] == max(counts.values())  # paper: 57%
+    assert counts["medium_rag"] >= 0.4 * len(BENCHMARK_QUERIES)
+
+
+def test_rq1_fixed_policies_are_degenerate(stores):
+    for name, bundle in [("fixed_direct", "direct_llm"), ("fixed_heavy", "heavy_rag")]:
+        counts = stores[name].strategy_counts()
+        assert counts[bundle] == len(BENCHMARK_QUERIES)
+
+
+def test_rq1_per_query_agreement_with_paper(stores):
+    """Appendix G agreement is a soft target (the paper's per-query routing
+    depends on its telemetry trajectory); require > chance (25%)."""
+    records = stores["router_default"].records
+    agree = sum(1 for r, a in zip(records, PAPER_ASSIGNMENTS) if r.strategy == a)
+    assert agree >= 10, f"only {agree}/28 match Appendix G"
+
+
+# --------------------------------------------------------------------------- #
+# RQ2 — cost/latency/quality tradeoffs                                          #
+# --------------------------------------------------------------------------- #
+def test_rq2a_token_savings_vs_fixed_heavy(stores):
+    saving = 1 - stores["router_default"].mean("cost") / stores["fixed_heavy"].mean("cost")
+    assert 0.20 <= saving <= 0.32, f"token saving {saving:.1%} outside band (paper 26.4%)"
+
+
+def test_rq2b_latency_savings_vs_fixed_direct(stores):
+    saving = 1 - stores["router_default"].mean("latency") / stores["fixed_direct"].mean("latency")
+    assert 0.25 <= saving <= 0.45, f"latency saving {saving:.1%} outside band (paper 34.3%)"
+
+
+def test_rq2c_quality_parity(stores):
+    rq = stores["router_default"].mean("quality_proxy")
+    best_fixed = max(
+        stores[n].mean("quality_proxy")
+        for n in ("fixed_direct", "fixed_light", "fixed_medium", "fixed_heavy")
+    )
+    assert best_fixed - rq <= 0.05, f"quality {rq:.3f} vs best fixed {best_fixed:.3f}"
+
+
+def test_rq2_win_rate_on_cost_vs_heavy(stores):
+    """Table IV: router wins cost vs fixed-heavy on most queries (paper 82%)."""
+    r = stores["router_default"].records
+    h = stores["fixed_heavy"].records
+    wins = sum(1 for a, b in zip(r, h) if a.total_billed_tokens < b.total_billed_tokens)
+    assert wins / len(r) >= 0.6
+
+
+# --------------------------------------------------------------------------- #
+# RQ3 — per-query structure                                                     #
+# --------------------------------------------------------------------------- #
+def test_rq3_savings_concentrated_in_shallow_routes(stores):
+    """Fig. 15: per-query Δcost vs fixed-heavy is most negative where the
+    router chose shallow bundles."""
+    r = stores["router_default"].records
+    h = stores["fixed_heavy"].records
+    deltas = {}
+    for a, b in zip(r, h):
+        deltas.setdefault(a.strategy, []).append(a.total_billed_tokens - b.total_billed_tokens)
+    shallow = [d for s in ("direct_llm", "light_rag") for d in deltas.get(s, [])]
+    heavy_routed = deltas.get("heavy_rag", [0])
+    assert np.mean(shallow) < np.mean(heavy_routed)
+    assert np.mean(shallow) < -50  # large savings on shallow-routed queries
+
+
+def test_rq3_no_catastrophic_cost_overrun(stores):
+    """No query costs dramatically more under routing than fixed-heavy."""
+    r = stores["router_default"].records
+    h = stores["fixed_heavy"].records
+    worst = max(a.total_billed_tokens - b.total_billed_tokens for a, b in zip(r, h))
+    assert worst <= 120  # paper: no catastrophic overrun
+
+
+def test_rq3_quality_parity_per_query(stores):
+    """Fig. 17: quality delta ≈ flat — no subtype systematically degraded."""
+    r = stores["router_default"].records
+    h = stores["fixed_heavy"].records
+    deltas = [a.quality_proxy - b.quality_proxy for a, b in zip(r, h)]
+    assert np.mean(deltas) > -0.05
+
+
+# --------------------------------------------------------------------------- #
+# RQ4 — weight sensitivity                                                      #
+# --------------------------------------------------------------------------- #
+def test_rq4_latency_weight_reduces_latency(stores):
+    assert (
+        stores["router_latency_sensitive"].mean("latency")
+        < stores["router_default"].mean("latency")
+    )
+
+
+def test_rq4_cost_weight_reduces_tokens(stores):
+    assert stores["router_cost_sensitive"].mean("cost") < stores["router_default"].mean("cost")
+
+
+def test_rq4_weight_changes_shift_strategy_mix(stores):
+    """Fig. 18: the weight setting visibly re-shapes the distribution."""
+    d = stores["router_default"].strategy_counts()
+    l = stores["router_latency_sensitive"].strategy_counts()
+    c = stores["router_cost_sensitive"].strategy_counts()
+    assert l != d and c != d
+    # cost-sensitive suppresses heavy_rag (paper §VII.H)
+    assert c["heavy_rag"] <= d["heavy_rag"]
+
+
+# --------------------------------------------------------------------------- #
+# Structural/artifact checks                                                    #
+# --------------------------------------------------------------------------- #
+def test_table_ii_artifacts(stores):
+    """Table II: 28 queries, 4 strategies, 15 corpus lines, index tokens."""
+    t = stores["router_default"]
+    assert len(t.records) == 28
+    assert len(set(r.strategy for r in t.records)) == 4
+    assert t.records[0].index_embedding_tokens > 0  # offline embed bookkeeping
+
+
+def test_mean_selection_utility_matches_paper_scale(stores):
+    """Paper Table III: router_default mean U = 0.192; ours must land near."""
+    u = stores["router_default"].mean("utility")
+    assert 0.10 <= u <= 0.30, u
+
+
+def test_retrieval_confidence_logged_for_retrieval_queries(stores):
+    t = stores["router_default"]
+    for r in t.records:
+        if r.strategy == "direct_llm":
+            assert np.isnan(r.retrieval_confidence)
+        else:
+            assert 0.0 <= r.retrieval_confidence <= 1.0 + 1e-6

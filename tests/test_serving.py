@@ -1,0 +1,254 @@
+"""Serving-layer tests: billing, latency model, generator, engine, scheduler."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.bundles import DEFAULT_CATALOG, GenerationSpec
+from repro.core.guardrails import GuardrailConfig
+from repro.core.policies import make_policy
+from repro.retrieval.tokenizer import count_tokens
+from repro.serving.billing import BillingLedger, bill_query
+from repro.serving.engine import EngineConfig, build_paper_engine
+from repro.serving.generator import ExtractiveGenerator, build_prompt
+from repro.serving.latency import LatencyModel, LatencyModelConfig
+from repro.serving.scheduler import ContinuousBatchScheduler, Request, SchedulerConfig
+
+
+# --------------------------------------------------------------------------- #
+# Billing                                                                      #
+# --------------------------------------------------------------------------- #
+def test_bill_query_eq2():
+    bill = bill_query("a prompt here", "an answer", ["a query"])
+    assert bill.prompt_tokens == count_tokens("a prompt here")
+    assert bill.completion_tokens == count_tokens("an answer")
+    assert bill.embedding_tokens == count_tokens("a query")
+    assert bill.total == bill.prompt_tokens + bill.completion_tokens + bill.embedding_tokens
+
+
+def test_billing_ledger_cumulative():
+    ledger = BillingLedger(index_embedding_tokens=262)
+    ledger.add(bill_query("p", "c", []))
+    ledger.add(bill_query("pp qq", "cc dd", ["e"]))
+    cum = ledger.cumulative
+    assert len(cum) == 2 and cum[1] > cum[0]
+    s = ledger.summary()
+    assert s["queries"] == 2 and s["index_embedding_tokens"] == 262
+    assert s["total_billed"] == cum[-1]
+
+
+# --------------------------------------------------------------------------- #
+# Latency model                                                                #
+# --------------------------------------------------------------------------- #
+def test_latency_stages_structure():
+    m = LatencyModel()
+    s = m.stages_ms(embed_tokens=10, retrieval_k=5, prompt_tokens=100, completion_tokens=50)
+    assert s["embed"] > 0 and s["retrieve"] > 0
+    s0 = m.stages_ms(embed_tokens=0, retrieval_k=0, prompt_tokens=20, completion_tokens=50)
+    assert s0["embed"] == 0 and s0["retrieve"] == 0  # direct path skips stages
+
+
+def test_latency_decode_dominates_long_completions():
+    m = LatencyModel()
+    short = m.stages_ms(embed_tokens=0, retrieval_k=0, prompt_tokens=20, completion_tokens=20)
+    long = m.stages_ms(embed_tokens=0, retrieval_k=0, prompt_tokens=20, completion_tokens=200)
+    assert sum(long.values()) > 2 * sum(short.values()) / 2
+    assert long["decode"] > long["prefill"]
+
+
+def test_latency_sampling_deterministic_per_query():
+    m = LatencyModel()
+    kw = dict(embed_tokens=5, retrieval_k=3, prompt_tokens=80, completion_tokens=60)
+    assert m.sample_ms(query_id=7, **kw) == m.sample_ms(query_id=7, **kw)
+    assert m.sample_ms(query_id=7, **kw) != m.sample_ms(query_id=8, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Generator                                                                    #
+# --------------------------------------------------------------------------- #
+def test_generator_grounded_quotes_context():
+    g = ExtractiveGenerator()
+    spec = GenerationSpec()
+    ans = g.generate("What is FAISS used for?", ["Embedding indexes such as FAISS enable search."], spec)
+    assert "FAISS" in ans
+
+
+def test_generator_respects_max_tokens():
+    g = ExtractiveGenerator()
+    spec = GenerationSpec(max_output_tokens=20)
+    ans = g.generate("Why is token cost important?", [], spec, query_id=2)
+    assert count_tokens(ans) <= 20
+
+
+def test_generator_direct_longer_than_grounded():
+    """§VII.B: direct completions are longer and more variable."""
+    g = ExtractiveGenerator()
+    spec = GenerationSpec()
+    grounded = [
+        count_tokens(g.generate("What is RAG?", ["RAG improves accuracy."], spec, query_id=i))
+        for i in range(6)
+    ]
+    direct = [count_tokens(g.generate("What is RAG?", [], spec, query_id=i)) for i in range(6)]
+    assert np.mean(direct) > np.mean(grounded)
+    assert np.std(direct) > np.std(grounded)
+
+
+def test_generator_deterministic():
+    g = ExtractiveGenerator()
+    spec = GenerationSpec()
+    a1 = g.generate("What is RAG?", [], spec, query_id=3)
+    a2 = ExtractiveGenerator().generate("What is RAG?", [], spec, query_id=3)
+    assert a1 == a2
+
+
+def test_build_prompt_scales_with_context():
+    p0 = build_prompt("q?", [])
+    p3 = build_prompt("q?", ["a"] * 3)
+    p10 = build_prompt("q?", ["a"] * 10)
+    assert count_tokens(p0) < count_tokens(p3) < count_tokens(p10)
+    assert "[3]" in p3 and "[10]" in p10
+
+
+# --------------------------------------------------------------------------- #
+# Engine                                                                       #
+# --------------------------------------------------------------------------- #
+def test_engine_answer_direct_vs_grounded_billing():
+    eng = build_paper_engine(make_policy("fixed_direct"))
+    r = eng.answer("What is RAG?", reference="RAG improves LLM accuracy.")
+    assert r.record.strategy == "direct_llm"
+    assert r.record.embedding_tokens == 0  # no retrieval → no embed billing
+    assert math.isnan(r.record.retrieval_confidence)
+
+    eng2 = build_paper_engine(make_policy("fixed_heavy"))
+    r2 = eng2.answer("What is FAISS used for?", reference="FAISS enables ANN search.")
+    assert r2.record.strategy == "heavy_rag"
+    assert r2.record.embedding_tokens > 0
+    assert 0.0 <= r2.record.retrieval_confidence <= 1.0 + 1e-6
+    assert len(r2.passages) == 10
+    assert r2.record.prompt_tokens > r.record.prompt_tokens
+
+
+def test_engine_telemetry_accumulates():
+    eng = build_paper_engine(make_policy("router_default"))
+    from repro.data import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+
+    t = eng.run(list(BENCHMARK_QUERIES[:6]), list(REFERENCE_ANSWERS[:6]))
+    assert len(t.records) == 6
+    assert eng.ledger.total_billed == sum(r.total_billed_tokens for r in t.records)
+    # first record carries the offline index bookkeeping
+    assert t.records[0].index_embedding_tokens > 0
+    assert t.records[1].index_embedding_tokens == 0
+
+
+def test_engine_low_confidence_guardrail_demotes():
+    cfg = EngineConfig(guardrails=GuardrailConfig(min_retrieval_confidence=1.1))
+    eng = build_paper_engine(make_policy("fixed_heavy"), config=cfg)
+    r = eng.answer("Explain quantum chromodynamics lattice renormalization.")
+    # confidence can never reach 1.1 → demoted to direct
+    assert r.record.strategy == "direct_llm"
+    assert not r.passages
+
+
+def test_engine_cost_ceiling_guardrail():
+    cfg = EngineConfig(guardrails=GuardrailConfig(max_cost_tokens=280))
+    eng = build_paper_engine(make_policy("fixed_heavy"), config=cfg)
+    r = eng.answer("What is RAG?")
+    assert r.record.strategy == "medium_rag"  # deepest affordable
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler                                                                    #
+# --------------------------------------------------------------------------- #
+def _mk_req(i, bundle="medium_rag", prompt=32, max_new=4):
+    return Request(request_id=i, query=f"q{i}", bundle_name=bundle, prompt_tokens=prompt, max_new_tokens=max_new)
+
+
+def test_scheduler_completes_all_requests():
+    s = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=2, n_pages=64, page_size=16))
+    for i in range(5):
+        s.submit(_mk_req(i))
+    hist = s.run_until_drained(lambda active: [False] * len(active))
+    assert len(s.completed) == 5
+    assert s.allocator.n_free == 64  # all pages returned
+    summ = s.summary()
+    assert summ["completed"] == 5 and summ["mean_decode_steps"] == 4
+
+
+def test_scheduler_continuous_admission():
+    """New requests join as soon as slots free — no batch draining."""
+    s = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=1, n_pages=64))
+    s.submit(_mk_req(0, max_new=3))
+    s.submit(_mk_req(1, max_new=3))
+    m0 = s.step(lambda a: [False] * len(a))
+    assert m0["admitted"] == 1 and m0["active"] == 1
+    s.step(lambda a: [False] * len(a))
+    m2 = s.step(lambda a: [False] * len(a))  # req 0 finishes here
+    assert m2["finished"] == 1
+    m3 = s.step(lambda a: [False] * len(a))
+    assert m3["admitted"] == 1  # req 1 admitted immediately after
+
+
+def test_scheduler_page_bound_admission():
+    # each request needs ceil((120+8)/16) = 8 pages; pool has 8 → one at a time
+    s = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=4, n_pages=8, page_size=16))
+    s.submit(_mk_req(0, prompt=120, max_new=8))
+    s.submit(_mk_req(1, prompt=120, max_new=8))
+    m = s.step(lambda a: [False] * len(a))
+    assert m["active"] == 1 and m["queued"] == 1  # second blocked on pages
+
+
+def test_scheduler_eos_early_stop():
+    s = ContinuousBatchScheduler()
+    s.submit(_mk_req(0, max_new=100))
+    s.run_until_drained(lambda active: [True] * len(active))  # instant EOS
+    assert s.completed[0].generated == 1
+
+
+def test_scheduler_round_robin_fairness():
+    s = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=2, n_pages=256))
+    for i in range(4):
+        s.submit(_mk_req(i, bundle="heavy_rag", max_new=2))
+    for i in range(4, 8):
+        s.submit(_mk_req(i, bundle="light_rag", max_new=2))
+    s.step(lambda a: [False] * len(a))
+    bundles = {r.bundle_name for r in s.active.values()}
+    assert bundles == {"heavy_rag", "light_rag"}  # one slot each
+
+
+def test_scheduler_queue_cap():
+    s = ContinuousBatchScheduler(SchedulerConfig(max_queue=2))
+    assert s.submit(_mk_req(0))
+    assert s.submit(_mk_req(1))
+    assert not s.submit(_mk_req(2))
+
+
+def test_scheduler_drives_real_model_decode():
+    """End-to-end: scheduler + tiny transformer decode_step."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.kvcache import KVCache
+    from repro.models.transformer import TransformerConfig, decode_step, init_params
+
+    cfg = TransformerConfig(
+        name="sched_tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab=50, compute_dtype=jnp.float32, max_seq_len=32,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    slots = 2
+    cache = KVCache.zeros(2, slots, 32, 2, 16, dtype=jnp.float32)
+    tokens = jnp.zeros((slots,), jnp.int32)
+    state = {"cache": cache, "tokens": tokens}
+
+    def decode_fn(active):
+        logits, state["cache"] = decode_step(params, cfg, state["cache"], state["tokens"])
+        state["tokens"] = jnp.argmax(logits, -1).astype(jnp.int32)
+        return [False] * len(active)
+
+    s = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=slots, n_pages=64))
+    for i in range(3):
+        s.submit(_mk_req(i, prompt=4, max_new=3))
+    s.run_until_drained(decode_fn)
+    assert len(s.completed) == 3
+    assert int(state["cache"].lengths[0]) > 0  # model actually decoded
