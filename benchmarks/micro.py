@@ -41,7 +41,7 @@ def bench_routing() -> list[tuple[str, float, str]]:
 
 
 def bench_retrieval() -> list[tuple[str, float, str]]:
-    from repro.retrieval import DenseIndex, HashedNGramEmbedder
+    from repro.retrieval import DenseIndex
     from repro.retrieval.topk import blocked_topk
 
     rng = np.random.default_rng(0)
@@ -91,13 +91,128 @@ def bench_kernel_oracles() -> list[tuple[str, float, str]]:
 
 def bench_engine() -> list[tuple[str, float, str]]:
     from repro.core.policies import make_policy
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
     from repro.serving.engine import build_paper_engine
 
     eng = build_paper_engine(make_policy("router_default"))
     t0 = time.perf_counter()
     n = 28
-    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
-
-    eng.run(list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS))
+    # the sequential reference path, one query at a time (the batched fast
+    # path is measured by bench_engine_batched below)
+    for q, r in zip(BENCHMARK_QUERIES, REFERENCE_ANSWERS):
+        eng.answer(q, reference=r)
     us = (time.perf_counter() - t0) / n * 1e6
     return [("rag_engine_per_query", us, "full route+retrieve+generate+log")]
+
+
+def bench_engine_batched(artifact_path: str | None = None, *, iters: int = 5) -> list[tuple[str, float, str]]:
+    """Sequential vs batched serving throughput on the 28-query paper
+    benchmark, plus the routing→admission→decode closed loop.
+
+    Both paths are measured warm (compile + first-touch caches excluded) on
+    engines that already served one epoch, so the ratio isolates the fast
+    path's dispatch/batching wins. Optionally writes BENCH_serving.json so
+    the serving perf trajectory is tracked across PRs.
+    """
+    import json
+    import os
+
+    from repro.core.policies import make_policy
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+    from repro.serving.engine import build_paper_engine
+    from repro.serving.scheduler import ContinuousBatchScheduler, SchedulerConfig
+
+    queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
+    n = len(queries)
+
+    seq = build_paper_engine(make_policy("router_default"))
+    for _ in range(2):  # warm: compiles + caches
+        for q, r in zip(queries, refs):
+            seq.answer(q, reference=r)
+    t_seq = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for q, r in zip(queries, refs):
+            seq.answer(q, reference=r)
+        t_seq.append(time.perf_counter() - t0)
+    t_seq = float(np.median(t_seq))
+
+    bat = build_paper_engine(make_policy("router_default"))
+    for _ in range(2):  # warm
+        bat.answer_batch(queries, refs)
+    t_bat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        bat.answer_batch(queries, refs)
+        t_bat.append(time.perf_counter() - t0)
+    t_bat = float(np.median(t_bat))
+
+    seq_qps, bat_qps = n / t_seq, n / t_bat
+    speedup = t_seq / t_bat
+
+    # closed loop: batched answers feed the continuous-batching scheduler
+    loop = build_paper_engine(make_policy("router_default"))
+    sched = ContinuousBatchScheduler(
+        SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16), catalog=loop.catalog
+    )
+    t0 = time.perf_counter()
+    _, sched = loop.serve_batch(queries, refs, scheduler=sched)
+    t_loop = time.perf_counter() - t0
+    summary = sched.summary()
+    steps = summary["total_steps"]
+
+    if artifact_path:
+        os.makedirs(os.path.dirname(artifact_path) or ".", exist_ok=True)
+        with open(artifact_path, "w") as f:
+            json.dump(
+                {
+                    "benchmark": "paper_28_queries",
+                    "n_queries": n,
+                    "sequential_qps": seq_qps,
+                    "batched_qps": bat_qps,
+                    "speedup": speedup,
+                    "closed_loop": {
+                        "wall_s": t_loop,
+                        "decode_steps": steps,
+                        "steps_per_s": steps / t_loop if t_loop else float("nan"),
+                        "mean_queue_wait_steps": summary.get("mean_queue_wait_steps"),
+                        "mean_decode_steps": summary.get("mean_decode_steps"),
+                    },
+                },
+                f,
+                indent=2,
+            )
+
+    return [
+        ("rag_engine_sequential_warm", t_seq / n * 1e6, f"{seq_qps:.0f} queries/s"),
+        ("rag_engine_batched_warm", t_bat / n * 1e6, f"{bat_qps:.0f} queries/s ({speedup:.1f}x sequential)"),
+        ("rag_closed_loop_route_admit_decode", t_loop / n * 1e6, f"{steps} decode steps, {steps / t_loop:.0f} steps/s"),
+    ]
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.micro [--smoke]``.
+
+    ``--smoke`` runs the cheap sections only (CI sanity: everything imports,
+    compiles, and the batched path reports a speedup).
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="fast subset for CI")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    sections = (
+        [bench_routing, lambda: bench_engine_batched(iters=3)]
+        if args.smoke
+        else [bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine,
+              lambda: bench_engine_batched()]
+    )
+    for section in sections:
+        for name, us, derived in section():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

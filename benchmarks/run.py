@@ -26,12 +26,29 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     if not args.tables_only:
-        from benchmarks.micro import bench_engine, bench_kernel_oracles, bench_retrieval, bench_routing
+        import os
 
-        for section in (bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine):
+        from benchmarks.micro import (
+            bench_engine,
+            bench_engine_batched,
+            bench_kernel_oracles,
+            bench_retrieval,
+            bench_routing,
+        )
+
+        serving_artifact = os.path.join(args.results_dir, "BENCH_serving.json")
+        sections = (
+            bench_routing,
+            bench_retrieval,
+            bench_kernel_oracles,
+            bench_engine,
+            lambda: bench_engine_batched(serving_artifact),
+        )
+        for section in sections:
             for name, us, derived in section():
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
+        print(f"# serving artifact: {serving_artifact}")
 
     stores = ensure_results(args.results_dir)
     for table_name, fn in ALL_TABLES.items():

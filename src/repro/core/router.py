@@ -43,6 +43,7 @@ from repro.core.utility import (
     DEFAULT_WEIGHTS,
     UtilityWeights,
     selection_utilities,
+    selection_utilities_np,
 )
 
 
@@ -90,10 +91,27 @@ class Router:
         self.catalog = catalog
         self.config = config
         self._arrays = catalog.as_arrays()
+        self._arrays_np = {k: np.asarray(v) for k, v in self._arrays.items()}
 
     # ------------------------------------------------------------------ #
     # Device path                                                         #
     # ------------------------------------------------------------------ #
+    def complexity_batch(self, queries: Sequence[str]) -> jnp.ndarray:
+        """Signals → complexity ``(N,)`` for a query batch.
+
+        One vectorized pass shared by :meth:`route` and the serving engine's
+        batched fast path — both paths score complexity through the same ops,
+        so per-query and batched complexities are bit-identical.
+        """
+        sig = extract_signal_matrix(queries)
+        return batch_complexity(
+            sig,
+            alpha=self.config.alpha,
+            beta=self.config.beta,
+            l_max=self.config.l_max,
+            k_max=self.config.k_max,
+        )
+
     def utilities_from_complexity(
         self,
         complexity: jnp.ndarray,
@@ -125,9 +143,12 @@ class Router:
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Route a complexity batch → (bundle_idx ``(N,)`` i32, U ``(N,B)``).
 
-        jit-compatible. With ``key`` and ``config.epsilon > 0``, applies
-        ε-greedy exploration: with prob ε a uniform random bundle replaces
-        the argmax (Appendix A step 3).
+        jit-compatible. Overrides may be ``(B,)`` (one refined prior vector
+        for the whole batch) or ``(N, B)`` (per-query priors — the serving
+        fast path routes a whole stream position-accurately in one call).
+        With ``key`` and ``config.epsilon > 0``, applies ε-greedy
+        exploration: with prob ε a uniform random bundle replaces the argmax
+        (Appendix A step 3).
         """
         utilities = self.utilities_from_complexity(
             complexity,
@@ -146,6 +167,49 @@ class Router:
             choice = jnp.where(explore, random_pick, choice)
         return choice, utilities
 
+    def route_batch_np(
+        self,
+        complexity: np.ndarray,
+        *,
+        latency_override: np.ndarray | None = None,
+        cost_override: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Host mirror of :meth:`route_batch_arrays` (numpy, no device
+        dispatch) — bit-identical utilities and choices; see
+        :func:`~repro.core.utility.selection_utilities_np`.
+
+        The serving fast path uses this for its exact position-by-position
+        replay, where per-query device round-trips would dominate. Greedy
+        only: exploration needs the device PRNG, so ``epsilon > 0`` raises
+        (the engine never routes with exploration either way).
+        """
+        if self.config.epsilon > 0.0:
+            raise ValueError("route_batch_np is greedy-only (epsilon > 0 unsupported)")
+        utilities = self._utilities_np(
+            complexity, latency_override=latency_override, cost_override=cost_override
+        )
+        return utilities.argmax(axis=-1).astype(np.int32), utilities
+
+    def _utilities_np(
+        self,
+        complexity: np.ndarray,
+        *,
+        latency_override: np.ndarray | None = None,
+        cost_override: np.ndarray | None = None,
+    ) -> np.ndarray:
+        return selection_utilities_np(
+            self._arrays_np,
+            complexity,
+            weights=self.config.weights,
+            gamma=self.config.gamma,
+            c0=self.config.c0,
+            delta=self.config.delta,
+            c1=self.config.c1,
+            global_decay=self.config.global_decay,
+            latency_override=latency_override,
+            cost_override=cost_override,
+        )
+
     # ------------------------------------------------------------------ #
     # Host path                                                           #
     # ------------------------------------------------------------------ #
@@ -160,14 +224,7 @@ class Router:
         """Route query strings; returns full audit records."""
         single = isinstance(queries, str)
         qs: Sequence[str] = [queries] if single else list(queries)
-        sig = extract_signal_matrix(qs)
-        cplx = batch_complexity(
-            sig,
-            alpha=self.config.alpha,
-            beta=self.config.beta,
-            l_max=self.config.l_max,
-            k_max=self.config.k_max,
-        )
+        cplx = self.complexity_batch(qs)
         idx, utilities = self.route_batch_arrays(
             cplx,
             key=key,
@@ -229,3 +286,10 @@ class FixedRouter(Router):
         )
         n = utilities.shape[0]
         return jnp.full((n,), self.fixed_index, dtype=jnp.int32), utilities
+
+    def route_batch_np(self, complexity, *, latency_override=None, cost_override=None):
+        utilities = self._utilities_np(
+            complexity, latency_override=latency_override, cost_override=cost_override
+        )
+        n = utilities.shape[0]
+        return np.full((n,), self.fixed_index, dtype=np.int32), utilities

@@ -148,6 +148,29 @@ class TelemetryStore:
         for r in records:
             self.log(r)
 
+    def clone_for_replay(self) -> "TelemetryStore":
+        """Lightweight copy for speculative what-if replay.
+
+        Carries everything prior refinement reads — per-bundle stats,
+        refinement knobs, structural anchors — but not the record history, so
+        the serving engine's batched fast path can simulate "what priors
+        would query i have seen?" for a whole batch without mutating (or
+        deep-copying) the live store. Logging into the clone updates only the
+        clone.
+        """
+        clone = TelemetryStore(
+            self.catalog,
+            ema_beta=self.ema_beta,
+            min_volume=self.min_volume,
+            blend=self.blend,
+            refine_latency=self.refine_latency,
+            refine_cost=self.refine_cost,
+            structural_latency=self.structural_latency,
+            structural_cost=self.structural_cost,
+        )
+        clone.stats = {name: dataclasses.replace(st) for name, st in self.stats.items()}
+        return clone
+
     # -- refined priors -------------------------------------------------------
     @property
     def refinement_active(self) -> bool:

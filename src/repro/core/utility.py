@@ -31,6 +31,7 @@ import dataclasses
 from typing import Mapping
 
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,9 +131,14 @@ def selection_utilities(
 ) -> jnp.ndarray:
     """Eq. 1 for a batch of queries: returns utilities ``(N, B)``.
 
-    ``latency_override`` / ``cost_override`` (shape ``(B,)``) let telemetry-
-    refined estimates replace the static priors (paper §IV.A step 2: "using
-    priors and optional telemetry").
+    ``latency_override`` / ``cost_override`` let telemetry-refined estimates
+    replace the static priors (paper §IV.A step 2: "using priors and optional
+    telemetry"). Shape ``(B,)`` applies one refined vector to every query;
+    shape ``(N, B)`` supplies *per-query* priors — the batched serving path
+    uses this to evaluate a whole batch in one call even though each query's
+    priors reflect the telemetry state at its position in the stream. The
+    normalization is per row either way, so an ``(N, B)`` call is exactly N
+    stacked ``(B,)`` calls.
     """
     lat = (
         jnp.asarray(latency_override, jnp.float32)
@@ -154,9 +160,75 @@ def selection_utilities(
         c1=c1,
         global_decay=global_decay,
     )  # (N, B)
-    lat_norm = minmax_normalize(lat)[None, :]  # (1, B)
-    cost_norm = minmax_normalize(cost)[None, :]
+    lat_norm = minmax_normalize(lat)  # (B,) or (N, B); normalized per row
+    cost_norm = minmax_normalize(cost)
+    if lat_norm.ndim == 1:
+        lat_norm = lat_norm[None, :]  # (1, B)
+    if cost_norm.ndim == 1:
+        cost_norm = cost_norm[None, :]
     w_q, w_l, w_c = weights.as_tuple()
+    return w_q * qhat - w_l * lat_norm - w_c * cost_norm
+
+
+def selection_utilities_np(
+    catalog_arrays: Mapping[str, np.ndarray],
+    complexity: np.ndarray,
+    *,
+    weights: UtilityWeights = DEFAULT_WEIGHTS,
+    gamma: float = DEFAULT_GAMMA,
+    c0: float = DEFAULT_C0,
+    delta: float = DEFAULT_DELTA,
+    c1: float = DEFAULT_C1,
+    global_decay: float = DEFAULT_GLOBAL_DECAY,
+    latency_override: np.ndarray | None = None,
+    cost_override: np.ndarray | None = None,
+) -> np.ndarray:
+    """Host (numpy) mirror of :func:`selection_utilities`.
+
+    The serving fast path re-routes position-by-position during its exact
+    replay, where a device dispatch per query would dominate; this mirror
+    runs in microseconds. It is *bit-identical* to the jnp path: Eq. 1 uses
+    only exactly-rounded IEEE-754 float32 ops (multiply/add/divide, min/max,
+    clip — no transcendentals), evaluated here in the same order, with every
+    Python-float constant cast to float32 first to mirror jax's weak-type
+    promotion (numpy would otherwise promote to float64).
+    ``tests/test_serving_batched.py`` pins the lockstep — keep both in sync.
+    """
+    f32 = np.float32
+    c = np.asarray(complexity, f32)[..., None]  # (N, 1)
+    q = np.asarray(catalog_arrays["quality_prior"], f32)[None, :]  # (1, B)
+    a = np.asarray(catalog_arrays["depth_affinity"], f32)[None, :]
+    deep = np.square(np.clip(a, f32(0.0), f32(1.0)))
+    hinge = np.maximum(c - f32(c1), f32(0.0))
+    decay = f32(global_decay) * np.maximum(c - f32(c0), f32(0.0))
+    qhat = (
+        np.maximum(q + f32(gamma) * (c - f32(c0)) * a + f32(delta) * hinge * deep, f32(0.0))
+        - decay
+    )
+
+    lat = np.asarray(
+        latency_override if latency_override is not None else catalog_arrays["latency_prior_ms"],
+        f32,
+    )
+    cost = np.asarray(
+        cost_override if cost_override is not None else catalog_arrays["cost_prior_tokens"],
+        f32,
+    )
+
+    def _minmax(values: np.ndarray) -> np.ndarray:
+        lo = values.min(axis=-1, keepdims=True)
+        hi = values.max(axis=-1, keepdims=True)
+        span = hi - lo
+        safe = np.where(span > 0, span, f32(1.0))
+        return np.where(span > 0, (values - lo) / safe, np.zeros_like(values))
+
+    lat_norm = _minmax(lat)
+    cost_norm = _minmax(cost)
+    if lat_norm.ndim == 1:
+        lat_norm = lat_norm[None, :]
+    if cost_norm.ndim == 1:
+        cost_norm = cost_norm[None, :]
+    w_q, w_l, w_c = (f32(w) for w in weights.as_tuple())
     return w_q * qhat - w_l * lat_norm - w_c * cost_norm
 
 

@@ -1,2 +1,7 @@
 """Distribution utilities: mesh construction, partition specs, collectives."""
-from repro.distributed.mesh_utils import make_mesh, mesh_device_count, named_sharding
+from repro.distributed.mesh_utils import (
+    make_mesh,
+    mesh_device_count,
+    named_sharding,
+    shard_map_compat,
+)

@@ -9,11 +9,33 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+try:  # AxisType landed after 0.4.x; older jax is implicitly Auto everywhere
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
     return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across the rename: new jax exposes it top-level with
+    ``check_vma``; 0.4.x has ``jax.experimental.shard_map`` with the
+    ``check_rep`` spelling of the same knob."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
 
 
 def named_sharding(mesh: Mesh, *spec) -> NamedSharding:

@@ -29,6 +29,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams → CompilerParams; support both so the kernel
+# runs (interpret or compiled) on either side of the rename.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -63,7 +67,7 @@ def _topk_merge(scores, base_idx, best_v, best_i, k):
     return jnp.concatenate(new_v, axis=1), jnp.concatenate(new_i, axis=1)
 
 
-def _mips_kernel(q_ref, c_ref, v_out, i_out, bv_ref, bi_ref, *, k, bn, n_c):
+def _mips_kernel(q_ref, c_ref, v_out, i_out, bv_ref, bi_ref, *, k, bn, n_c, n_valid):
     ic = pl.program_id(1)
 
     @pl.when(ic == 0)
@@ -76,6 +80,9 @@ def _mips_kernel(q_ref, c_ref, v_out, i_out, bv_ref, bi_ref, *, k, bn, n_c):
     scores = jax.lax.dot_general(
         q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (bq, bn)
+    if n_valid < n_c * bn:  # corpus was zero-padded: mask the pad columns out
+        col = ic * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col < n_valid, scores, NEG_INF)
     bv, bi = _topk_merge(scores, ic * bn, bv_ref[...], bi_ref[...], k)
     bv_ref[...] = bv
     bi_ref[...] = bi
@@ -93,12 +100,19 @@ def mips_topk_pallas(
     *,
     block_q: int = 8,
     block_n: int = 1024,
+    n_valid: int | None = None,
     interpret: bool = False,
 ):
+    """Fused MIPS top-k. ``n_valid`` supports zero-padded corpora: rows at
+    index >= n_valid are masked to -inf so callers can pad N up to a block
+    multiple without polluting the candidate set (DenseIndex's auto-pad)."""
     q_n, d = queries.shape
     n, _ = corpus.shape
-    if k > n:
-        raise ValueError(f"k={k} > corpus size {n}")
+    n_valid = n if n_valid is None else n_valid
+    if not 0 < n_valid <= n:
+        raise ValueError(f"n_valid={n_valid} must be in (0, {n}]")
+    if k > n_valid:
+        raise ValueError(f"k={k} > corpus size {n_valid}")
     bq = min(block_q, q_n)
     bn = min(block_n, n)
     if q_n % bq or n % bn:
@@ -107,7 +121,7 @@ def mips_topk_pallas(
         raise ValueError(f"k={k} must be <= block_n={bn}")
     n_q, n_c = q_n // bq, n // bn
 
-    kernel = functools.partial(_mips_kernel, k=k, bn=bn, n_c=n_c)
+    kernel = functools.partial(_mips_kernel, k=k, bn=bn, n_c=n_c, n_valid=n_valid)
     vals, idx = pl.pallas_call(
         kernel,
         grid=(n_q, n_c),
@@ -127,7 +141,7 @@ def mips_topk_pallas(
             pltpu.VMEM((bq, k), jnp.float32),
             pltpu.VMEM((bq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -12,7 +12,8 @@ from repro.kernels.mips_topk.ref import mips_topk_ref
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_q", "block_n", "use_pallas", "interpret")
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "n_valid", "use_pallas", "interpret"),
 )
 def mips_topk(
     queries: jnp.ndarray,
@@ -21,13 +22,20 @@ def mips_topk(
     *,
     block_q: int = 8,
     block_n: int = 1024,
+    n_valid: int | None = None,
     use_pallas: bool | None = None,
     interpret: bool = False,
 ):
-    """Exact MIPS top-k: (Q, D) × (N, D) → ((Q, k) scores, (Q, k) int32 ids)."""
+    """Exact MIPS top-k: (Q, D) × (N, D) → ((Q, k) scores, (Q, k) int32 ids).
+
+    ``n_valid`` masks zero-padded corpus rows (see ``mips_topk_pallas``).
+    """
     use_pallas = (jax.default_backend() == "tpu") if use_pallas is None else use_pallas
     if use_pallas:
         return mips_topk_pallas(
-            queries, corpus, k, block_q=block_q, block_n=block_n, interpret=interpret
+            queries, corpus, k,
+            block_q=block_q, block_n=block_n, n_valid=n_valid, interpret=interpret,
         )
+    if n_valid is not None:
+        corpus = corpus[:n_valid]
     return mips_topk_ref(queries, corpus, k)

@@ -10,16 +10,26 @@ gradient all-reduce crosses.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after 0.4.x; older jax is implicitly Auto everywhere
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_smoke_mesh(n_devices: int | None = None):
     """Tiny mesh over whatever devices exist (tests / CPU)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((1, n), ("data", "model"))

@@ -3,7 +3,7 @@ BM25, IVF ANN, hybrid fusion, distributed top-k."""
 
 from repro.retrieval.bm25 import BM25Index, BM25Params
 from repro.retrieval.chunking import Passage, corpus_passages, line_passages, sliding_window_passages
-from repro.retrieval.embedder import HashedNGramEmbedder, StackedEmbedder
+from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, StackedEmbedder
 from repro.retrieval.hybrid import HybridRetriever, rrf_fuse, weighted_fuse
 from repro.retrieval.index import DenseIndex, SearchResult, l2_normalize
 from repro.retrieval.ivf import IVFIndex, kmeans
@@ -12,7 +12,7 @@ from repro.retrieval.topk import blocked_topk, distributed_topk, merge_topk
 
 __all__ = [
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",
-    "sliding_window_passages", "HashedNGramEmbedder", "StackedEmbedder",
+    "sliding_window_passages", "CachingEmbedder", "HashedNGramEmbedder", "StackedEmbedder",
     "HybridRetriever", "rrf_fuse", "weighted_fuse", "DenseIndex", "SearchResult",
     "l2_normalize", "IVFIndex", "kmeans", "count_tokens", "lexical_overlap",
     "terms", "words", "blocked_topk", "distributed_topk", "merge_topk",

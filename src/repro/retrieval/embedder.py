@@ -21,6 +21,7 @@ Embedding *billing*: each embed call bills ``count_tokens(text)`` tokens
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from typing import Protocol, Sequence
 
 import jax.numpy as jnp
@@ -77,6 +78,57 @@ class HashedNGramEmbedder:
 
     def billed_tokens(self, texts: Sequence[str]) -> int:
         return sum(count_tokens(t) for t in texts)
+
+
+class CachingEmbedder:
+    """Memoizing wrapper: text → embedding-row cache (bounded, FIFO-evicted).
+
+    The serving engine's query-vector cache: repeated queries skip the embed
+    stage entirely (serving traffic is heavily repetitive; the paper bills
+    τ_embed per API call, so *billing* stays per-call — see
+    :meth:`billed_tokens` — while compute is deduplicated).
+
+    Misses in one :meth:`embed` call are embedded together in a single
+    underlying call. Rows are cached as numpy and reassembled per request, so
+    a text's vector is identical whether it was first seen alone or inside a
+    batch (deterministic per-row embedders like :class:`HashedNGramEmbedder`;
+    batch-sensitive embedders should not be wrapped).
+    """
+
+    def __init__(self, base: Embedder, *, max_entries: int = 65536):
+        if max_entries <= 0:
+            raise ValueError("max_entries must be positive")
+        self.base = base
+        self.dim = base.dim
+        self.max_entries = max_entries
+        self._cache: OrderedDict[str, np.ndarray] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def embed(self, texts: Sequence[str]) -> jnp.ndarray:
+        if len(texts) == 0:
+            return jnp.zeros((0, self.dim), jnp.float32)
+        missing: list[str] = []
+        seen: set[str] = set()
+        for t in texts:
+            if t not in self._cache and t not in seen:
+                missing.append(t)
+                seen.add(t)
+        self.misses += len(missing)
+        self.hits += len(texts) - len(missing)
+        if missing:
+            rows = np.asarray(self.base.embed(missing), np.float32)
+            for t, row in zip(missing, rows):
+                self._cache[t] = row
+        # snapshot before eviction so every requested row survives this call
+        out = jnp.asarray(np.stack([self._cache[t] for t in texts]))
+        while len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+        return out
+
+    def billed_tokens(self, texts: Sequence[str]) -> int:
+        # Billing is per-call (Eq. 2 bills every embed request), cache or not.
+        return self.base.billed_tokens(texts)
 
 
 class StackedEmbedder:

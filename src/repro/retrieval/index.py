@@ -3,10 +3,23 @@
 ``DenseIndex`` holds L2-normalized passage embeddings so inner product ==
 cosine similarity ("FAISS inner-product index", §V.E). Three search paths:
 
-* :meth:`search` — single-device exact MIPS: blocked matmul + running top-k
-  (``topk.blocked_topk``); the Pallas ``mips_topk`` kernel slots in here via
-  ``scorer="pallas"`` on TPU.
-* :meth:`sharded_search` — corpus rows sharded over mesh axes with
+* :meth:`search` / :meth:`search_batch` — single-device exact MIPS through a
+  *cached jit-compiled closure* per ``(k, scorer)``: queries are chunked into
+  fixed ``(Q_BLOCK, d)`` blocks (zero-padded), so every search — one query or
+  a thousand — runs the same compiled program and nothing retraces per query.
+  ``scorer`` selects the implementation:
+
+  - ``"blocked"`` (default): blocked matmul + running top-k
+    (``topk.blocked_topk``) — the CPU/GPU oracle path.
+  - ``"pallas"``: the fused Pallas ``mips_topk`` TPU kernel
+    (``kernels.mips_topk``); the corpus is auto-padded to a block multiple
+    and pad rows are masked inside the kernel (``n_valid``). Pass
+    ``interpret=True`` to run it off-TPU.
+
+  The fixed block shape is what makes the serving fast path's batched
+  retrieval *bit-identical* to per-query retrieval: a query row's scores
+  depend only on its own block row, never on which queries share the batch.
+* :meth:`sharded_search_fn` — corpus rows sharded over mesh axes with
   ``shard_map``; per-shard local top-k then hierarchical merge
   (``topk.distributed_topk``). This is the production path and the
   ``retrieval_cand`` dry-run cell.
@@ -19,8 +32,7 @@ logged per query and consumed by the low-confidence guardrail.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,14 @@ import numpy as np
 from repro.retrieval.chunking import Passage
 from repro.retrieval.embedder import Embedder
 from repro.retrieval.topk import blocked_topk, distributed_topk
+
+# Fixed query-block width for the compiled search closures. Every search is
+# padded to a multiple of this, so the compiled matmul shape — and therefore
+# each row's floating-point result — is independent of the caller's batch
+# size. 8 matches the Pallas kernel's default block_q.
+Q_BLOCK = 8
+
+SCORERS = ("blocked", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +78,10 @@ class DenseIndex:
         self.passages = list(passages) if passages is not None else None
         if self.passages is not None and len(self.passages) != embeddings.shape[0]:
             raise ValueError("passages/embeddings length mismatch")
+        # (k, scorer, interpret) → jit-compiled fixed-shape search closure
+        self._fn_cache: dict[tuple, Callable] = {}
+        # block_n → corpus zero-padded to a block_n multiple (pallas path)
+        self._padded_corpus: dict[int, jnp.ndarray] = {}
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -81,15 +105,118 @@ class DenseIndex:
         return self.embeddings.shape[1]
 
     # -- single-device search ---------------------------------------------------
-    def search_batch(self, query_vecs: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """(nq, d) → (scores (nq,k), ids (nq,k)); jit-compatible."""
-        k = min(k, self.size)
-        q = l2_normalize(jnp.asarray(query_vecs, jnp.float32))
-        scores = q @ self.embeddings.T  # (nq, n)
-        return blocked_topk(scores, k)
+    def _pallas_block_n(self, k: int) -> int:
+        """Corpus block width: lane-aligned, >= k, capped for VMEM."""
+        bn = 128 if self.size <= 2048 else 1024
+        while bn < k:
+            bn *= 2
+        return bn
 
-    def search(self, query_vec: jnp.ndarray, k: int) -> SearchResult:
-        scores, ids = self.search_batch(jnp.asarray(query_vec)[None, :], k)
+    def _pallas_corpus(self, bn: int) -> jnp.ndarray:
+        corpus = self._padded_corpus.get(bn)
+        if corpus is None:
+            pad = (-self.size) % bn
+            corpus = self.embeddings
+            if pad:
+                corpus = jnp.concatenate(
+                    [corpus, jnp.zeros((pad, self.dim), jnp.float32)], axis=0
+                )
+            self._padded_corpus[bn] = corpus
+        return corpus
+
+    def _search_fn(self, k: int, scorer: str, interpret: bool) -> Callable:
+        """Cached jit-compiled ``(Q_BLOCK, d) → ((Q_BLOCK, k), (Q_BLOCK, k))``
+        search closure — compiled once per (k, scorer), reused by every
+        subsequent query/batch so the serving hot path never retraces."""
+        key = (k, scorer, interpret)
+        fn = self._fn_cache.get(key)
+        if fn is not None:
+            return fn
+        if scorer == "blocked":
+            emb_t = self.embeddings.T
+
+            def core(q: jnp.ndarray):
+                scores = l2_normalize(q) @ emb_t  # (bq, n)
+                return blocked_topk(scores, k)
+
+        elif scorer == "pallas":
+            from repro.kernels.mips_topk.kernel import mips_topk_pallas
+
+            bn = self._pallas_block_n(k)
+            corpus = self._pallas_corpus(bn)
+            n_valid = self.size
+
+            def core(q: jnp.ndarray):
+                return mips_topk_pallas(
+                    l2_normalize(q), corpus, k,
+                    block_q=Q_BLOCK, block_n=bn, n_valid=n_valid, interpret=interpret,
+                )
+
+        else:
+            raise ValueError(f"unknown scorer {scorer!r}; expected one of {SCORERS}")
+        fn = jax.jit(core)
+        self._fn_cache[key] = fn
+        return fn
+
+    def search_batch(
+        self,
+        query_vecs: jnp.ndarray,
+        k: int,
+        *,
+        scorer: str = "blocked",
+        interpret: bool = False,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(nq, d) → (scores (nq, k), ids (nq, k)), descending per row.
+
+        Queries run through the cached compiled closure in fixed ``Q_BLOCK``
+        chunks (zero-padded); arbitrary nq — including non-multiples of the
+        kernel blocks — is handled by the auto-padding. jit-compatible: all
+        padding/chunking is shape-static jnp.
+        """
+        k = min(k, self.size)
+        if query_vecs.ndim != 2:
+            raise ValueError(f"query_vecs must be (nq, d), got {query_vecs.shape}")
+        nq = query_vecs.shape[0]
+        if nq == 0:
+            return jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32)
+        fn = self._search_fn(k, scorer, interpret)
+        pad = (-nq) % Q_BLOCK
+        if isinstance(query_vecs, jax.core.Tracer):
+            # traced (inside a caller's jit): stay pure-jnp
+            q = jnp.asarray(query_vecs, jnp.float32)
+            if pad:
+                q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), jnp.float32)], axis=0)
+            outs = [fn(q[s : s + Q_BLOCK]) for s in range(0, q.shape[0], Q_BLOCK)]
+            vals = jnp.concatenate([v for v, _ in outs], axis=0)[:nq]
+            ids = jnp.concatenate([i for _, i in outs], axis=0)[:nq]
+            return vals, ids
+        # concrete inputs: pad/chunk/reassemble on host so the only XLA work
+        # is the fixed-shape closure — batch sizes never trigger op compiles
+        q = np.asarray(query_vecs, np.float32)
+        if pad:
+            q = np.concatenate([q, np.zeros((pad, q.shape[1]), np.float32)], axis=0)
+        vals_np, ids_np = [], []
+        for s in range(0, q.shape[0], Q_BLOCK):
+            v, i = fn(jnp.asarray(q[s : s + Q_BLOCK]))
+            vals_np.append(np.asarray(v, np.float32))
+            ids_np.append(np.asarray(i, np.int32))
+        vals = np.concatenate(vals_np, axis=0)[:nq] if len(vals_np) > 1 else vals_np[0][:nq]
+        ids = np.concatenate(ids_np, axis=0)[:nq] if len(ids_np) > 1 else ids_np[0][:nq]
+        return jnp.asarray(vals), jnp.asarray(ids)
+
+    def search(
+        self,
+        query_vec: jnp.ndarray,
+        k: int,
+        *,
+        scorer: str = "blocked",
+        interpret: bool = False,
+    ) -> SearchResult:
+        """Single-query wrapper over :meth:`search_batch` — same compiled
+        closure, same ``scorer`` options, bit-identical scores."""
+        scores, ids = self.search_batch(
+            jnp.asarray(query_vec)[None, :], k, scorer=scorer, interpret=interpret
+        )
         return SearchResult(np.asarray(ids[0], np.int32), np.asarray(scores[0], np.float32))
 
     def get_passages(self, ids: Sequence[int]) -> list[Passage]:
@@ -125,8 +252,10 @@ class DenseIndex:
                 v, i = distributed_topk(v, i, k, ax)
             return v, i
 
+        from repro.distributed import shard_map_compat
+
         return jax.jit(
-            jax.shard_map(
+            shard_map_compat(
                 local_search,
                 mesh=mesh,
                 in_specs=(corpus_spec, P(None, None)),

@@ -9,8 +9,6 @@ element is a local top-k element of its shard).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

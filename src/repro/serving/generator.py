@@ -77,6 +77,16 @@ class ExtractiveGenerator:
         self.config = config
         self.knowledge = list(knowledge)
         self._knowledge_terms = [set(terms(k, remove_stopwords=True)) for k in self.knowledge]
+        # passage text → term set; passages repeat across queries (the corpus
+        # is fixed), so the serving hot path skips re-tokenizing them
+        self._passage_terms: dict[str, set[str]] = {}
+
+    def _terms_of(self, passage: str) -> set[str]:
+        cached = self._passage_terms.get(passage)
+        if cached is None:
+            cached = set(terms(passage, remove_stopwords=True))
+            self._passage_terms[passage] = cached
+        return cached
 
     # -- parametric recall ------------------------------------------------------
     def _recall(self, query: str, n: int = 2) -> list[str]:
@@ -93,8 +103,7 @@ class ExtractiveGenerator:
         (overlap_score, passage) pairs, best first."""
         q = set(terms(query, remove_stopwords=True))
         scored = sorted(
-            ((len(q & set(terms(p, remove_stopwords=True))), -i, p)
-             for i, p in enumerate(passages)),
+            ((len(q & self._terms_of(p)), -i, p) for i, p in enumerate(passages)),
             reverse=True,
         )
         return [(s, p) for s, _, p in scored]

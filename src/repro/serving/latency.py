@@ -36,6 +36,13 @@ class LatencyModelConfig:
 class LatencyModel:
     def __init__(self, config: LatencyModelConfig = LatencyModelConfig()):
         self.config = config
+        # query_id → lognormal noise factor. The factor is a pure function of
+        # (seed, query_id), so caching it only skips Generator construction
+        # on the serving hot path — sampled values are unchanged. Bounded:
+        # hits only occur within a batch (speculative re-execution), so old
+        # entries are dead weight and FIFO eviction never changes a value.
+        self._noise_cache: dict[int, float] = {}
+        self._noise_cache_max = 8192
 
     def stages_ms(
         self,
@@ -58,6 +65,11 @@ class LatencyModel:
     def sample_ms(self, *, query_id: int, **stage_kwargs) -> float:
         """Deterministic 'measured' latency for a query (seeded noise)."""
         base = sum(self.stages_ms(**stage_kwargs).values())
-        rng = np.random.default_rng((self.config.seed, query_id))
-        noise = float(rng.lognormal(mean=0.0, sigma=self.config.noise_sigma))
+        noise = self._noise_cache.get(query_id)
+        if noise is None:
+            rng = np.random.default_rng((self.config.seed, query_id))
+            noise = float(rng.lognormal(mean=0.0, sigma=self.config.noise_sigma))
+            while len(self._noise_cache) >= self._noise_cache_max:
+                del self._noise_cache[next(iter(self._noise_cache))]
+            self._noise_cache[query_id] = noise
         return base * noise

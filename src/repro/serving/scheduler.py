@@ -5,7 +5,10 @@ arrival (bundle choice fixes their retrieval work and generation budget),
 admitted into the decode batch as slots and KV pages allow, and decoded one
 token per step for all active sequences simultaneously (continuous batching
 — finished sequences free their slot immediately, new requests join without
-draining the batch).
+draining the batch). ``requests_from_records`` + ``submit_many`` close the
+loop from the engine side: ``RAGEngine.serve_batch`` converts its routed,
+billed records straight into admission-ready requests, so routing →
+admission → decode runs as one pipeline.
 
 Host-side simulation-friendly: the decode function is injected
 (``decode_fn(tokens, state) → (next_tokens, done_mask, state)``), so tests
@@ -19,9 +22,8 @@ telemetry a deployed CA-RAG feeds back into routing.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from collections import deque
-from typing import Callable
+from typing import Callable, Iterable, Sequence
 
 from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
 from repro.models.kvcache import PageAllocator
@@ -43,6 +45,25 @@ class Request:
     @property
     def queue_wait(self) -> int | None:
         return None if self.admitted_step is None else self.admitted_step - self.arrived_step
+
+
+def requests_from_records(records: Sequence, *, start_id: int = 0) -> list[Request]:
+    """Convert routed :class:`~repro.core.telemetry.QueryRecord`s into
+    scheduler requests — the routing→admission hand-off of the closed serving
+    loop. The routed bundle fixes the request's queue; its billed prompt
+    fixes the KV-page demand; its billed completion fixes the decode budget
+    (each completion token is one continuous-batching decode step).
+    """
+    return [
+        Request(
+            request_id=start_id + j,
+            query=r.query,
+            bundle_name=r.bundle,
+            prompt_tokens=r.prompt_tokens,
+            max_new_tokens=max(1, r.completion_tokens),
+        )
+        for j, r in enumerate(records)
+    ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +89,7 @@ class ContinuousBatchScheduler:
         self.allocator = PageAllocator(config.n_pages)
         self.step_count = 0
         self.completed: list[Request] = []
+        self.total_submitted = 0
         self._rr = 0  # round-robin cursor over bundle queues
 
     # -- intake ------------------------------------------------------------
@@ -75,9 +97,19 @@ class ContinuousBatchScheduler:
         q = self.queues[req.bundle_name]
         if sum(len(x) for x in self.queues.values()) >= self.config.max_queue:
             return False
+        if self._pages_needed(req) > self.config.n_pages:
+            # can never be admitted even on an empty pool: accepting it would
+            # wedge the queue (run_until_drained would spin to max_steps)
+            return False
         req.arrived_step = self.step_count
         q.append(req)
+        self.total_submitted += 1
         return True
+
+    def submit_many(self, reqs: Iterable[Request]) -> int:
+        """Submit a routed batch; returns how many were accepted (the rest
+        hit the queue cap — backpressure the caller should surface)."""
+        return sum(1 for r in reqs if self.submit(r))
 
     def _pages_needed(self, req: Request) -> int:
         total = req.prompt_tokens + req.max_new_tokens

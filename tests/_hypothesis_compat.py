@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim for property-based tests.
+
+The container may not ship `hypothesis`; property tests should *skip* there,
+not take the whole module's example-based tests down with a collection
+error. Usage:
+
+    from _hypothesis_compat import hypothesis, st
+
+`hypothesis.given(...)` becomes a skip marker when the real package is
+missing; `st.*` return None placeholders (never evaluated under skip).
+"""
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    class _HypothesisStub:
+        @staticmethod
+        def given(*_a, **_k):
+            return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+        @staticmethod
+        def settings(*_a, **_k):
+            return lambda f: f
+
+    class _StrategiesStub:
+        """Absorbs any strategy construction (`st.lists(...)`,
+        `@st.composite`, `.map(...)` chains) — the results are never drawn
+        from because `given` skips the test."""
+
+        def __call__(self, *_a, **_k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    hypothesis = _HypothesisStub()
+    st = _StrategiesStub()

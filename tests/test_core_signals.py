@@ -1,7 +1,6 @@
 """Unit + property tests for query signals and complexity (paper §V.A)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Tests for Eq. 1 utilities, routing, policies and guardrails."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

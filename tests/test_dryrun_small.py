@@ -25,8 +25,10 @@ def test_collective_parser_counts_psum():
     def f(x):
         return jax.lax.psum(x, "data")
 
+    from repro.distributed import shard_map_compat
+
     fn = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None), check_vma=False)
+        shard_map_compat(f, mesh=mesh, in_specs=P(None), out_specs=P(None), check_vma=False)
     )
     compiled = fn.lower(jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
     coll = collective_bytes_from_hlo(compiled.as_text())

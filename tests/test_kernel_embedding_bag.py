@@ -1,7 +1,6 @@
 """EmbeddingBag kernel vs oracle: sweeps, unsorted input, empty bags."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,11 +1,10 @@
 """MIPS top-k kernel vs oracle: sweeps + set-equality properties."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.kernels.mips_topk.kernel import mips_topk_pallas
 from repro.kernels.mips_topk.ops import mips_topk

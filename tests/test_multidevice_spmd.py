@@ -13,6 +13,10 @@ import textwrap
 
 import pytest
 
+# Host-emulated 8-device SPMD compiles are multi-minute on CPU; deselected
+# from the default run (pytest.ini), opt in with `-m slow`.
+pytestmark = pytest.mark.slow
+
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
 
@@ -59,7 +63,8 @@ def test_distributed_flash_decode_8_way_sp():
         v = jax.random.normal(ks[2], (b, s, hk, dh))
         lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
         mesh = make_mesh((8,), ("model",))
-        fn = jax.jit(jax.shard_map(
+        from repro.distributed import shard_map_compat
+        fn = jax.jit(shard_map_compat(
             lambda q, k, v, l: decode_attention_sharded_body(q, k, v, l, axis_name="model"),
             mesh=mesh,
             in_specs=(P(), P(None, "model", None, None), P(None, "model", None, None), P()),

@@ -1,12 +1,11 @@
 """Tests for the retrieval substrate: tokenizer, chunking, embedder, dense
 index, blocked/distributed top-k, BM25, IVF, hybrid fusion."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.data import BENCHMARK_CORPUS, BENCHMARK_QUERIES, corpus_document
 from repro.retrieval import (

@@ -1,7 +1,6 @@
 """Hypothesis property tests for the continuous-batching scheduler."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 
 from repro.serving.scheduler import ContinuousBatchScheduler, Request, SchedulerConfig
 

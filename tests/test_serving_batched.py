@@ -1,0 +1,311 @@
+"""Batched serving fast path: parity, routing lockstep, pallas scorer, and
+the routing→admission→decode closed loop.
+
+The contract under test (serving/engine.py): ``answer_batch`` is *bit-
+identical* to the sequential ``answer`` loop — same routing decisions, same
+billed tokens, same telemetry EMAs, byte-identical Appendix-F CSV artifacts
+— while batching the embed/search/generate hot path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guardrails import GuardrailConfig
+from repro.core.policies import make_policy
+from repro.core.router import FixedRouter, Router
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS, corpus_document
+from repro.retrieval import CachingEmbedder, DenseIndex, HashedNGramEmbedder, line_passages
+from repro.serving.engine import EngineConfig, build_paper_engine
+from repro.serving.scheduler import ContinuousBatchScheduler, SchedulerConfig, requests_from_records
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+
+def _run_sequential(policy, config):
+    eng = build_paper_engine(make_policy(policy), config=config)
+    for q, r in zip(QUERIES, REFS):
+        eng.answer(q, reference=r)
+    return eng
+
+
+def _run_batched(policy, config):
+    eng = build_paper_engine(make_policy(policy), config=config)
+    eng.answer_batch(QUERIES, REFS)
+    return eng
+
+
+# --------------------------------------------------------------------------- #
+# Parity: answer_batch ≡ sequential answer loop                                #
+# --------------------------------------------------------------------------- #
+PARITY_CONFIGS = [
+    ("router_default", EngineConfig()),
+    ("fixed_heavy", EngineConfig()),
+    ("router_latency_sensitive", EngineConfig(warm_start_telemetry=True)),
+    ("router_default", EngineConfig(guardrails=GuardrailConfig(min_retrieval_confidence=0.45))),
+    ("router_default", EngineConfig(guardrails=GuardrailConfig(max_cost_tokens=280))),
+    ("router_default", EngineConfig(use_telemetry_refinement=False)),
+]
+
+
+@pytest.mark.parametrize("policy,config", PARITY_CONFIGS)
+def test_answer_batch_csv_byte_identical(policy, config):
+    """The paper benchmark must produce byte-identical CSV artifacts —
+    bundle choices, utilities, billed tokens, confidences, telemetry EMAs."""
+    seq = _run_sequential(policy, config)
+    bat = _run_batched(policy, config)
+    assert bat.telemetry.to_csv() == seq.telemetry.to_csv()
+    assert bat.ledger.total_billed == seq.ledger.total_billed
+    assert bat.ledger.cumulative == seq.ledger.cumulative
+    for name in seq.telemetry.stats:
+        s, b = seq.telemetry.stats[name], bat.telemetry.stats[name]
+        assert (s.count, s.ema_latency_ms, s.ema_cost_tokens, s.ema_quality) == (
+            b.count, b.ema_latency_ms, b.ema_cost_tokens, b.ema_quality
+        )
+
+
+def test_answer_batch_parity_across_consecutive_batches():
+    """Refinement carries across batches: the second batch routes with EMAs
+    from the first, exactly as the sequential stream would."""
+    seq = build_paper_engine(make_policy("router_default"))
+    bat = build_paper_engine(make_policy("router_default"))
+    for _ in range(2):
+        for q, r in zip(QUERIES, REFS):
+            seq.answer(q, reference=r)
+        bat.answer_batch(QUERIES, REFS)
+    assert bat.telemetry.to_csv() == seq.telemetry.to_csv()
+
+
+def test_run_delegates_to_fast_path():
+    eng_run = build_paper_engine(make_policy("router_default"))
+    telemetry = eng_run.run(QUERIES, REFS)
+    seq = _run_sequential("router_default", EngineConfig())
+    assert telemetry.to_csv() == seq.telemetry.to_csv()
+
+
+def test_answer_batch_edge_cases():
+    eng = build_paper_engine(make_policy("router_default"))
+    assert eng.answer_batch([]) == []
+    (resp,) = eng.answer_batch([QUERIES[0]], [REFS[0]])
+    ref = _run_sequential("router_default", EngineConfig())
+    assert str(resp.record.as_csv_row()) == str(ref.telemetry.records[0].as_csv_row())
+    with pytest.raises(ValueError):
+        eng.answer_batch(QUERIES[:3], REFS[:2])
+
+
+def test_answer_batch_interleaves_with_answer():
+    """qids/billing stay consistent when callers mix the two entry points."""
+    seq = build_paper_engine(make_policy("router_default"))
+    for q, r in zip(QUERIES[:10], REFS[:10]):
+        seq.answer(q, reference=r)
+    mixed = build_paper_engine(make_policy("router_default"))
+    for q, r in zip(QUERIES[:3], REFS[:3]):
+        mixed.answer(q, reference=r)
+    mixed.answer_batch(QUERIES[3:10], REFS[3:10])
+    assert mixed.telemetry.to_csv() == seq.telemetry.to_csv()
+
+
+# --------------------------------------------------------------------------- #
+# Routing lockstep: numpy mirror ≡ jnp device path                             #
+# --------------------------------------------------------------------------- #
+def test_route_batch_np_bitwise_matches_device_path():
+    router = Router()
+    cplx = router.complexity_batch(QUERIES)
+    cplx_np = np.asarray(cplx)
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        lat = rng.uniform(1.0, 9000.0, 4).astype(np.float32)
+        cost = rng.uniform(10.0, 900.0, 4).astype(np.float32)
+        j_idx, j_util = router.route_batch_arrays(
+            cplx, latency_override=jnp.asarray(lat), cost_override=jnp.asarray(cost)
+        )
+        n_idx, n_util = router.route_batch_np(
+            cplx_np, latency_override=lat, cost_override=cost
+        )
+        np.testing.assert_array_equal(np.asarray(j_util), n_util)
+        np.testing.assert_array_equal(np.asarray(j_idx), n_idx)
+    # no-override + degenerate constant-prior rows
+    j_idx, j_util = router.route_batch_arrays(cplx)
+    n_idx, n_util = router.route_batch_np(cplx_np)
+    np.testing.assert_array_equal(np.asarray(j_util), n_util)
+    flat = np.full(4, 7.0, np.float32)
+    j_util = router.route_batch_arrays(
+        cplx, latency_override=jnp.asarray(flat), cost_override=jnp.asarray(flat)
+    )[1]
+    n_util = router.route_batch_np(cplx_np, latency_override=flat, cost_override=flat)[1]
+    np.testing.assert_array_equal(np.asarray(j_util), n_util)
+
+
+def test_route_batch_np_fixed_router_and_epsilon_guard():
+    fixed = FixedRouter("heavy_rag")
+    cplx = np.asarray(fixed.complexity_batch(QUERIES[:5]))
+    idx, _ = fixed.route_batch_np(cplx)
+    assert (idx == fixed.catalog.index_of("heavy_rag")).all()
+    from repro.core.router import RouterConfig
+
+    explorer = Router(config=RouterConfig(epsilon=0.1))
+    with pytest.raises(ValueError):
+        explorer.route_batch_np(cplx)
+
+
+def test_selection_utilities_2d_overrides_match_per_row():
+    """(N, B) per-query overrides == N stacked (B,) calls, bitwise."""
+    router = Router()
+    cplx = router.complexity_batch(QUERIES[:8])
+    rng = np.random.default_rng(3)
+    lat = rng.uniform(1, 5000, (8, 4)).astype(np.float32)
+    cost = rng.uniform(10, 700, (8, 4)).astype(np.float32)
+    vec = np.asarray(
+        router.route_batch_arrays(
+            cplx, latency_override=jnp.asarray(lat), cost_override=jnp.asarray(cost)
+        )[1]
+    )
+    for i in range(8):
+        row = np.asarray(
+            router.route_batch_arrays(
+                cplx[i : i + 1],
+                latency_override=jnp.asarray(lat[i]),
+                cost_override=jnp.asarray(cost[i]),
+            )[1]
+        )[0]
+        np.testing.assert_array_equal(vec[i], row)
+
+
+# --------------------------------------------------------------------------- #
+# DenseIndex: pallas scorer property vs blocked oracle                         #
+# --------------------------------------------------------------------------- #
+EMB = HashedNGramEmbedder(dim=64)
+
+
+@pytest.mark.parametrize(
+    "n_corpus,n_queries,k",
+    [
+        (15, 28, 5),  # the paper corpus shape: everything non-divisible
+        (15, 1, 10),
+        (128, 8, 3),  # exact block multiples
+        (130, 5, 7),  # corpus just past a block boundary
+        (300, 13, 16),
+    ],
+)
+def test_search_batch_pallas_matches_blocked(n_corpus, n_queries, k):
+    rng = np.random.default_rng(n_corpus * 31 + n_queries)
+    idx = DenseIndex(jnp.asarray(rng.normal(size=(n_corpus, 32)).astype(np.float32)))
+    q = jnp.asarray(rng.normal(size=(n_queries, 32)).astype(np.float32))
+    bv, bi = idx.search_batch(q, k)
+    pv, pi = idx.search_batch(q, k, scorer="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(bv), rtol=1e-5, atol=1e-5)
+    # indices may permute only among exact score ties
+    for row in range(n_queries):
+        assert set(np.asarray(pi)[row].tolist()) == set(np.asarray(bi)[row].tolist())
+    assert (np.asarray(pi) < n_corpus).all()  # auto-pad rows never leak
+
+
+def test_search_scorer_validation():
+    idx = DenseIndex(jnp.asarray(np.eye(4, 8, dtype=np.float32)))
+    with pytest.raises(ValueError):
+        idx.search_batch(jnp.ones((2, 8)), 2, scorer="bogus")
+
+
+def test_search_closure_cache_no_retrace():
+    ps = line_passages(corpus_document())
+    idx, _ = DenseIndex.build(ps, EMB)
+    qs = EMB.embed(list(BENCHMARK_QUERIES[:9]))
+    idx.search_batch(qs, 5)
+    fn = idx._fn_cache[(5, "blocked", False)]
+    for i in range(9):  # singles + odd batches reuse the same compiled fn
+        idx.search(qs[i], 5)
+    idx.search_batch(qs[:3], 5)
+    assert idx._fn_cache[(5, "blocked", False)] is fn
+    assert len([key for key in idx._fn_cache if key[0] == 5]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Query-vector cache                                                           #
+# --------------------------------------------------------------------------- #
+def test_caching_embedder_hits_and_bitwise_rows():
+    base = HashedNGramEmbedder(dim=64)
+    cached = CachingEmbedder(base)
+    batch = cached.embed(list(BENCHMARK_QUERIES[:6]))
+    assert cached.misses == 6 and cached.hits == 0
+    again = cached.embed(list(BENCHMARK_QUERIES[:6]))
+    assert cached.hits == 6 and cached.misses == 6
+    np.testing.assert_array_equal(np.asarray(batch), np.asarray(again))
+    # rows equal the uncached embedder's, whether first seen alone or batched
+    solo = cached.embed([BENCHMARK_QUERIES[2]])
+    np.testing.assert_array_equal(np.asarray(solo)[0], np.asarray(base.embed([BENCHMARK_QUERIES[2]]))[0])
+    assert cached.billed_tokens(["a b c"]) == base.billed_tokens(["a b c"])
+
+
+def test_caching_embedder_eviction_bound():
+    cached = CachingEmbedder(HashedNGramEmbedder(dim=16), max_entries=4)
+    texts = [f"query number {i}" for i in range(10)]
+    out = cached.embed(texts)  # larger than the cache: must still return all
+    assert out.shape == (10, 16)
+    assert len(cached._cache) == 4
+
+
+def test_engine_embed_cache_shared_across_paths():
+    eng = build_paper_engine(make_policy("fixed_heavy"))
+    eng.answer(QUERIES[0])
+    misses = eng.embedder.misses
+    eng.answer_batch([QUERIES[0]] * 3)  # repeated query: embed stage skipped
+    assert eng.embedder.misses == misses
+    assert eng.embedder.hits >= 1
+
+
+# --------------------------------------------------------------------------- #
+# Closed loop: routing → admission → decode                                    #
+# --------------------------------------------------------------------------- #
+def test_serve_batch_closed_loop_drains_all():
+    eng = build_paper_engine(make_policy("router_default"))
+    sched = ContinuousBatchScheduler(
+        SchedulerConfig(max_batch_slots=4, n_pages=512, page_size=16),
+        catalog=eng.catalog,
+    )
+    responses, sched = eng.serve_batch(QUERIES, REFS, scheduler=sched)
+    assert len(responses) == len(QUERIES)
+    assert len(sched.completed) == len(QUERIES)
+    assert sched.allocator.n_free == 512  # all KV pages returned
+    summary = sched.summary()
+    assert summary["completed"] == len(QUERIES)
+    # the routed mix reaches the scheduler: queues keyed by chosen bundles
+    routed = {r.record.bundle for r in responses}
+    scheduled = {req.bundle_name for req in sched.completed}
+    assert scheduled == routed
+    # decode budgets follow billed completions
+    by_id = {req.request_id: req for req in sched.completed}
+    for j, resp in enumerate(responses):
+        assert by_id[j].max_new_tokens == max(1, resp.record.completion_tokens)
+
+
+def test_scheduler_rejects_never_admittable_request():
+    """A request larger than the whole page pool must be refused at submit —
+    accepting it would wedge run_until_drained forever."""
+    from repro.serving.scheduler import Request
+
+    s = ContinuousBatchScheduler(SchedulerConfig(n_pages=4, page_size=16))
+    too_big = Request(request_id=0, query="q", bundle_name="medium_rag",
+                      prompt_tokens=70, max_new_tokens=10)  # needs 5 > 4 pages
+    assert not s.submit(too_big)
+    fits = Request(request_id=1, query="q", bundle_name="medium_rag",
+                   prompt_tokens=30, max_new_tokens=10)
+    assert s.submit(fits)
+    s.run_until_drained(lambda active: [False] * len(active))
+    assert len(s.completed) == 1
+
+
+def test_serve_batch_surfaces_queue_overflow():
+    eng = build_paper_engine(make_policy("router_default"))
+    tiny = ContinuousBatchScheduler(SchedulerConfig(max_queue=3), catalog=eng.catalog)
+    with pytest.raises(RuntimeError, match="accepted 3/28"):
+        eng.serve_batch(QUERIES, REFS, scheduler=tiny)
+
+
+def test_requests_from_records_ids_and_budgets():
+    eng = build_paper_engine(make_policy("fixed_direct"))
+    responses = eng.answer_batch(QUERIES[:4])
+    reqs = requests_from_records([r.record for r in responses], start_id=7)
+    assert [r.request_id for r in reqs] == [7, 8, 9, 10]
+    assert all(r.bundle_name == "direct_llm" for r in reqs)
+    assert all(r.max_new_tokens >= 1 for r in reqs)

@@ -75,6 +75,7 @@ def test_extended_catalog_routes_without_code_changes():
     assert all(d.bundle.name in cat.names for d in decisions)
 
 
+@pytest.mark.slow
 def test_train_cli_smoke_runs():
     """launch/train.py --smoke must run a few steps and reduce loss."""
     proc = subprocess.run(

@@ -3,8 +3,7 @@ fault tolerance, data pipeline."""
 
 import os
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
