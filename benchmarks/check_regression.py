@@ -1,0 +1,123 @@
+"""CI throughput-regression gate for the serving benchmark artifacts.
+
+Compares the BENCH_*.json emitted by the current run against the committed
+baselines and **fails (exit 1) if any gated throughput metric drops more
+than the threshold** (default 20%):
+
+    python benchmarks/check_regression.py --baseline results --current results-ci
+
+Gated metrics:
+
+* ``BENCH_serving.json``   → ``batched_qps``   (batched fast-path throughput)
+* ``BENCH_streaming.json`` → ``streaming_qps`` (best closed-loop streaming
+  throughput across (load, overlap) cells)
+
+Higher is better for every gated metric. A missing *current* artifact fails
+(the benchmark didn't run); a missing *baseline* warns and passes (first run
+on a fresh metric — commit the artifact to arm the gate). The threshold can
+be widened per-runner via ``BENCH_REGRESSION_THRESHOLD`` when CI hardware is
+noisier than the machine that produced the baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+# artifact file → (metric key, short description)
+GATED_METRICS: dict[str, list[tuple[str, str]]] = {
+    "BENCH_serving.json": [("batched_qps", "batched fast-path throughput")],
+    "BENCH_streaming.json": [("streaming_qps", "closed-loop streaming throughput")],
+}
+
+
+def compare(
+    baseline: dict, current: dict, metrics: list[tuple[str, str]], *, threshold: float
+) -> list[str]:
+    """Return failure messages for every gated metric that regressed more
+    than ``threshold`` (fraction of the baseline)."""
+    failures = []
+    for key, desc in metrics:
+        base, cur = baseline.get(key), current.get(key)
+        if base is None:
+            continue  # baseline predates the metric: nothing to gate yet
+        if cur is None:
+            failures.append(f"{key}: missing from current artifact ({desc})")
+            continue
+        if not math.isfinite(float(cur)):
+            # NaN compares False against any floor — without this check a
+            # broken benchmark would disarm the gate with a green check
+            failures.append(f"{key}: non-finite current value {cur!r} ({desc})")
+            continue
+        if not math.isfinite(float(base)):
+            # same trap on the other side: floor = k * NaN passes everything
+            failures.append(f"{key}: non-finite committed baseline {base!r} ({desc})")
+            continue
+        floor = (1.0 - threshold) * float(base)
+        if float(cur) < floor:
+            drop = 1.0 - float(cur) / float(base)
+            failures.append(
+                f"{key}: {cur:.1f} vs baseline {base:.1f} "
+                f"(-{drop:.0%}, allowed -{threshold:.0%}) — {desc}"
+            )
+    return failures
+
+
+def check_artifacts(baseline_dir: str, current_dir: str, *, threshold: float) -> int:
+    """Compare every gated artifact pair; returns the number of failures
+    (0 = gate passes) and prints a comparison table."""
+    n_failures = 0
+    for fname, metrics in GATED_METRICS.items():
+        base_path = os.path.join(baseline_dir, fname)
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(cur_path):
+            print(f"FAIL {fname}: current artifact missing at {cur_path}")
+            n_failures += 1
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        if not os.path.exists(base_path):
+            print(f"WARN {fname}: no committed baseline at {base_path}; gate unarmed")
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        failures = compare(baseline, current, metrics, threshold=threshold)
+
+        def fmt(v) -> str:
+            is_num = isinstance(v, (int, float)) and not isinstance(v, bool)
+            return f"{v:.1f}" if is_num else repr(v)
+
+        for key, _ in metrics:
+            if key in baseline and key in current:
+                print(f"     {fname}:{key} baseline={fmt(baseline[key])} current={fmt(current[key])}")
+        for msg in failures:
+            print(f"FAIL {fname}: {msg}")
+        n_failures += len(failures)
+    return n_failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="results", help="committed baseline dir")
+    ap.add_argument("--current", required=True, help="dir with this run's BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.20")),
+        help="max allowed fractional drop (default 0.20 = 20%%)",
+    )
+    args = ap.parse_args()
+    if not 0.0 < args.threshold < 1.0:
+        ap.error("--threshold must be in (0, 1)")
+    n = check_artifacts(args.baseline, args.current, threshold=args.threshold)
+    if n:
+        print(f"benchmark gate: {n} regression(s) beyond {args.threshold:.0%}")
+        sys.exit(1)
+    print(f"benchmark gate: OK (threshold {args.threshold:.0%})")
+
+
+if __name__ == "__main__":
+    main()

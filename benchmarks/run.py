@@ -34,21 +34,25 @@ def main() -> None:
             bench_kernel_oracles,
             bench_retrieval,
             bench_routing,
+            bench_streaming,
         )
 
         serving_artifact = os.path.join(args.results_dir, "BENCH_serving.json")
+        streaming_artifact = os.path.join(args.results_dir, "BENCH_streaming.json")
         sections = (
             bench_routing,
             bench_retrieval,
             bench_kernel_oracles,
             bench_engine,
             lambda: bench_engine_batched(serving_artifact),
+            lambda: bench_streaming(streaming_artifact),
         )
         for section in sections:
             for name, us, derived in section():
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
         print(f"# serving artifact: {serving_artifact}")
+        print(f"# streaming artifact: {streaming_artifact}")
 
     stores = ensure_results(args.results_dir)
     for table_name, fn in ALL_TABLES.items():

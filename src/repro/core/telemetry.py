@@ -250,12 +250,29 @@ class TelemetryStore:
             counts[r.strategy] = counts.get(r.strategy, 0) + 1
         return counts
 
+    def _field_values(self, field: str) -> np.ndarray:
+        """Record field as a float vector; ``"cost"`` aliases total billed
+        tokens (the Eq. 2 sum) for every aggregate below."""
+        if field == "cost":
+            return np.asarray([r.total_billed_tokens for r in self.records], np.float64)
+        return np.asarray([getattr(r, field) for r in self.records], np.float64)
+
     def mean(self, field: str) -> float:
         if not self.records:
             return float("nan")
-        if field == "cost":
-            return float(np.mean([r.total_billed_tokens for r in self.records]))
-        return float(np.mean([getattr(r, field) for r in self.records]))
+        return float(np.mean(self._field_values(field)))
+
+    def percentile(self, field: str, q: float | Iterable[float]) -> float | np.ndarray:
+        """Percentile(s) of a record field over the logged stream — the tail
+        view the closed-loop serving benchmarks report (p50/p95 latency vs
+        offered load). ``field`` accepts any QueryRecord numeric field or
+        ``"cost"`` for total billed tokens."""
+        if not self.records:
+            qs = np.atleast_1d(np.asarray(q, np.float64))
+            out = np.full(qs.shape, np.nan)
+            return float(out[0]) if np.isscalar(q) else out
+        out = np.percentile(self._field_values(field), q)
+        return float(out) if np.isscalar(q) else np.asarray(out)
 
     def per_strategy_means(self) -> dict[str, dict[str, float]]:
         """Table VI: per-strategy mean ± std of cost / latency / utility."""

@@ -21,6 +21,16 @@ def main() -> None:
     ap.add_argument("--epsilon", type=float, default=0.0)
     ap.add_argument("--min-confidence", type=float, default=0.0)
     ap.add_argument("--max-cost-tokens", type=int, default=None)
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="serve from a live Poisson arrival queue (retrieval/decode overlap) "
+        "instead of one pre-collected batch",
+    )
+    ap.add_argument("--rate-qps", type=float, default=0.0,
+                    help="offered load for --stream; <=0 means all arrive at t=0")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialize retrieval against decode (--stream only)")
+    ap.add_argument("--seed", type=int, default=0, help="arrival-trace seed (--stream)")
     args = ap.parse_args()
 
     import dataclasses
@@ -59,7 +69,27 @@ def main() -> None:
         ),
         index_embedding_tokens=index_tokens,
     )
-    telemetry = engine.run(queries, references)
+    if args.stream:
+        import json
+        import math
+
+        from repro.serving.generator import TransformerSlotDecoder
+        from repro.serving.streaming import StreamConfig, serve_stream
+
+        result = serve_stream(
+            engine,
+            queries,
+            references,
+            rate_qps=args.rate_qps if args.rate_qps > 0 else math.inf,
+            seed=args.seed,
+            decode_fn=TransformerSlotDecoder.tiny(n_slots=8),
+            config=StreamConfig(overlap=not args.no_overlap),
+        )
+        print(json.dumps(result.summary(), indent=2))
+        if result.rejections:
+            print(f"rejected {len(result.rejections)} requests "
+                  f"(first: {result.rejections[0].reason})")
+    telemetry = engine.telemetry if args.stream else engine.run(queries, references)
     telemetry.to_csv(args.out)
     print(telemetry.summary_json())
     print(f"wrote {len(telemetry.records)} records to {args.out}")

@@ -1,5 +1,19 @@
-"""Serving layer: RAG engine, scheduler, billing, latency model, experiment CLI."""
+"""Serving layer: RAG engine, scheduler, streaming loop, billing, latency model."""
 from repro.serving.billing import BillingLedger, TokenBill, bill_query
-from repro.serving.engine import EngineConfig, EngineResponse, RAGEngine, build_paper_engine
-from repro.serving.generator import ExtractiveGenerator, LMGenerator, build_prompt
+from repro.serving.engine import (
+    EngineConfig,
+    EngineResponse,
+    QueueOverflowError,
+    RAGEngine,
+    build_paper_engine,
+)
+from repro.serving.generator import (
+    ExtractiveGenerator,
+    LMGenerator,
+    TransformerSlotDecoder,
+    build_prompt,
+)
 from repro.serving.latency import LatencyModel, LatencyModelConfig
+from repro.serving.scheduler import ContinuousBatchScheduler, Rejection, Request, SchedulerConfig
+from repro.serving.streaming import StreamConfig, StreamingEngine, StreamResult, serve_stream
+from repro.serving.workload import Arrival, ArrivalProcess

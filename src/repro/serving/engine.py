@@ -52,10 +52,21 @@ from repro.serving.generator import ExtractiveGenerator, Generator, build_prompt
 from repro.serving.latency import LatencyModel
 from repro.serving.scheduler import (
     ContinuousBatchScheduler,
+    Rejection,
     Request,
     requests_from_records,
 )
 
+
+class QueueOverflowError(RuntimeError):
+    """Scheduler refused part of a batch. Carries the typed
+    :class:`~repro.serving.scheduler.Rejection` list (reason + queue depth
+    per refused request) so callers can shed load or retry selectively
+    instead of parsing the message."""
+
+    def __init__(self, message: str, rejections: list[Rejection]):
+        super().__init__(message)
+        self.rejections = rejections
 
 
 @dataclasses.dataclass(frozen=True)
@@ -503,14 +514,16 @@ class RAGEngine:
         responses = self.answer_batch(queries, references)
         scheduler = scheduler or ContinuousBatchScheduler(catalog=self.catalog)
         reqs = requests_from_records(
-            [r.record for r in responses], start_id=scheduler.total_submitted
+            [r.record for r in responses], start_id=scheduler.next_request_id
         )
+        n_rej_before = len(scheduler.rejections)
         accepted = scheduler.submit_many(reqs)
         if accepted < len(reqs):
-            raise RuntimeError(
+            raise QueueOverflowError(
                 f"scheduler accepted {accepted}/{len(reqs)} requests (queue cap "
                 f"{scheduler.config.max_queue}, page pool {scheduler.config.n_pages}); "
-                "drain the scheduler, raise its capacity, or submit smaller batches"
+                "drain the scheduler, raise its capacity, or submit smaller batches",
+                rejections=scheduler.rejections[n_rej_before:],
             )
         decode_fn = decode_fn or (lambda active: [False] * len(active))
         scheduler.run_until_drained(decode_fn, max_steps=max_steps)

@@ -19,6 +19,7 @@ Both respect the bundle's GenerationSpec (max_output_tokens, temperature 0).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Protocol, Sequence
 
 import numpy as np
@@ -173,6 +174,123 @@ class LMGenerator:
         n_new = min(spec.max_output_tokens, self.max_len - toks.shape[1])
         out = greedy_generate(self.params, self.cfg, toks, n_new=n_new, max_len=self.max_len)
         return self.decode(np.asarray(out[0]).tolist())
+
+
+class TransformerSlotDecoder:
+    """Token-level ``decode_fn`` for the continuous-batching scheduler.
+
+    Replaces the synthetic countdown stub (``lambda active: [False]*n``) with
+    real per-step transformer decode on the scheduler's slots: every call runs
+    one ``models/transformer.decode_step`` over a fixed ``(n_slots,)`` batch
+    (compiled once), so scheduler steps cost real decode FLOPs and EOS can
+    fire from the model rather than only from the budget.
+
+    Slot management mirrors continuous batching: request_ids map to cache
+    slots on first sight, slots free as soon as their request leaves the
+    active set, and a reused slot restarts at cache length 0 (``decode_step``
+    masks attention by per-sequence length, so stale KV entries are inert).
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int = 8, eos_id: int | None = None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.kvcache import KVCache
+        from repro.models.transformer import decode_step
+
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.eos_id = eos_id
+        self.cache = KVCache.zeros(
+            cfg.n_layers, n_slots, cfg.max_seq_len, cfg.n_kv_heads,
+            cfg.head_dim, dtype=cfg.compute_dtype,
+        )
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_of: dict[int, int] = {}
+        self._free = list(range(n_slots))
+        self.steps_run = 0
+        max_len = cfg.max_seq_len
+
+        def step(cache, toks):
+            # wrap slots that hit the context window (inert restart; the
+            # scheduler's token budget, not the cache, bounds generation)
+            cache = dataclasses.replace(
+                cache,
+                lengths=jnp.where(cache.lengths >= max_len - 1, 0, cache.lengths),
+            )
+            logits, cache = decode_step(params, cfg, cache, toks)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._step = jax.jit(step)  # one host dispatch per scheduler step
+        self._jnp = jnp
+
+    @classmethod
+    def tiny(cls, *, n_slots: int = 8, max_len: int = 256, eos_id: int | None = None,
+             seed: int = 0) -> "TransformerSlotDecoder":
+        """Small CPU-friendly backbone sized for the paper benchmark budgets."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import TransformerConfig, init_params
+
+        cfg = TransformerConfig(
+            name="slot_decoder_tiny", n_layers=2, d_model=32, n_heads=2,
+            n_kv_heads=2, d_ff=64, vocab=64, compute_dtype=jnp.float32,
+            max_seq_len=max_len,
+        )
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        return cls(params, cfg, n_slots=n_slots, eos_id=eos_id)
+
+    def warmup(self) -> None:
+        """Compile the fused decode step (fixed shapes) without touching slot
+        state — benchmarks call this so compile cost lands nowhere."""
+        import jax
+
+        jax.block_until_ready(self._step(self.cache, self.tokens)[0])
+
+    def reset(self) -> None:
+        """Forget all slot assignments (between independent runs request_ids
+        restart, so stale id→slot entries would alias fresh requests)."""
+        jnp = self._jnp
+        self.slot_of.clear()
+        self._free = list(range(self.n_slots))
+        self.cache = dataclasses.replace(
+            self.cache, lengths=jnp.zeros((self.n_slots,), jnp.int32)
+        )
+
+    def _assign(self, req) -> int:
+        slot = self._free.pop()
+        self.slot_of[req.request_id] = slot
+        # restart the slot: length 0 masks all stale cache entries
+        self.cache = dataclasses.replace(
+            self.cache, lengths=self.cache.lengths.at[slot].set(0)
+        )
+        # stable digest: str.hash is salted per process, which would make
+        # token streams (and model-EOS finish steps) unreproducible
+        seed_tok = zlib.crc32(req.query.encode()) % self.cfg.vocab
+        self.tokens = self.tokens.at[slot].set(seed_tok)
+        return slot
+
+    def __call__(self, active) -> list[bool]:
+        live_ids = {r.request_id for r in active}
+        for rid in [rid for rid in self.slot_of if rid not in live_ids]:
+            self._free.append(self.slot_of.pop(rid))
+        for req in active:
+            if req.request_id not in self.slot_of:
+                if not self._free:
+                    raise RuntimeError(
+                        f"{len(self.slot_of)} requests active but only "
+                        f"{self.n_slots} decoder slots — size the decoder to "
+                        "the scheduler's max_batch_slots"
+                    )
+                self._assign(req)
+        self.tokens, self.cache = self._step(self.cache, self.tokens)
+        self.steps_run += 1
+        if self.eos_id is None:
+            return [False] * len(active)
+        toks = np.asarray(self.tokens)
+        return [bool(toks[self.slot_of[r.request_id]] == self.eos_id) for r in active]
 
 
 def build_prompt(query: str, context_passages: Sequence[str]) -> str:

@@ -36,7 +36,12 @@ class Request:
     bundle_name: str
     prompt_tokens: int
     max_new_tokens: int
-    arrived_step: int = 0
+    # Arrival tick on the scheduler's step clock. ``None`` means "stamp me
+    # at submit"; callers tracking arrival on that clock themselves may set
+    # it explicitly and submit preserves it. (The streaming engine measures
+    # intake/routing wait in wall time via RequestTiming instead — step
+    # ticks only advance during decode, so they can't express it.)
+    arrived_step: int | None = None
     # filled by the scheduler:
     admitted_step: int | None = None
     finished_step: int | None = None
@@ -44,7 +49,27 @@ class Request:
 
     @property
     def queue_wait(self) -> int | None:
-        return None if self.admitted_step is None else self.admitted_step - self.arrived_step
+        """Steps spent queued. Clamped at 0: when admission and submit land
+        on the same tick — or the caller stamped an arrival tick slightly
+        ahead of the scheduler clock (streaming intake runs on wall time) —
+        the wait is zero, never negative."""
+        if self.admitted_step is None or self.arrived_step is None:
+            return None
+        return max(0, self.admitted_step - self.arrived_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Typed backpressure signal: why a submit was refused, and how deep the
+    queue was when it happened — the telemetry a caller needs to shed load
+    or retry intelligently instead of parsing a False."""
+
+    request_id: int
+    query: str
+    bundle_name: str
+    reason: str  # "queue_full" | "oversized"
+    queue_depth: int
+    step: int
 
 
 def requests_from_records(records: Sequence, *, start_id: int = 0) -> list[Request]:
@@ -89,26 +114,57 @@ class ContinuousBatchScheduler:
         self.allocator = PageAllocator(config.n_pages)
         self.step_count = 0
         self.completed: list[Request] = []
+        self.rejections: list[Rejection] = []
         self.total_submitted = 0
+        self._id_watermark = 0  # 1 + highest request_id ever offered
         self._rr = 0  # round-robin cursor over bundle queues
 
     # -- intake ------------------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        q = self.queues[req.bundle_name]
-        if sum(len(x) for x in self.queues.values()) >= self.config.max_queue:
-            return False
-        if self._pages_needed(req) > self.config.n_pages:
+    def queue_depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    @property
+    def next_request_id(self) -> int:
+        """First id guaranteed fresh — past every id ever *offered*, accepted
+        or rejected. ``total_submitted`` counts accepts only, so deriving new
+        ids from it after a rejection would reuse a live id (and corrupt the
+        active dict / page-pool bookkeeping keyed by it)."""
+        return self._id_watermark
+
+    def try_submit(self, req: Request) -> Rejection | None:
+        """Submit with typed backpressure: ``None`` on accept, a
+        :class:`Rejection` saying why (and how deep the queue was) on refuse."""
+        self._id_watermark = max(self._id_watermark, req.request_id + 1)
+        depth = self.queue_depth()
+        if depth >= self.config.max_queue:
+            reason = "queue_full"
+        elif self._pages_needed(req) > self.config.n_pages:
             # can never be admitted even on an empty pool: accepting it would
             # wedge the queue (run_until_drained would spin to max_steps)
-            return False
-        req.arrived_step = self.step_count
-        q.append(req)
-        self.total_submitted += 1
-        return True
+            reason = "oversized"
+        else:
+            if req.arrived_step is None:
+                req.arrived_step = self.step_count
+            self.queues[req.bundle_name].append(req)
+            self.total_submitted += 1
+            return None
+        rej = Rejection(
+            request_id=req.request_id,
+            query=req.query,
+            bundle_name=req.bundle_name,
+            reason=reason,
+            queue_depth=depth,
+            step=self.step_count,
+        )
+        self.rejections.append(rej)
+        return rej
+
+    def submit(self, req: Request) -> bool:
+        return self.try_submit(req) is None
 
     def submit_many(self, reqs: Iterable[Request]) -> int:
         """Submit a routed batch; returns how many were accepted (the rest
-        hit the queue cap — backpressure the caller should surface)."""
+        hit the queue cap — backpressure surfaced via ``self.rejections``)."""
         return sum(1 for r in reqs if self.submit(r))
 
     def _pages_needed(self, req: Request) -> int:
@@ -149,6 +205,17 @@ class ContinuousBatchScheduler:
         admitted = self._admit()
         active = list(self.active.values())
         done_flags = decode_fn(active) if active else []
+        if len(done_flags) != len(active):
+            # zip would silently truncate: requests past the shorter list
+            # would never advance `generated`, stalling the drain loop.
+            raise ValueError(
+                f"decode_fn returned {len(done_flags)} flags for {len(active)} "
+                "active requests"
+            )
+        # Two-phase retire: finish flags are collected over an immutable
+        # snapshot first, then retired in a separate loop — same-step
+        # multi-finish must never mutate `self.active` while iterating it
+        # (the regression test pins this with all-finish batches).
         finished = []
         for req, eos in zip(active, done_flags):
             req.generated += 1
@@ -166,7 +233,7 @@ class ContinuousBatchScheduler:
             "active": len(self.active),
             "finished": len(finished),
             "free_pages": self.allocator.n_free,
-            "queued": sum(len(q) for q in self.queues.values()),
+            "queued": self.queue_depth(),
         }
 
     def run_until_drained(self, decode_fn, *, max_steps: int = 100_000) -> list[dict]:

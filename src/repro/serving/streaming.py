@@ -1,0 +1,315 @@
+"""Streaming serving loop: live intake, retrieval/decode overlap, real decode.
+
+The batched path (``RAGEngine.answer_batch`` / ``serve_batch``) consumes
+pre-collected batches; this module serves a **live arrival queue**. A
+:class:`StreamingEngine` admits :class:`~repro.serving.workload.Arrival`
+events as wall-clock time reaches them, micro-batches whatever is waiting
+through the engine's vectorized route→embed→search→generate fast path, and
+feeds the routed requests to the :class:`ContinuousBatchScheduler` for
+token-level decode.
+
+**Two-slot pipeline.** The routing/retrieval stage for micro-batch N+1 runs
+on a worker thread while the scheduler decodes micro-batch N on the main
+thread, so decode never stalls on FAISS/Pallas MIPS and retrieval never
+waits for the decode loop (``StreamConfig.overlap=False`` serializes the
+two stages — the closed-loop benchmark measures both). At most one routing
+stage is in flight at a time, which also serializes all engine-state
+mutation: micro-batches enter ``answer_batch`` in strict arrival order, so a
+drained streaming run produces records **bit-identical** to one
+``answer_batch`` call over the same arrival-ordered stream (chunking the
+stream never changes records — the consecutive-batches parity the batched
+tests pin).
+
+Backpressure is typed end to end: a full intake queue or a scheduler refusal
+surfaces as a :class:`~repro.serving.scheduler.Rejection` carrying the
+reason and observed queue depth, never a silent drop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.serving.engine import EngineResponse, RAGEngine
+from repro.serving.scheduler import (
+    ContinuousBatchScheduler,
+    Rejection,
+    Request,
+    SchedulerConfig,
+    requests_from_records,
+)
+from repro.serving.workload import Arrival, ArrivalProcess
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    microbatch_max: int = 16  # queries per routing/retrieval stage
+    max_intake: int = 1024  # front-door cap (pre-routing backpressure)
+    overlap: bool = True  # pipeline retrieval against decode
+    idle_sleep_s: float = 0.0002  # nothing to decode, nothing due: yield
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """Wall-clock milestones for one streamed request (seconds from run t0)."""
+
+    arrival_s: float
+    routed_s: float | None = None  # routing+retrieval+generation done
+    admitted_s: float | None = None  # accepted into a scheduler queue
+    first_token_s: float | None = None
+    last_token_s: float | None = None
+
+    @property
+    def ttft_s(self) -> float | None:
+        return None if self.first_token_s is None else self.first_token_s - self.arrival_s
+
+    @property
+    def ttlt_s(self) -> float | None:
+        return None if self.last_token_s is None else self.last_token_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class StreamResult:
+    responses: list[EngineResponse]
+    rejections: list[Rejection]
+    timings: dict[int, RequestTiming]  # request_id → milestones
+    step_history: list[dict]
+    wall_s: float
+    offered_qps: float
+    overlap: bool
+
+    @property
+    def records(self) -> list:
+        return [r.record for r in self.responses]
+
+    def percentile_ms(self, attr: str, q: float) -> float:
+        vals = [
+            getattr(t, attr) for t in self.timings.values() if getattr(t, attr) is not None
+        ]
+        return float(np.percentile(np.asarray(vals) * 1e3, q)) if vals else float("nan")
+
+    def summary(self) -> dict:
+        """JSON-safe run summary: non-finite values (inf offered load on
+        burst workloads, NaN percentiles when nothing completed) become
+        ``None`` so ``json.dumps`` output stays strict-parseable."""
+        completed = sum(1 for t in self.timings.values() if t.last_token_s is not None)
+
+        def fin(x: float) -> float | None:
+            return float(x) if math.isfinite(x) else None
+
+        return {
+            "offered_qps": fin(self.offered_qps),
+            "overlap": self.overlap,
+            "completed": completed,
+            "rejected": len(self.rejections),
+            "wall_s": self.wall_s,
+            "throughput_qps": fin(completed / self.wall_s) if self.wall_s > 0 else None,
+            "p50_ttft_ms": fin(self.percentile_ms("ttft_s", 50)),
+            "p95_ttft_ms": fin(self.percentile_ms("ttft_s", 95)),
+            "p50_ttlt_ms": fin(self.percentile_ms("ttlt_s", 50)),
+            "p95_ttlt_ms": fin(self.percentile_ms("ttlt_s", 95)),
+            "max_queue_depth": max((m["queued"] for m in self.step_history), default=0),
+            "decode_steps": len(self.step_history),
+        }
+
+
+class StreamingEngine:
+    """Live-queue serving on top of a :class:`RAGEngine` and scheduler."""
+
+    def __init__(
+        self,
+        engine: RAGEngine,
+        *,
+        scheduler: ContinuousBatchScheduler | None = None,
+        decode_fn: Callable[[list[Request]], list[bool]] | None = None,
+        config: StreamConfig = StreamConfig(),
+    ):
+        self.engine = engine
+        self.scheduler = scheduler or ContinuousBatchScheduler(
+            SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16),
+            catalog=engine.catalog,
+        )
+        self.decode_fn = decode_fn or (lambda active: [False] * len(active))
+        self.config = config
+        # Monotone id source seeded past every id the scheduler has ever
+        # seen (accepted or rejected), so reusing a scheduler never mints a
+        # colliding request_id.
+        self._next_id = self.scheduler.next_request_id
+
+    # ------------------------------------------------------------------ #
+    def run(self, workload: ArrivalProcess | Sequence[Arrival]) -> StreamResult:
+        """Serve the workload to completion; returns responses + timeline.
+
+        The loop interleaves four duties each iteration: (1) move due
+        arrivals into the intake queue, (2) launch a routing/retrieval
+        micro-batch when none is in flight, (3) harvest a finished stage
+        into scheduler admission, (4) run one decode step if anything is
+        active or queued. With ``overlap`` the stage launched in (2) runs on
+        a worker thread, so (4) proceeds concurrently.
+        """
+        arrivals = list(workload)
+        offered = workload.offered_qps if isinstance(workload, ArrivalProcess) else float("nan")
+        cfg = self.config
+        sched = self.scheduler
+        intake: deque[Arrival] = deque()
+        responses: list[EngineResponse] = []
+        rejections: list[Rejection] = []
+        timings: dict[int, RequestTiming] = {}
+        step_history: list[dict] = []
+        inflight: Future | None = None
+        inflight_batch: list[Arrival] = []
+        executor = ThreadPoolExecutor(max_workers=1) if cfg.overlap else None
+        ev = 0
+        t0 = time.perf_counter()
+        now = 0.0
+
+        def clock() -> float:
+            return time.perf_counter() - t0
+
+        def route_stage(batch: list[Arrival]) -> list[EngineResponse]:
+            return self.engine.answer_batch(
+                [a.query for a in batch], [a.reference for a in batch]
+            )
+
+        try:
+            while True:
+                now = clock()
+                # (1) intake: arrivals due by now
+                while ev < len(arrivals) and arrivals[ev].time_s <= now:
+                    a = arrivals[ev]
+                    ev += 1
+                    if len(intake) >= cfg.max_intake:
+                        rejections.append(
+                            Rejection(
+                                request_id=-1,
+                                query=a.query,
+                                bundle_name="",
+                                reason="intake_full",
+                                queue_depth=len(intake),
+                                step=sched.step_count,
+                            )
+                        )
+                        continue
+                    intake.append(a)
+
+                # (3) harvest a finished routing stage → scheduler admission
+                if inflight is not None and inflight.done():
+                    batch, inflight_batch = inflight_batch, []
+                    stage_responses = inflight.result()
+                    inflight = None
+                    self._admit(batch, stage_responses, responses, rejections, timings, clock())
+
+                # (2) launch the next routing/retrieval micro-batch
+                if inflight is None and intake:
+                    batch = [intake.popleft() for _ in range(min(cfg.microbatch_max, len(intake)))]
+                    if executor is not None:
+                        inflight_batch = batch
+                        inflight = executor.submit(route_stage, batch)
+                    else:
+                        stage_responses = route_stage(batch)
+                        self._admit(batch, stage_responses, responses, rejections, timings, clock())
+
+                # (4) decode: one token for everything active
+                if sched.active or sched.queue_depth():
+                    before_completed = len(sched.completed)
+                    metrics = sched.step(self.decode_fn)
+                    step_history.append(metrics)
+                    t_step = clock()
+                    for req in sched.active.values():
+                        tm = timings.get(req.request_id)
+                        if tm is not None and req.generated >= 1 and tm.first_token_s is None:
+                            tm.first_token_s = t_step
+                    for req in sched.completed[before_completed:]:
+                        tm = timings.get(req.request_id)
+                        if tm is not None:
+                            if tm.first_token_s is None:
+                                tm.first_token_s = t_step
+                            tm.last_token_s = t_step
+                    continue  # decode-bound: re-check intake immediately
+
+                # exit: nothing anywhere
+                if ev >= len(arrivals) and not intake and inflight is None:
+                    break
+
+                # idle: wait for the stage thread or the next arrival.
+                # Block on the future instead of polling — spinning here
+                # would steal the GIL from the routing thread we're waiting
+                # for. Wake early for the next arrival so intake stays live.
+                if inflight is not None:
+                    wait_s = 0.05
+                    if ev < len(arrivals):
+                        wait_s = min(wait_s, max(arrivals[ev].time_s - clock(), 0.0))
+                    futures_wait([inflight], timeout=max(wait_s, cfg.idle_sleep_s))
+                elif ev < len(arrivals):
+                    wait = arrivals[ev].time_s - clock()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.005))
+        finally:
+            if executor is not None:
+                executor.shutdown(wait=True)
+
+        return StreamResult(
+            responses=responses,
+            rejections=rejections,
+            timings=timings,
+            step_history=step_history,
+            wall_s=clock(),
+            offered_qps=offered,
+            overlap=cfg.overlap,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _admit(
+        self,
+        batch: list[Arrival],
+        stage_responses: list[EngineResponse],
+        responses: list[EngineResponse],
+        rejections: list[Rejection],
+        timings: dict[int, RequestTiming],
+        now: float,
+    ) -> None:
+        """Convert one routed micro-batch into scheduler submissions."""
+        sched = self.scheduler
+        reqs = requests_from_records(
+            [r.record for r in stage_responses], start_id=self._next_id
+        )
+        self._next_id += len(reqs)
+        responses.extend(stage_responses)
+        for arrival, req in zip(batch, reqs):
+            tm = RequestTiming(arrival_s=arrival.time_s, routed_s=now)
+            rej = sched.try_submit(req)
+            if rej is not None:
+                rejections.append(rej)
+                continue
+            tm.admitted_s = now
+            timings[req.request_id] = tm
+
+
+def serve_stream(
+    engine: RAGEngine,
+    queries: Sequence[str],
+    references: Sequence[str] | None = None,
+    *,
+    rate_qps: float = math.inf,
+    seed: int = 0,
+    decode_fn: Callable[[list[Request]], list[bool]] | None = None,
+    scheduler: ContinuousBatchScheduler | None = None,
+    config: StreamConfig = StreamConfig(),
+) -> StreamResult:
+    """One-call streaming run: Poisson arrivals at ``rate_qps`` (or all at
+    t=0 when the rate is infinite) drained to completion."""
+    if math.isinf(rate_qps):
+        workload = ArrivalProcess.all_at_once(queries, references)
+    else:
+        workload = ArrivalProcess.poisson(queries, references, rate_qps=rate_qps, seed=seed)
+    streamer = StreamingEngine(
+        engine, scheduler=scheduler, decode_fn=decode_fn, config=config
+    )
+    return streamer.run(workload)

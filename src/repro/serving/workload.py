@@ -1,0 +1,108 @@
+"""Arrival workloads for the streaming serving loop.
+
+The streaming engine consumes an :class:`ArrivalProcess` — a time-ordered
+sequence of :class:`Arrival` events — instead of a pre-collected batch.
+Two constructors cover the serving-paper workloads:
+
+* :meth:`ArrivalProcess.poisson` — open-loop Poisson arrivals at a target
+  offered load (exponential inter-arrival gaps, seeded → a given
+  ``(rate, seed)`` always produces the same trace, so benchmark runs are
+  reproducible).
+* :meth:`ArrivalProcess.from_trace` — replay explicit arrival times, e.g.
+  recorded production traffic or the degenerate all-at-once trace used by
+  the parity tests (every query arrives at t=0, which makes a drained
+  streaming run comparable to one ``answer_batch`` call).
+
+Times are seconds relative to run start; the engine maps them onto its own
+wall clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One query hitting the front door at ``time_s`` (relative seconds)."""
+
+    time_s: float
+    query: str
+    reference: str | None = None
+
+
+class ArrivalProcess:
+    """A finite, time-sorted arrival trace with its offered-load metadata."""
+
+    def __init__(self, arrivals: Sequence[Arrival], *, offered_qps: float | None = None):
+        self.arrivals = sorted(arrivals, key=lambda a: a.time_s)
+        if self.arrivals and self.arrivals[0].time_s < 0:
+            raise ValueError("arrival times must be >= 0")
+        if offered_qps is None:
+            span = self.arrivals[-1].time_s if self.arrivals else 0.0
+            offered_qps = len(self.arrivals) / span if span > 0 else float("inf")
+        self.offered_qps = float(offered_qps)
+
+    def __len__(self) -> int:
+        return len(self.arrivals)
+
+    def __iter__(self) -> Iterator[Arrival]:
+        return iter(self.arrivals)
+
+    @property
+    def makespan_s(self) -> float:
+        return self.arrivals[-1].time_s if self.arrivals else 0.0
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def poisson(
+        cls,
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+        *,
+        rate_qps: float,
+        seed: int = 0,
+    ) -> "ArrivalProcess":
+        """Open-loop Poisson arrivals: exponential gaps at ``rate_qps``."""
+        if rate_qps <= 0:
+            raise ValueError("rate_qps must be positive")
+        refs = list(references) if references is not None else [None] * len(queries)
+        if len(refs) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(refs)} references")
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate_qps, size=len(queries))
+        times = np.cumsum(gaps)
+        arrivals = [
+            Arrival(time_s=float(t), query=q, reference=r)
+            for t, q, r in zip(times, queries, refs)
+        ]
+        return cls(arrivals, offered_qps=rate_qps)
+
+    @classmethod
+    def from_trace(
+        cls,
+        times_s: Sequence[float],
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+    ) -> "ArrivalProcess":
+        """Replay explicit arrival times (must align 1:1 with queries)."""
+        if len(times_s) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(times_s)} times")
+        refs = list(references) if references is not None else [None] * len(queries)
+        if len(refs) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(refs)} references")
+        arrivals = [
+            Arrival(time_s=float(t), query=q, reference=r)
+            for t, q, r in zip(times_s, queries, refs)
+        ]
+        return cls(arrivals)
+
+    @classmethod
+    def all_at_once(
+        cls, queries: Sequence[str], references: Sequence[str] | None = None
+    ) -> "ArrivalProcess":
+        """Every query at t=0 — the drained-run parity workload."""
+        return cls.from_trace([0.0] * len(queries), queries, references)

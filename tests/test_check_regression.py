@@ -1,0 +1,95 @@
+"""The CI benchmark gate must demonstrably fail on an injected throughput
+drop and pass on parity/noise-sized wiggle."""
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import GATED_METRICS, check_artifacts, compare
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _write(dirpath, serving_qps, streaming_qps):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, "BENCH_serving.json"), "w") as f:
+        json.dump({"benchmark": "paper_28_queries", "batched_qps": serving_qps}, f)
+    with open(os.path.join(dirpath, "BENCH_streaming.json"), "w") as f:
+        json.dump({"benchmark": "streaming_paper28", "streaming_qps": streaming_qps}, f)
+
+
+def test_gate_passes_at_parity_and_small_wiggle(tmp_path):
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, 500.0, 30.0)
+    _write(cur, 500.0, 30.0)
+    assert check_artifacts(base, cur, threshold=0.20) == 0
+    _write(cur, 450.0, 27.0)  # -10%: inside the 20% band
+    assert check_artifacts(base, cur, threshold=0.20) == 0
+
+
+def test_gate_fails_on_injected_25pct_drop(tmp_path):
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, 500.0, 30.0)
+    _write(cur, 375.0, 30.0)  # batched -25%
+    assert check_artifacts(base, cur, threshold=0.20) == 1
+    _write(cur, 375.0, 22.5)  # batched and streaming both -25%
+    assert check_artifacts(base, cur, threshold=0.20) == 2
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    """End-to-end through the CLI, exactly as the CI job invokes it."""
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, 500.0, 30.0)
+    _write(cur, 375.0, 30.0)  # -25% injected drop
+    cmd = [sys.executable, "benchmarks/check_regression.py",
+           "--baseline", base, "--current", cur]
+    env = {**os.environ, "PYTHONPATH": "src"}
+    proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True, env=env)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "batched_qps" in proc.stdout
+    _write(cur, 500.0, 30.0)
+    proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_missing_current_fails_missing_baseline_warns(tmp_path):
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, 500.0, 30.0)
+    # no current artifacts at all: every gated file is a failure
+    assert check_artifacts(base, cur, threshold=0.20) == len(GATED_METRICS)
+    # current exists but baseline missing: unarmed, passes
+    _write(cur, 100.0, 1.0)
+    assert check_artifacts(str(tmp_path / "nobase"), cur, threshold=0.20) == 0
+
+
+def test_nan_current_metric_fails_not_disarms(tmp_path):
+    """NaN compares False against any floor; the gate must fail, not pass."""
+    metrics = GATED_METRICS["BENCH_serving.json"]
+    fails = compare({"batched_qps": 100.0}, {"batched_qps": float("nan")},
+                    metrics, threshold=0.2)
+    assert len(fails) == 1 and "non-finite" in fails[0]
+
+
+def test_compare_handles_missing_metric_keys():
+    metrics = GATED_METRICS["BENCH_serving.json"]
+    # metric absent from baseline: not yet armed for that key
+    assert compare({}, {"batched_qps": 100.0}, metrics, threshold=0.2) == []
+    # metric present in baseline but dropped from current: hard fail
+    fails = compare({"batched_qps": 100.0}, {}, metrics, threshold=0.2)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_committed_baselines_are_well_formed():
+    """The artifacts the CI gate compares against must stay parseable and
+    carry the gated metrics."""
+    results = os.path.join(REPO, "results")
+    for fname, metrics in GATED_METRICS.items():
+        path = os.path.join(results, fname)
+        assert os.path.exists(path), f"committed baseline {fname} missing"
+        with open(path) as f:
+            data = json.load(f)
+        for key, _ in metrics:
+            assert key in data and float(data[key]) > 0
