@@ -1,67 +1,142 @@
-"""CI throughput-regression gate for the serving benchmark artifacts.
+"""CI regression gate for the serving benchmark artifacts.
 
 Compares the BENCH_*.json emitted by the current run against the committed
-baselines and **fails (exit 1) if any gated throughput metric drops more
-than the threshold** (default 20%):
+baselines and **fails (exit 1) if any gated metric regresses beyond its
+allowed band**:
 
     python benchmarks/check_regression.py --baseline results --current results-ci
 
-Gated metrics:
+Absolute wall-clock throughput (``batched_qps``, ``streaming_qps``) is
+deliberately *not* gated: it scales with whatever hardware CI happens to
+run on and swings 20-40% run-to-run on shared runners, so an absolute
+floor calibrated on one machine flakes on every other. The artifacts keep
+those numbers as telemetry; the gate reads hardware-independent signals:
 
-* ``BENCH_serving.json``   → ``batched_qps``   (batched fast-path throughput)
-* ``BENCH_streaming.json`` → ``streaming_qps`` (best closed-loop streaming
-  throughput across (load, overlap) cells)
+* ``BENCH_serving.json``
+  - ``speedup`` — batched vs sequential throughput, both measured in the
+    same process on the same host, so the ratio survives a slow runner.
+    Gated with a wide band (default -50%): it trips when the fast path
+    stops being fast, not when the runner is busy.
+  - ``closed_loop.decode_steps`` — deterministic step count for draining
+    the paper workload through the scheduler (lower is better).
+* ``BENCH_streaming.json`` (``gate`` section = the single-threaded
+  burst-serial cell, whose counters are bit-stable run-to-run)
+  - ``gate.completed`` — every request must still drain.
+  - ``gate.rejected`` — spurious backpressure is a regression (lower is
+    better; baseline 0 means any rejection fails).
+  - ``gate.decode_steps`` — deterministic decode-step count (lower is
+    better).
 
-Higher is better for every gated metric. A missing *current* artifact fails
-(the benchmark didn't run); a missing *baseline* warns and passes (first run
-on a fresh metric — commit the artifact to arm the gate). The threshold can
-be widened per-runner via ``BENCH_REGRESSION_THRESHOLD`` when CI hardware is
-noisier than the machine that produced the baseline.
+A missing *current* artifact fails (the benchmark didn't run). A metric
+missing from the *baseline* warns and passes (it predates the gate —
+commit a fresh artifact to arm it), but an explicit ``null`` in the
+baseline fails: ``summary()`` emits null for non-finite values, so a null
+baseline means a broken run was committed and the gate must say so rather
+than silently disarm. The default band for counter metrics can be widened
+via ``BENCH_REGRESSION_THRESHOLD``.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import os
 import sys
 
-# artifact file → (metric key, short description)
-GATED_METRICS: dict[str, list[tuple[str, str]]] = {
-    "BENCH_serving.json": [("batched_qps", "batched fast-path throughput")],
-    "BENCH_streaming.json": [("streaming_qps", "closed-loop streaming throughput")],
+_MISSING = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    key: str  # dotted path into the artifact JSON
+    desc: str
+    higher_is_better: bool = True
+    threshold: float | None = None  # fractional band; None = CLI/global value
+
+
+# artifact file → gated metrics
+GATED_METRICS: dict[str, list[Metric]] = {
+    "BENCH_serving.json": [
+        Metric("speedup", "batched vs sequential same-host speedup", threshold=0.50),
+        Metric(
+            "closed_loop.decode_steps",
+            "closed-loop decode steps (deterministic)",
+            higher_is_better=False,
+        ),
+    ],
+    "BENCH_streaming.json": [
+        # band 0: the cell is deterministic and the contract is full drain —
+        # losing even one request must fail, not hide inside a noise band
+        Metric("gate.completed", "burst-serial drained completions", threshold=0.0),
+        Metric("gate.rejected", "burst-serial rejections", higher_is_better=False),
+        Metric(
+            "gate.decode_steps",
+            "burst-serial decode steps (deterministic)",
+            higher_is_better=False,
+        ),
+    ],
 }
 
 
+def lookup(d: dict, path: str):
+    """Resolve a dotted ``path`` in nested dicts. Returns ``_MISSING`` only
+    when a key is genuinely absent; a ``null`` (or non-dict) container along
+    the path resolves to ``None`` so a baseline with ``"gate": null`` fails
+    the null check instead of silently disarming every metric under it."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict):
+            return None
+        if part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
 def compare(
-    baseline: dict, current: dict, metrics: list[tuple[str, str]], *, threshold: float
+    baseline: dict, current: dict, metrics: list[Metric], *, threshold: float
 ) -> list[str]:
-    """Return failure messages for every gated metric that regressed more
-    than ``threshold`` (fraction of the baseline)."""
+    """Return failure messages for every gated metric outside its band."""
     failures = []
-    for key, desc in metrics:
-        base, cur = baseline.get(key), current.get(key)
-        if base is None:
+    for m in metrics:
+        band = m.threshold if m.threshold is not None else threshold
+        base, cur = lookup(baseline, m.key), lookup(current, m.key)
+        if base is _MISSING:
             continue  # baseline predates the metric: nothing to gate yet
-        if cur is None:
-            failures.append(f"{key}: missing from current artifact ({desc})")
+        if base is None:
+            # summary() writes null for non-finite values; a null baseline
+            # means a broken run was committed. Failing (not skipping) keeps
+            # the gate armed — the exact trap the non-finite checks below
+            # close on the current side.
+            failures.append(f"{m.key}: committed baseline is null ({m.desc})")
+            continue
+        if cur is _MISSING or cur is None:
+            failures.append(f"{m.key}: missing from current artifact ({m.desc})")
             continue
         if not math.isfinite(float(cur)):
-            # NaN compares False against any floor — without this check a
+            # NaN compares False against any bound — without this check a
             # broken benchmark would disarm the gate with a green check
-            failures.append(f"{key}: non-finite current value {cur!r} ({desc})")
+            failures.append(f"{m.key}: non-finite current value {cur!r} ({m.desc})")
             continue
         if not math.isfinite(float(base)):
-            # same trap on the other side: floor = k * NaN passes everything
-            failures.append(f"{key}: non-finite committed baseline {base!r} ({desc})")
+            failures.append(f"{m.key}: non-finite committed baseline {base!r} ({m.desc})")
             continue
-        floor = (1.0 - threshold) * float(base)
-        if float(cur) < floor:
-            drop = 1.0 - float(cur) / float(base)
+        base_f, cur_f = float(base), float(cur)
+        if m.higher_is_better:
+            bad = cur_f < (1.0 - band) * base_f
+        else:
+            bad = cur_f > (1.0 + band) * base_f
+        if bad:
+            if base_f:
+                delta = (cur_f - base_f) / base_f
+                sign = "-" if m.higher_is_better else "+"
+                detail = f"({delta:+.0%}, allowed {sign}{band:.0%})"
+            else:
+                detail = "(zero baseline: any increase fails)"
             failures.append(
-                f"{key}: {cur:.1f} vs baseline {base:.1f} "
-                f"(-{drop:.0%}, allowed -{threshold:.0%}) — {desc}"
+                f"{m.key}: {cur_f:.2f} vs baseline {base_f:.2f} {detail} — {m.desc}"
             )
     return failures
 
@@ -88,11 +163,12 @@ def check_artifacts(baseline_dir: str, current_dir: str, *, threshold: float) ->
 
         def fmt(v) -> str:
             is_num = isinstance(v, (int, float)) and not isinstance(v, bool)
-            return f"{v:.1f}" if is_num else repr(v)
+            return f"{v:.2f}" if is_num else repr(v)
 
-        for key, _ in metrics:
-            if key in baseline and key in current:
-                print(f"     {fname}:{key} baseline={fmt(baseline[key])} current={fmt(current[key])}")
+        for m in metrics:
+            base, cur = lookup(baseline, m.key), lookup(current, m.key)
+            if base is not _MISSING and cur is not _MISSING:
+                print(f"     {fname}:{m.key} baseline={fmt(base)} current={fmt(cur)}")
         for msg in failures:
             print(f"FAIL {fname}: {msg}")
         n_failures += len(failures)
@@ -107,16 +183,17 @@ def main() -> None:
         "--threshold",
         type=float,
         default=float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.20")),
-        help="max allowed fractional drop (default 0.20 = 20%%)",
+        help="max allowed fractional regression for metrics without a "
+        "dedicated band (default 0.20 = 20%%)",
     )
     args = ap.parse_args()
     if not 0.0 < args.threshold < 1.0:
         ap.error("--threshold must be in (0, 1)")
     n = check_artifacts(args.baseline, args.current, threshold=args.threshold)
     if n:
-        print(f"benchmark gate: {n} regression(s) beyond {args.threshold:.0%}")
+        print(f"benchmark gate: {n} regression(s)")
         sys.exit(1)
-    print(f"benchmark gate: OK (threshold {args.threshold:.0%})")
+    print(f"benchmark gate: OK (default threshold {args.threshold:.0%})")
 
 
 if __name__ == "__main__":

@@ -182,6 +182,7 @@ def bench_engine_batched(artifact_path: str | None = None, *, iters: int = 5) ->
                 f,
                 indent=2,
             )
+            f.write("\n")
 
     return [
         ("rag_engine_sequential_warm", t_seq / n * 1e6, f"{seq_qps:.0f} queries/s"),
@@ -198,8 +199,11 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
     Each run streams the 28-query paper benchmark through a warmed engine
     behind a Poisson (or all-at-once) arrival queue and drains it; the
     summary is the latency telemetry a deployment would watch. Writes
-    BENCH_streaming.json (one entry per (load, overlap) cell plus the
-    top-level ``streaming_qps`` the CI regression gate compares).
+    BENCH_streaming.json: one entry per (load, overlap) cell, the raw
+    ``streaming_qps`` of the burst-serial cell as a telemetry trend line,
+    and a ``gate`` section with that cell's deterministic counters
+    (completed/rejected/decode_steps) — the hardware-independent signals
+    benchmarks/check_regression.py compares in CI.
     """
     import json
     import math
@@ -218,7 +222,14 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
     decoder.warmup()  # decode compile must not bill to the first cell
     loads = (math.inf, 40.0)  # saturating burst + a paced open-loop level
     runs, out = [], []
-    gate_qps = float("nan")
+    gate_summary: dict | None = None  # the burst-serial cell's summary
+
+    def fmt(v, spec: str = ".1f") -> str:
+        # summary() maps non-finite values (e.g. qps/percentiles of a cell
+        # that completed nothing) to None; a degenerate cell must degrade to
+        # a readable line, not crash the whole run on a format TypeError.
+        return format(v, spec) if isinstance(v, (int, float)) else "-"
+
     for rate in loads:
         for overlap in (True, False):
             eng = build_paper_engine(make_policy("router_default"))
@@ -236,33 +247,41 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
             s["offered_qps"] = None if math.isinf(rate) else rate
             runs.append(s)
             if math.isinf(rate) and not overlap:
-                # The regression-gate cell: the saturating-burst serial run is
-                # single-threaded and deterministic in step count, so its
-                # throughput is stable run-to-run. Overlap cells stay in the
-                # artifact as telemetry but are too sensitive to host thread
-                # contention to gate CI on.
-                gate_qps = s["throughput_qps"]
+                # The regression-gate cell: the saturating-burst serial run
+                # is single-threaded, so its completed/rejected/decode_steps
+                # counters are deterministic run-to-run. Wall-clock numbers
+                # (qps, percentiles) swing with host load on any cell and
+                # stay in the artifact as telemetry only.
+                gate_summary = s
             tag = f"stream_{'burst' if math.isinf(rate) else f'{rate:.0f}qps'}_{'overlap' if overlap else 'serial'}"
             out.append(
                 (tag, result.wall_s / n * 1e6,
-                 f"{s['throughput_qps']:.1f} q/s p95_ttft={s['p95_ttft_ms']:.0f}ms")
+                 f"{fmt(s['throughput_qps'])} q/s p95_ttft={fmt(s['p95_ttft_ms'], '.0f')}ms")
             )
 
-    streaming_qps = gate_qps
     if artifact_path:
         os.makedirs(os.path.dirname(artifact_path) or ".", exist_ok=True)
+        s = gate_summary
         with open(artifact_path, "w") as f:
             json.dump(
                 {
                     "benchmark": "streaming_paper28",
                     "n_queries": n,
-                    "streaming_qps": streaming_qps,
-                    "gate_cell": "burst_serial",
+                    # raw measured throughput of the gate cell; trend-line
+                    # telemetry only — CI gates on the counters in `gate`
+                    "streaming_qps": s["throughput_qps"] if s else None,
+                    "gate": None if s is None else {
+                        "cell": "burst_serial",
+                        "completed": s["completed"],
+                        "rejected": s["rejected"],
+                        "decode_steps": s["decode_steps"],
+                    },
                     "runs": runs,
                 },
                 f,
                 indent=2,
             )
+            f.write("\n")
     return out
 
 

@@ -76,13 +76,15 @@ def main() -> None:
         from repro.serving.generator import TransformerSlotDecoder
         from repro.serving.streaming import StreamConfig, serve_stream
 
+        decoder = TransformerSlotDecoder.tiny(n_slots=8)
+        decoder.warmup()  # decode-step compile must not bill to the first batch's TTFT
         result = serve_stream(
             engine,
             queries,
             references,
             rate_qps=args.rate_qps if args.rate_qps > 0 else math.inf,
             seed=args.seed,
-            decode_fn=TransformerSlotDecoder.tiny(n_slots=8),
+            decode_fn=decoder,
             config=StreamConfig(overlap=not args.no_overlap),
         )
         print(json.dumps(result.summary(), indent=2))

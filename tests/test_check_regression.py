@@ -1,95 +1,189 @@
-"""The CI benchmark gate must demonstrably fail on an injected throughput
-drop and pass on parity/noise-sized wiggle."""
+"""The CI benchmark gate must demonstrably fail on an injected regression
+and pass on parity/noise-sized wiggle — using hardware-independent signals
+(same-host speedup ratio + deterministic counters), never absolute qps."""
 
 import json
 import os
 import subprocess
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import GATED_METRICS, check_artifacts, compare
+from benchmarks.check_regression import GATED_METRICS, check_artifacts, compare, lookup
 
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
+SERVING_METRICS = GATED_METRICS["BENCH_serving.json"]
+STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
-def _write(dirpath, serving_qps, streaming_qps):
+
+def _serving(speedup=3.6, decode_steps=350):
+    return {
+        "benchmark": "paper_28_queries",
+        "batched_qps": 500.0,  # telemetry, ungated
+        "speedup": speedup,
+        "closed_loop": {"decode_steps": decode_steps},
+    }
+
+
+def _streaming(completed=28, rejected=0, decode_steps=358):
+    return {
+        "benchmark": "streaming_paper28",
+        "streaming_qps": 30.0,  # telemetry, ungated
+        "gate": {
+            "cell": "burst_serial",
+            "completed": completed,
+            "rejected": rejected,
+            "decode_steps": decode_steps,
+        },
+    }
+
+
+def _write(dirpath, serving, streaming):
     os.makedirs(dirpath, exist_ok=True)
     with open(os.path.join(dirpath, "BENCH_serving.json"), "w") as f:
-        json.dump({"benchmark": "paper_28_queries", "batched_qps": serving_qps}, f)
+        json.dump(serving, f)
     with open(os.path.join(dirpath, "BENCH_streaming.json"), "w") as f:
-        json.dump({"benchmark": "streaming_paper28", "streaming_qps": streaming_qps}, f)
+        json.dump(streaming, f)
 
 
 def test_gate_passes_at_parity_and_small_wiggle(tmp_path):
     base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
-    _write(base, 500.0, 30.0)
-    _write(cur, 500.0, 30.0)
+    _write(base, _serving(), _streaming())
+    _write(cur, _serving(), _streaming())
     assert check_artifacts(base, cur, threshold=0.20) == 0
-    _write(cur, 450.0, 27.0)  # -10%: inside the 20% band
+    # -10% speedup, +10% decode steps: inside every band
+    _write(cur, _serving(speedup=3.24, decode_steps=385), _streaming(decode_steps=390))
     assert check_artifacts(base, cur, threshold=0.20) == 0
+
+
+def test_gate_fails_on_injected_throughput_drop(tmp_path):
+    """The ISSUE's acceptance check: an injected throughput regression —
+    the batched fast path degrading toward the sequential path — must trip
+    the gate. Speedup is the hardware-portable form of that signal."""
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, _serving(speedup=3.6), _streaming())
+    _write(cur, _serving(speedup=1.4), _streaming())  # -61%, beyond the 50% band
+    assert check_artifacts(base, cur, threshold=0.20) == 1
 
 
 def test_gate_fails_on_injected_25pct_drop(tmp_path):
+    """Acceptance criterion: a 25% drop in the gated signals must fail at
+    the default 20% band."""
     base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
-    _write(base, 500.0, 30.0)
-    _write(cur, 375.0, 30.0)  # batched -25%
-    assert check_artifacts(base, cur, threshold=0.20) == 1
-    _write(cur, 375.0, 22.5)  # batched and streaming both -25%
-    assert check_artifacts(base, cur, threshold=0.20) == 2
+    _write(base, _serving(decode_steps=400), _streaming(completed=28, decode_steps=400))
+    # -25% completions, +25% decode steps in both artifacts: three failures
+    _write(cur, _serving(decode_steps=500), _streaming(completed=21, decode_steps=500))
+    assert check_artifacts(base, cur, threshold=0.20) == 3
+
+
+def test_gate_fails_on_counter_regressions(tmp_path):
+    base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
+    _write(base, _serving(), _streaming())
+    # lost requests + spurious rejections + step blow-up: three failures
+    _write(cur, _serving(), _streaming(completed=20, rejected=3, decode_steps=500))
+    assert check_artifacts(base, cur, threshold=0.20) == 3
+
+
+def test_single_lost_request_fails():
+    """gate.completed has a zero band: the cell is deterministic and the
+    contract is full drain, so losing even 1 of 28 must fail rather than
+    hide inside the 20% noise band."""
+    fails = compare(_streaming(), _streaming(completed=27), STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "gate.completed" in fails[0]
+
+
+def test_null_gate_container_fails_not_disarms():
+    """A baseline with `"gate": null` (broken committed run) must fail every
+    metric under it, not resolve to missing-key and silently disarm."""
+    base = _streaming()
+    base["gate"] = None
+    fails = compare(base, _streaming(), STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == len(STREAMING_METRICS)
+    assert all("null" in f for f in fails)
+
+
+def test_zero_rejected_baseline_fails_on_any_rejection():
+    fails = compare(_streaming(), _streaming(rejected=1), STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "gate.rejected" in fails[0]
+
+
+def test_lower_is_better_improvements_pass():
+    fails = compare(_serving(), _serving(decode_steps=200), SERVING_METRICS, threshold=0.2)
+    assert fails == []
 
 
 def test_gate_cli_exit_codes(tmp_path):
     """End-to-end through the CLI, exactly as the CI job invokes it."""
     base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
-    _write(base, 500.0, 30.0)
-    _write(cur, 375.0, 30.0)  # -25% injected drop
+    _write(base, _serving(speedup=3.6), _streaming())
+    _write(cur, _serving(speedup=1.0), _streaming())  # injected collapse
     cmd = [sys.executable, "benchmarks/check_regression.py",
            "--baseline", base, "--current", cur]
     env = {**os.environ, "PYTHONPATH": "src"}
     proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True, env=env)
     assert proc.returncode == 1, proc.stdout + proc.stderr
-    assert "batched_qps" in proc.stdout
-    _write(cur, 500.0, 30.0)
+    assert "speedup" in proc.stdout
+    _write(cur, _serving(speedup=3.6), _streaming())
     proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True, env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
 def test_missing_current_fails_missing_baseline_warns(tmp_path):
     base, cur = str(tmp_path / "base"), str(tmp_path / "cur")
-    _write(base, 500.0, 30.0)
+    _write(base, _serving(), _streaming())
     # no current artifacts at all: every gated file is a failure
     assert check_artifacts(base, cur, threshold=0.20) == len(GATED_METRICS)
     # current exists but baseline missing: unarmed, passes
-    _write(cur, 100.0, 1.0)
+    _write(cur, _serving(speedup=1.0), _streaming(completed=1))
     assert check_artifacts(str(tmp_path / "nobase"), cur, threshold=0.20) == 0
 
 
-def test_nan_current_metric_fails_not_disarms(tmp_path):
-    """NaN compares False against any floor; the gate must fail, not pass."""
-    metrics = GATED_METRICS["BENCH_serving.json"]
-    fails = compare({"batched_qps": 100.0}, {"batched_qps": float("nan")},
-                    metrics, threshold=0.2)
+def test_nan_current_metric_fails_not_disarms():
+    """NaN compares False against any bound; the gate must fail, not pass."""
+    fails = compare(_serving(), _serving(speedup=float("nan")),
+                    SERVING_METRICS, threshold=0.2)
     assert len(fails) == 1 and "non-finite" in fails[0]
 
 
+def test_null_baseline_fails_not_skips():
+    """summary() legitimately emits null for non-finite metrics, so an
+    explicit null in a committed baseline means a broken run was committed;
+    the gate must fail loudly, not silently disarm like a missing key."""
+    base = _streaming()
+    base["gate"]["completed"] = None
+    fails = compare(base, _streaming(), STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "null" in fails[0]
+
+
 def test_compare_handles_missing_metric_keys():
-    metrics = GATED_METRICS["BENCH_serving.json"]
     # metric absent from baseline: not yet armed for that key
-    assert compare({}, {"batched_qps": 100.0}, metrics, threshold=0.2) == []
+    assert compare({}, _serving(), SERVING_METRICS, threshold=0.2) == []
     # metric present in baseline but dropped from current: hard fail
-    fails = compare({"batched_qps": 100.0}, {}, metrics, threshold=0.2)
-    assert len(fails) == 1 and "missing" in fails[0]
+    fails = compare(_serving(), {}, SERVING_METRICS, threshold=0.2)
+    assert len(fails) == len(SERVING_METRICS) and all("missing" in f for f in fails)
 
 
 def test_committed_baselines_are_well_formed():
-    """The artifacts the CI gate compares against must stay parseable and
-    carry the gated metrics."""
+    """The artifacts the CI gate compares against must stay parseable,
+    carry the gated metrics, and stay internally consistent."""
     results = os.path.join(REPO, "results")
     for fname, metrics in GATED_METRICS.items():
         path = os.path.join(results, fname)
         assert os.path.exists(path), f"committed baseline {fname} missing"
         with open(path) as f:
-            data = json.load(f)
-        for key, _ in metrics:
-            assert key in data and float(data[key]) > 0
+            raw = f.read()
+        assert raw.endswith("\n"), f"{fname} lacks trailing newline"
+        data = json.loads(raw)
+        for m in metrics:
+            v = lookup(data, m.key)
+            assert isinstance(v, (int, float)), f"{fname}:{m.key} = {v!r}"
+            assert v >= 0
+    # measured fields must agree with each other (no hand-edited floors)
+    with open(os.path.join(results, "BENCH_serving.json")) as f:
+        serving = json.load(f)
+    assert serving["speedup"] == pytest.approx(
+        serving["batched_qps"] / serving["sequential_qps"], rel=1e-6
+    )
