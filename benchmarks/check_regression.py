@@ -26,6 +26,10 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     better; baseline 0 means any rejection fails).
   - ``gate.decode_steps`` — deterministic decode-step count (lower is
     better).
+  - ``gate.stage_batches`` / ``gate.retrieve_calls`` — deterministic
+    per-stage counters from the StagePipeline (band 0: the serial cell's
+    micro-batching and grouped-retrieval structure is exact, so any extra
+    routed batch or index search is a structural regression, not noise).
 
 A missing *current* artifact fails (the benchmark didn't run). A metric
 missing from the *baseline* warns and passes (it predates the gate —
@@ -75,6 +79,21 @@ GATED_METRICS: dict[str, list[Metric]] = {
             "gate.decode_steps",
             "burst-serial decode steps (deterministic)",
             higher_is_better=False,
+        ),
+        # band 0: the serial cell's stage structure is exact — more routed
+        # micro-batches or more index searches means the pipeline's grouping
+        # regressed, never measurement noise
+        Metric(
+            "gate.stage_batches",
+            "burst-serial routed micro-batches (deterministic)",
+            higher_is_better=False,
+            threshold=0.0,
+        ),
+        Metric(
+            "gate.retrieve_calls",
+            "burst-serial grouped index searches (deterministic)",
+            higher_is_better=False,
+            threshold=0.0,
         ),
     ],
 }

@@ -199,11 +199,14 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
     Each run streams the 28-query paper benchmark through a warmed engine
     behind a Poisson (or all-at-once) arrival queue and drains it; the
     summary is the latency telemetry a deployment would watch. Writes
-    BENCH_streaming.json: one entry per (load, overlap) cell, the raw
-    ``streaming_qps`` of the burst-serial cell as a telemetry trend line,
-    and a ``gate`` section with that cell's deterministic counters
-    (completed/rejected/decode_steps) — the hardware-independent signals
-    benchmarks/check_regression.py compares in CI.
+    BENCH_streaming.json: one entry per (load, pipeline shape) cell —
+    including a depth-sweep over the N-deep multi-worker StagePipeline as
+    ungated telemetry — the raw ``streaming_qps`` of the burst-serial cell
+    as a telemetry trend line, and a ``gate`` section with that cell's
+    deterministic counters (completed/rejected/decode_steps plus the
+    per-stage ``stage_batches``/``retrieve_calls``) — the
+    hardware-independent signals benchmarks/check_regression.py compares
+    in CI.
     """
     import json
     import math
@@ -230,34 +233,54 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
         # a readable line, not crash the whole run on a format TypeError.
         return format(v, spec) if isinstance(v, (int, float)) else "-"
 
+    def run_cell(rate: float, config: StreamConfig) -> tuple[dict, float]:
+        eng = build_paper_engine(make_policy("router_default"))
+        eng.answer_batch(queries, refs)  # warm: compiles + caches
+        decoder.reset()
+        sched = ContinuousBatchScheduler(
+            SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16),
+            catalog=eng.catalog,
+        )
+        result = serve_stream(
+            eng, queries, refs, rate_qps=rate, decode_fn=decoder,
+            scheduler=sched, config=config,
+        )
+        s = result.summary()
+        s["offered_qps"] = None if math.isinf(rate) else rate
+        runs.append(s)
+        return s, result.wall_s
+
     for rate in loads:
         for overlap in (True, False):
-            eng = build_paper_engine(make_policy("router_default"))
-            eng.answer_batch(queries, refs)  # warm: compiles + caches
-            decoder.reset()
-            sched = ContinuousBatchScheduler(
-                SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16),
-                catalog=eng.catalog,
-            )
-            result = serve_stream(
-                eng, queries, refs, rate_qps=rate, decode_fn=decoder,
-                scheduler=sched, config=StreamConfig(overlap=overlap),
-            )
-            s = result.summary()
-            s["offered_qps"] = None if math.isinf(rate) else rate
-            runs.append(s)
+            s, wall_s = run_cell(rate, StreamConfig(overlap=overlap))
             if math.isinf(rate) and not overlap:
                 # The regression-gate cell: the saturating-burst serial run
                 # is single-threaded, so its completed/rejected/decode_steps
-                # counters are deterministic run-to-run. Wall-clock numbers
-                # (qps, percentiles) swing with host load on any cell and
-                # stay in the artifact as telemetry only.
+                # counters — and the per-stage stage_batches/retrieve_calls —
+                # are deterministic run-to-run. Wall-clock numbers (qps,
+                # percentiles) swing with host load on any cell and stay in
+                # the artifact as telemetry only.
                 gate_summary = s
             tag = f"stream_{'burst' if math.isinf(rate) else f'{rate:.0f}qps'}_{'overlap' if overlap else 'serial'}"
             out.append(
-                (tag, result.wall_s / n * 1e6,
+                (tag, wall_s / n * 1e6,
                  f"{fmt(s['throughput_qps'])} q/s p95_ttft={fmt(s['p95_ttft_ms'], '.0f')}ms")
             )
+
+    # Depth sweep over the StagePipeline (ungated telemetry): how N-deep
+    # multi-worker retrieval staging moves TTFT/TTLT under a saturating
+    # burst. Wall-clock cells only — GIL contention makes them noisy on
+    # shared hosts, so CI never gates on them.
+    for depth, workers in ((2, 2), (4, 2)):
+        s, wall_s = run_cell(
+            math.inf,
+            StreamConfig(pipeline_depth=depth, retrieval_workers=workers,
+                         microbatch_max=8),
+        )
+        out.append(
+            (f"stream_burst_depth{depth}_workers{workers}", wall_s / n * 1e6,
+             f"{fmt(s['throughput_qps'])} q/s p95_ttft={fmt(s['p95_ttft_ms'], '.0f')}ms")
+        )
 
     if artifact_path:
         os.makedirs(os.path.dirname(artifact_path) or ".", exist_ok=True)
@@ -275,6 +298,8 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
                         "completed": s["completed"],
                         "rejected": s["rejected"],
                         "decode_steps": s["decode_steps"],
+                        "stage_batches": s["stage_batches"],
+                        "retrieve_calls": s["retrieve_calls"],
                     },
                     "runs": runs,
                 },

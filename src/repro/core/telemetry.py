@@ -153,10 +153,13 @@ class TelemetryStore:
 
         Carries everything prior refinement reads — per-bundle stats,
         refinement knobs, structural anchors — but not the record history, so
-        the serving engine's batched fast path can simulate "what priors
-        would query i have seen?" for a whole batch without mutating (or
-        deep-copying) the live store. Logging into the clone updates only the
-        clone.
+        the serving pipeline's ``finalize`` stage (serving/stages.py) can
+        simulate "what priors would query i have seen?" for a whole
+        micro-batch without mutating (or deep-copying) the live store.
+        Cloning at the finalize boundary — after every earlier micro-batch
+        has committed — is what lets the N-deep stage pipeline route
+        speculatively on stale priors and still commit position-exact
+        records. Logging into the clone updates only the clone.
         """
         clone = TelemetryStore(
             self.catalog,

@@ -28,8 +28,17 @@ def main() -> None:
     )
     ap.add_argument("--rate-qps", type=float, default=0.0,
                     help="offered load for --stream; <=0 means all arrive at t=0")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="micro-batches in flight through the stage pipeline "
+                    "(--stream only; 1 = fully serial)")
+    ap.add_argument("--retrieval-workers", type=int, default=1,
+                    help="worker threads draining the retrieve/assemble/decode "
+                    "stages (--stream only; ignored at depth 1)")
     ap.add_argument("--no-overlap", action="store_true",
-                    help="serialize retrieval against decode (--stream only)")
+                    help="deprecated alias for --pipeline-depth 1")
+    ap.add_argument("--tokens-per-s", type=float, default=None,
+                    help="pace the slot decoder's step clock (--stream only; "
+                    "default: free-running)")
     ap.add_argument("--seed", type=int, default=0, help="arrival-trace seed (--stream)")
     args = ap.parse_args()
 
@@ -76,7 +85,11 @@ def main() -> None:
         from repro.serving.generator import TransformerSlotDecoder
         from repro.serving.streaming import StreamConfig, serve_stream
 
-        decoder = TransformerSlotDecoder.tiny(n_slots=8)
+        depth = args.pipeline_depth
+        if args.no_overlap:
+            print("note: --no-overlap is deprecated; use --pipeline-depth 1")
+            depth = 1
+        decoder = TransformerSlotDecoder.tiny(n_slots=8, tokens_per_s=args.tokens_per_s)
         decoder.warmup()  # decode-step compile must not bill to the first batch's TTFT
         result = serve_stream(
             engine,
@@ -85,7 +98,11 @@ def main() -> None:
             rate_qps=args.rate_qps if args.rate_qps > 0 else math.inf,
             seed=args.seed,
             decode_fn=decoder,
-            config=StreamConfig(overlap=not args.no_overlap),
+            config=StreamConfig(
+                overlap=depth > 1,
+                pipeline_depth=depth,
+                retrieval_workers=args.retrieval_workers,
+            ),
         )
         print(json.dumps(result.summary(), indent=2))
         if result.rejections:

@@ -1,4 +1,4 @@
-"""Serving layer: RAG engine, scheduler, streaming loop, billing, latency model."""
+"""Serving layer: typed stages, RAG engine, scheduler, streaming loop."""
 from repro.serving.billing import BillingLedger, TokenBill, bill_query
 from repro.serving.engine import (
     EngineConfig,
@@ -15,5 +15,18 @@ from repro.serving.generator import (
 )
 from repro.serving.latency import LatencyModel, LatencyModelConfig
 from repro.serving.scheduler import ContinuousBatchScheduler, Rejection, Request, SchedulerConfig
+from repro.serving.stages import (
+    AdmittedBatch,
+    DecodedBatch,
+    Execution,
+    RetrievedBatch,
+    RoutedBatch,
+    StagePipeline,
+    assemble,
+    decode,
+    finalize,
+    retrieve,
+    route,
+)
 from repro.serving.streaming import StreamConfig, StreamingEngine, StreamResult, serve_stream
 from repro.serving.workload import Arrival, ArrivalProcess

@@ -12,49 +12,47 @@ One :class:`RAGEngine` wires the whole pipeline:
 plus the §VIII guardrails between 3→4 and 4→5. Every query produces an
 auditable QueryRecord; benchmarks read only the CSV artifacts.
 
-Two execution paths produce *bit-identical* records:
+The execution pipeline itself lives in :mod:`repro.serving.stages` as five
+typed stage functions — ``route → retrieve → assemble → decode → finalize``
+— with all shared mutable state (telemetry store, billing ledger, embedder
+cache) confined to ``route`` and ``finalize``. The engine's entry points are
+thin compositions of those stages and all produce *bit-identical* records:
 
 * :meth:`answer` — one query at a time; the auditable reference path.
-* :meth:`answer_batch` — the serving fast path. The whole batch routes in
-  one vectorized call (the bit-identical host mirror of
-  :meth:`Router.route_batch_arrays`), queries group by routed bundle so
-  each group embeds once (through the query-vector cache) and searches
-  once per (bundle, k) through the index's cached jit-compiled closures,
-  and generation / billing / realized utility apply over the batch with
-  the host conversions gathered at the end. Telemetry-refined routing is
-  position-dependent (query i's priors reflect queries < i), so after the
-  batched speculation a single cheap host pass replays the telemetry
-  stream on a clone, re-routes each position with its true priors, and
-  re-executes only mispredicted queries (typically none). :meth:`run`
-  delegates here, so every existing caller gets the fast path for free.
+* :meth:`answer_batch` — the serving fast path: the whole batch routes in
+  one vectorized call, queries group by routed bundle so each group embeds
+  once (query-vector cache) and searches once per (bundle, k) through the
+  index's cached jit-compiled closures, and a cheap host replay inside
+  ``finalize`` recovers position-exact telemetry-refined routing.
+  :meth:`run` delegates here, so every caller gets the fast path for free.
+* :class:`~repro.serving.stages.StagePipeline` — the N-deep streaming
+  executor over the same stages (see serving/streaming.py).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Callable, Sequence
 
-import jax.numpy as jnp
+import dataclasses
+
 import numpy as np
 
 from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
 from repro.core.guardrails import GuardrailConfig, Guardrails
 from repro.core.router import Router
 from repro.core.telemetry import QueryRecord, TelemetryStore
-from repro.core.utility import RealizedNormalization, realized_utility
+from repro.core.utility import RealizedNormalization
 from repro.retrieval.chunking import line_passages
 from repro.retrieval.embedder import CachingEmbedder, Embedder, HashedNGramEmbedder
 from repro.retrieval.index import DenseIndex
-from repro.retrieval.tokenizer import lexical_overlap
-from repro.serving.billing import BillingLedger, TokenBill, bill_query
-from repro.serving.generator import ExtractiveGenerator, Generator, build_prompt
+from repro.serving import stages
+from repro.serving.billing import BillingLedger
+from repro.serving.generator import ExtractiveGenerator, Generator
 from repro.serving.latency import LatencyModel
 from repro.serving.scheduler import (
     ContinuousBatchScheduler,
     Rejection,
     Request,
-    requests_from_records,
 )
 
 
@@ -90,24 +88,6 @@ class EngineResponse:
     record: QueryRecord
     passages: list[str]
     wallclock_ms: float | None = None
-
-
-@dataclasses.dataclass
-class _Execution:
-    """Everything downstream of a (query, guarded-bundle) decision.
-
-    Deterministic given (query_id, query, guarded bundle index), so the
-    speculation loop caches executions across fixpoint rounds.
-    """
-
-    final_bundle_idx: int
-    passages: list[str]
-    confidence: float
-    answer: str
-    prompt: str
-    bill: TokenBill
-    latency_ms: float
-    quality: float
 
 
 class RAGEngine:
@@ -170,19 +150,19 @@ class RAGEngine:
                 prompt = base_prompt + tokens_per_passage * b.top_k
                 emb = embed_tokens
                 completion = grounded_completion
-            stages = self.latency_model.stages_ms(
+            stages_ms = self.latency_model.stages_ms(
                 embed_tokens=emb,
                 retrieval_k=b.top_k,
                 prompt_tokens=prompt,
                 completion_tokens=completion,
             )
-            lat.append(sum(stages.values()))
+            lat.append(sum(stages_ms.values()))
             cost.append(prompt + completion + emb)
         return np.asarray(lat, np.float64), np.asarray(cost, np.float64)
 
     def _priors(self, telemetry: TelemetryStore | None = None):
         """Refined (latency, cost) prior vectors from a telemetry store —
-        the live store by default, or a replay clone (batched path)."""
+        the live store by default, or a replay clone (the finalize stage)."""
         store = telemetry if telemetry is not None else self.telemetry
         if not self.config.use_telemetry_refinement:
             return None, None
@@ -197,124 +177,13 @@ class RAGEngine:
         )
 
     # ------------------------------------------------------------------ #
-    # Sequential (reference) path                                         #
+    # Entry points: thin compositions of the five stages                   #
     # ------------------------------------------------------------------ #
     def answer(self, query: str, *, reference: str | None = None) -> EngineResponse:
-        t0 = time.perf_counter()
-        qid = self._query_counter
-        self._query_counter += 1
+        """One query through the full stage chain (the reference path —
+        a single-element :meth:`answer_batch`, bit-identical records)."""
+        return self.answer_batch([query], [reference])[0]
 
-        # 1-3: signals → utilities (telemetry-refined) → selection
-        lat_prior, cost_prior = self._priors()
-        decision = self.router.route(
-            query, latency_override=lat_prior, cost_override=cost_prior
-        )[0]
-
-        ex = self._execute(qid, query, decision.bundle_index, reference)
-        bundle = self.catalog[ex.final_bundle_idx]
-
-        # 6: telemetry + billing
-        self.ledger.add(ex.bill)
-        realized = float(
-            realized_utility(
-                np.float32(ex.quality if reference is not None else 0.0),
-                np.float32(ex.latency_ms),
-                np.float32(ex.bill.total),
-                weights=self.router.config.weights,
-                norm=self.config.realized_norm,
-            )
-        )
-        record = QueryRecord(
-            query=query,
-            strategy=bundle.name,
-            bundle=bundle.name,
-            utility=decision.selection_utility,
-            quality_proxy=ex.quality,
-            realized_utility=realized,
-            latency=ex.latency_ms,
-            prompt_tokens=ex.bill.prompt_tokens,
-            completion_tokens=ex.bill.completion_tokens,
-            embedding_tokens=ex.bill.embedding_tokens,
-            retrieval_confidence=ex.confidence,
-            complexity_score=decision.complexity,
-            index_embedding_tokens=self.ledger.index_embedding_tokens if qid == 0 else 0,
-        )
-        self.telemetry.log(record)
-        wall = (time.perf_counter() - t0) * 1000 if self.config.measure_wallclock else None
-        return EngineResponse(answer=ex.answer, record=record, passages=ex.passages, wallclock_ms=wall)
-
-    # ------------------------------------------------------------------ #
-    # Shared execution core (guardrails → retrieve → generate → bill)     #
-    # ------------------------------------------------------------------ #
-    def _execute(
-        self,
-        qid: int,
-        query: str,
-        routed_idx: int,
-        reference: str | None,
-        retrieval: tuple[np.ndarray, np.ndarray] | None = None,
-    ) -> _Execution:
-        """Run steps 3.5–5 + measurement for one routed query.
-
-        ``retrieval`` optionally injects precomputed (scores, ids) rows from
-        a batched search (the fast path); when absent the index is searched
-        here. Both produce identical results — the index's fixed-block
-        compiled closures make scores independent of batch composition.
-        """
-        # guardrail: cost ceiling before spending tokens
-        pre = self.guardrails.pre_execution(routed_idx)
-        bundle_idx = pre.bundle_index
-        bundle = self.catalog[bundle_idx]
-
-        # 4: retrieval
-        passages: list[str] = []
-        confidence = float("nan")
-        embedded_texts: list[str] = []
-        if not bundle.skip_retrieval:
-            embedded_texts.append(query)
-            if retrieval is None:
-                qv = self.embedder.embed([query])[0]
-                result = self.index.search(qv, bundle.top_k)
-                scores, ids = result.scores, result.passage_ids
-            else:
-                scores, ids = retrieval
-            confidence = float(scores[0]) if scores.size else float("nan")
-            # guardrail: low-confidence fallback to direct
-            post = self.guardrails.post_retrieval(bundle_idx, confidence)
-            if post.demoted:
-                bundle_idx = post.bundle_index
-                bundle = self.catalog[bundle_idx]
-                passages = []
-            else:
-                passages = [p.text for p in self.index.get_passages(ids)]
-
-        # 5: generation
-        prompt = build_prompt(query, passages)
-        answer = self.generator.generate(query, passages, bundle.generation, query_id=qid)
-
-        bill = bill_query(prompt, answer, embedded_texts)
-        latency_ms = self.latency_model.sample_ms(
-            query_id=qid,
-            embed_tokens=bill.embedding_tokens,
-            retrieval_k=bundle.top_k,
-            prompt_tokens=bill.prompt_tokens,
-            completion_tokens=bill.completion_tokens,
-        )
-        quality = lexical_overlap(answer, reference) if reference is not None else float("nan")
-        return _Execution(
-            final_bundle_idx=bundle_idx,
-            passages=passages,
-            confidence=confidence,
-            answer=answer,
-            prompt=prompt,
-            bill=bill,
-            latency_ms=latency_ms,
-            quality=quality,
-        )
-
-    # ------------------------------------------------------------------ #
-    # Batched fast path                                                   #
-    # ------------------------------------------------------------------ #
     def answer_batch(
         self, queries: Sequence[str], references: Sequence[str] | None = None
     ) -> list[EngineResponse]:
@@ -322,9 +191,10 @@ class RAGEngine:
 
         Produces records bit-identical to ``[self.answer(q) for q in
         queries]`` — the parity the serving tests pin down — at a fraction of
-        the dispatch cost: one routing call per fixpoint round instead of one
-        per query, one embed call per round's cache misses, and one compiled
-        search call per (bundle, k) chunk instead of one per query.
+        the dispatch cost: one routing call per micro-batch instead of one
+        per query, one embed call per k group's cache misses, and one
+        compiled search call per (bundle, k) group instead of one per query.
+        The body is literally the five stages composed in order.
         """
         n = len(queries)
         if n == 0:
@@ -332,155 +202,26 @@ class RAGEngine:
         refs = list(references) if references is not None else [None] * n
         if len(refs) != n:
             raise ValueError(f"{n} queries but {len(refs)} references")
-        t0 = time.perf_counter()
-        qid0 = self._query_counter
-
-        # --- 1. signals → complexity, one vectorized pass ------------------
-        cplx = self.router.complexity_batch(list(queries))
-        cplx_np = np.asarray(cplx)
-
-        # --- 2. speculative routing with current priors --------------------
-        # One vectorized call routes the whole batch (the host mirror of
-        # route_batch_arrays — bit-identical utilities, no device dispatch).
-        lat0, cost0 = self._priors()
-        choices, util_np = self.router.route_batch_np(
-            cplx_np, latency_override=lat0, cost_override=cost0
-        )
-        refinement_on = lat0 is not None
-
-        # --- 3. batched execution of the speculation ------------------------
-        exec_cache: dict[tuple[int, int], _Execution] = {}
-        executions = self._execute_batch(qid0, queries, refs, choices, exec_cache)
-
-        # --- 3b. exact replay pass (telemetry-refined routing only) ---------
-        # Telemetry refinement makes query i's priors a function of queries
-        # < i, so position-accurate routing is inherently sequential. The
-        # heavy stages aren't: retrieval/generation depend only on (query,
-        # bundle), and the speculation above already executed them in batch.
-        # One cheap host pass replays the telemetry stream on a clone,
-        # re-routes each position with its true priors (microseconds via the
-        # numpy mirror), and re-executes only the rare mispredictions —
-        # typically none: EMA deltas seldom move an argmax.
-        if refinement_on:
-            choices = choices.copy()
-            sim = self.telemetry.clone_for_replay()
-            for i in range(n):
-                lp, cp = self._priors(sim)
-                ci, ui = self.router.route_batch_np(
-                    cplx_np[i : i + 1], latency_override=lp, cost_override=cp
-                )
-                util_np[i] = ui[0]
-                choice = int(ci[0])
-                if choice != choices[i]:
-                    choices[i] = choice
-                    guarded = self.guardrails.pre_execution(choice).bundle_index
-                    ex = exec_cache.get((i, guarded))
-                    if ex is None:
-                        ex = self._execute(qid0 + i, queries[i], choice, refs[i])
-                        exec_cache[(i, guarded)] = ex
-                    executions[i] = ex
-                sim.log(self._make_record(qid0 + i, queries[i], executions[i], 0.0, 0.0))
-
-        # --- 4. vectorized realized utility + single host sync -------------
-        q_realized = np.asarray(
-            [ex.quality if refs[i] is not None else 0.0 for i, ex in enumerate(executions)],
-            np.float32,
-        )
-        lat_arr = np.asarray([ex.latency_ms for ex in executions], np.float32)
-        cost_arr = np.asarray([ex.bill.total for ex in executions], np.float32)
-        realized = np.asarray(
-            realized_utility(
-                jnp.asarray(q_realized),
-                jnp.asarray(lat_arr),
-                jnp.asarray(cost_arr),
-                weights=self.router.config.weights,
-                norm=self.config.realized_norm,
-            )
-        )
-
-        # --- 5. commit: billing, telemetry, records, counters ---------------
-        wall = (time.perf_counter() - t0) * 1000 / n if self.config.measure_wallclock else None
-        responses = []
-        for i, ex in enumerate(executions):
-            qid = qid0 + i
-            self.ledger.add(ex.bill)
-            record = self._make_record(
-                qid,
-                queries[i],
-                ex,
-                float(util_np[i, choices[i]]),
-                float(realized[i]),
-                complexity=float(cplx_np[i]),
-            )
-            self.telemetry.log(record)
-            responses.append(
-                EngineResponse(answer=ex.answer, record=record, passages=ex.passages, wallclock_ms=wall)
-            )
-        self._query_counter += n
-        return responses
-
-    def _execute_batch(
-        self,
-        qid0: int,
-        queries: Sequence[str],
-        refs: Sequence[str | None],
-        choices: np.ndarray,
-        exec_cache: dict[tuple[int, int], _Execution],
-    ) -> list[_Execution]:
-        """Execute every query under its speculative routing choice, with
-        retrieval grouped per (bundle, k): one embed call for the round's
-        cache misses, one compiled search_batch per k."""
-        n = len(queries)
-        guarded = [self.guardrails.pre_execution(int(c)).bundle_index for c in choices]
-        need = [i for i in range(n) if (i, guarded[i]) not in exec_cache]
-
-        # group the round's retrieval work
-        by_k: dict[int, list[int]] = {}
-        for i in need:
-            bundle = self.catalog[guarded[i]]
-            if not bundle.skip_retrieval:
-                by_k.setdefault(bundle.top_k, []).append(i)
-        retrievals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        for k, idxs in by_k.items():
-            qvecs = self.embedder.embed([queries[i] for i in idxs])  # one call, cached
-            scores, ids = self.index.search_batch(qvecs, k)
-            scores_np = np.asarray(scores, np.float32)
-            ids_np = np.asarray(ids, np.int32)
-            for r, i in enumerate(idxs):
-                retrievals[i] = (scores_np[r], ids_np[r])
-
-        for i in need:
-            exec_cache[(i, guarded[i])] = self._execute(
-                qid0 + i, queries[i], int(choices[i]), refs[i], retrieval=retrievals.get(i)
-            )
-        return [exec_cache[(i, guarded[i])] for i in range(n)]
-
-    def _make_record(
-        self,
-        qid: int,
-        query: str,
-        ex: _Execution,
-        utility: float,
-        realized: float,
-        *,
-        complexity: float = 0.0,
-    ) -> QueryRecord:
-        bundle = self.catalog[ex.final_bundle_idx]
-        return QueryRecord(
-            query=query,
-            strategy=bundle.name,
-            bundle=bundle.name,
-            utility=utility,
-            quality_proxy=ex.quality,
-            realized_utility=realized,
-            latency=ex.latency_ms,
-            prompt_tokens=ex.bill.prompt_tokens,
-            completion_tokens=ex.bill.completion_tokens,
-            embedding_tokens=ex.bill.embedding_tokens,
-            retrieval_confidence=ex.confidence,
-            complexity_score=complexity,
-            index_embedding_tokens=self.ledger.index_embedding_tokens if qid == 0 else 0,
-        )
+        n_records = len(self.telemetry.records)
+        routed = stages.route(self, queries, refs)
+        try:
+            retrieved = stages.retrieve(self, routed)
+            admitted = stages.assemble(self, retrieved)
+            decoded = stages.decode(self, admitted)
+            return stages.finalize(self, decoded)
+        except BaseException:
+            # route() allocated the batch's query ids up front (so pipelined
+            # callers can keep routing while earlier batches finalize). In
+            # this inline composition nothing else can have allocated since,
+            # so if the batch died before committing any record, return the
+            # ids — latency noise is seeded per query_id, and leaking ids on
+            # a recoverable error would silently shift every later record.
+            if (
+                len(self.telemetry.records) == n_records
+                and self._query_counter == routed.qid0 + n
+            ):
+                self._query_counter = routed.qid0
+            raise
 
     # ------------------------------------------------------------------ #
     # Batch entry points                                                   #
@@ -503,8 +244,9 @@ class RAGEngine:
         """Closed loop: routing → admission → decode.
 
         Routes/retrieves/generates the batch through :meth:`answer_batch`,
-        converts each record into a scheduler :class:`Request` (the routed
-        bundle fixes its queue, prompt length, and decode budget), feeds the
+        converts the finalized records into scheduler :class:`Request`s (the
+        routed bundle fixes each request's queue, prompt length, and decode
+        budget — :meth:`ContinuousBatchScheduler.make_requests`), feeds the
         :class:`ContinuousBatchScheduler`, and drains it — so router
         decisions drive continuous-batching admission and decode directly.
         Returns (responses, scheduler); scheduler.summary() carries the
@@ -513,9 +255,7 @@ class RAGEngine:
         """
         responses = self.answer_batch(queries, references)
         scheduler = scheduler or ContinuousBatchScheduler(catalog=self.catalog)
-        reqs = requests_from_records(
-            [r.record for r in responses], start_id=scheduler.next_request_id
-        )
+        reqs = scheduler.make_requests([r.record for r in responses])
         n_rej_before = len(scheduler.rejections)
         accepted = scheduler.submit_many(reqs)
         if accepted < len(reqs):

@@ -19,6 +19,7 @@ Both respect the bundle's GenerationSpec (max_output_tokens, temperature 0).
 from __future__ import annotations
 
 import dataclasses
+import time
 import zlib
 from typing import Protocol, Sequence
 
@@ -189,19 +190,39 @@ class TransformerSlotDecoder:
     slots on first sight, slots free as soon as their request leaves the
     active set, and a reused slot restarts at cache length 0 (``decode_step``
     masks attention by per-sequence length, so stale KV entries are inert).
+
+    ``tokens_per_s`` optionally paces the step clock: each call waits until
+    at least ``1/tokens_per_s`` seconds have passed since the previous step,
+    so TTFT/TTLT under light load reflect the modeled decode rate instead of
+    free-running host speed (the tiny CPU backbone steps far faster than the
+    latency model's ~54 tok/s decode stage). Off (``None``) by default —
+    pacing only inserts waits, never changes tokens, finish flags, or step
+    counts, so summaries are unchanged when disabled.
     """
 
-    def __init__(self, params, cfg, *, n_slots: int = 8, eos_id: int | None = None):
+    def __init__(
+        self,
+        params,
+        cfg,
+        *,
+        n_slots: int = 8,
+        eos_id: int | None = None,
+        tokens_per_s: float | None = None,
+    ):
         import jax
         import jax.numpy as jnp
 
         from repro.models.kvcache import KVCache
         from repro.models.transformer import decode_step
 
+        if tokens_per_s is not None and tokens_per_s <= 0:
+            raise ValueError("tokens_per_s must be positive (or None to disable pacing)")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.eos_id = eos_id
+        self.tokens_per_s = tokens_per_s
+        self._next_step_t = 0.0  # perf_counter deadline for the next paced step
         self.cache = KVCache.zeros(
             cfg.n_layers, n_slots, cfg.max_seq_len, cfg.n_kv_heads,
             cfg.head_dim, dtype=cfg.compute_dtype,
@@ -227,7 +248,7 @@ class TransformerSlotDecoder:
 
     @classmethod
     def tiny(cls, *, n_slots: int = 8, max_len: int = 256, eos_id: int | None = None,
-             seed: int = 0) -> "TransformerSlotDecoder":
+             seed: int = 0, tokens_per_s: float | None = None) -> "TransformerSlotDecoder":
         """Small CPU-friendly backbone sized for the paper benchmark budgets."""
         import jax
         import jax.numpy as jnp
@@ -240,7 +261,7 @@ class TransformerSlotDecoder:
             max_seq_len=max_len,
         )
         params = init_params(jax.random.PRNGKey(seed), cfg)
-        return cls(params, cfg, n_slots=n_slots, eos_id=eos_id)
+        return cls(params, cfg, n_slots=n_slots, eos_id=eos_id, tokens_per_s=tokens_per_s)
 
     def warmup(self) -> None:
         """Compile the fused decode step (fixed shapes) without touching slot
@@ -255,6 +276,7 @@ class TransformerSlotDecoder:
         jnp = self._jnp
         self.slot_of.clear()
         self._free = list(range(self.n_slots))
+        self._next_step_t = 0.0  # pacing clock restarts with the run
         self.cache = dataclasses.replace(
             self.cache, lengths=jnp.zeros((self.n_slots,), jnp.int32)
         )
@@ -273,6 +295,15 @@ class TransformerSlotDecoder:
         return slot
 
     def __call__(self, active) -> list[bool]:
+        if self.tokens_per_s is not None:
+            # Pace the step clock to the modeled decode rate. Waits only —
+            # token values and finish flags are unaffected, so a paced run
+            # emits the identical step/record stream, just later.
+            now = time.perf_counter()
+            if now < self._next_step_t:
+                time.sleep(self._next_step_t - now)
+                now = self._next_step_t
+            self._next_step_t = max(self._next_step_t, now) + 1.0 / self.tokens_per_s
         live_ids = {r.request_id for r in active}
         for rid in [rid for rid in self.slot_of if rid not in live_ids]:
             self._free.append(self.slot_of.pop(rid))

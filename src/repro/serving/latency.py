@@ -69,7 +69,13 @@ class LatencyModel:
         if noise is None:
             rng = np.random.default_rng((self.config.seed, query_id))
             noise = float(rng.lognormal(mean=0.0, sigma=self.config.noise_sigma))
+            # Concurrent decode stages may evict at once; the memo is
+            # idempotent so racing writers never change values — eviction
+            # just needs to tolerate the dict shifting under it.
             while len(self._noise_cache) >= self._noise_cache_max:
-                del self._noise_cache[next(iter(self._noise_cache))]
+                try:
+                    self._noise_cache.pop(next(iter(self._noise_cache)), None)
+                except (StopIteration, RuntimeError):
+                    break
             self._noise_cache[query_id] = noise
         return base * noise

@@ -131,6 +131,19 @@ class ContinuousBatchScheduler:
         active dict / page-pool bookkeeping keyed by it)."""
         return self._id_watermark
 
+    def make_requests(self, records: Sequence) -> list[Request]:
+        """Mint admission-ready requests from routed records with fresh ids.
+
+        The single record→``Request`` conversion used by both batch entry
+        points (``RAGEngine.serve_batch``) and the streaming admission path —
+        ids start at :attr:`next_request_id` and the watermark advances
+        immediately, so two ``make_requests`` calls can never mint colliding
+        ids even if the first batch is rejected wholesale."""
+        reqs = requests_from_records(records, start_id=self.next_request_id)
+        if reqs:
+            self._id_watermark = max(self._id_watermark, reqs[-1].request_id + 1)
+        return reqs
+
     def try_submit(self, req: Request) -> Rejection | None:
         """Submit with typed backpressure: ``None`` on accept, a
         :class:`Rejection` saying why (and how deep the queue was) on refuse."""

@@ -1,0 +1,571 @@
+"""Typed serving stages: route → retrieve → assemble → decode → finalize.
+
+The engine's route→retrieve→generate→log loop (paper §IV) decomposed into
+five stage functions over explicit artifact dataclasses. Each artifact
+carries everything the next stage needs, so a stage never reaches back into
+the engine for per-query state:
+
+    route(queries)            -> RoutedBatch      (qids, priors, speculation)
+    retrieve(RoutedBatch)     -> RetrievedBatch   (grouped MIPS searches)
+    assemble(RetrievedBatch)  -> AdmittedBatch    (guardrails + prompt build)
+    decode(AdmittedBatch)     -> DecodedBatch     (generation, billing, latency)
+    finalize(DecodedBatch)    -> list[EngineResponse]  (replay, ledger, telemetry)
+
+Shared-state discipline — what makes the pipeline safe to deepen:
+
+* ``route`` and ``finalize`` are the only stages that touch shared mutable
+  engine state. ``route`` stamps query ids and warms the query-vector cache;
+  ``finalize`` runs the exact-replay pass and commits billing + telemetry.
+  Callers must invoke them serially, in arrival order.
+* ``retrieve``, ``assemble``, and ``decode`` are side-effect-free given
+  their input artifact: the caches they touch (compiled search closures,
+  passage term sets, latency noise factors) are idempotent memos, so calling
+  a stage twice on the same artifact yields equal outputs and mutates no
+  telemetry or billing state. They may run on worker threads, and different
+  micro-batches may occupy different stages concurrently — the N-deep
+  pipelining :class:`StagePipeline` exploits.
+
+Exactness at any depth: speculation in ``route`` may use stale telemetry
+priors (a deep pipeline routes micro-batch b before b-1 has finalized), but
+``finalize`` replays the telemetry stream position by position on a clone
+(:meth:`TelemetryStore.clone_for_replay`) and re-executes any query whose
+true-prior routing differs, so drained records are bit-identical to the
+sequential loop at every (pipeline_depth, retrieval_workers) setting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
+from typing import TYPE_CHECKING, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import QueryRecord
+from repro.core.utility import realized_utility
+from repro.retrieval.tokenizer import lexical_overlap
+from repro.serving.billing import TokenBill, bill_query
+from repro.serving.generator import build_prompt
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (engine imports us)
+    from repro.serving.engine import EngineResponse, RAGEngine
+
+
+# --------------------------------------------------------------------------- #
+# Stage artifacts                                                              #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Execution:
+    """Everything downstream of a (query, guarded-bundle) decision.
+
+    Deterministic given (query_id, query, guarded bundle index), so the
+    replay pass caches executions across speculation rounds.
+    """
+
+    final_bundle_idx: int
+    passages: list[str]
+    confidence: float
+    answer: str
+    prompt: str
+    bill: TokenBill
+    latency_ms: float
+    quality: float
+
+
+@dataclasses.dataclass
+class RoutedBatch:
+    """Output of :func:`route`: the speculative routing plan for one
+    micro-batch, with the query vectors the retrieve stage will search."""
+
+    qid0: int
+    queries: list[str]
+    references: list[str | None]
+    complexity: np.ndarray  # (n,) float
+    choices: np.ndarray  # (n,) int32 — speculative routed bundle per query
+    utilities: np.ndarray  # (n, B) — Eq. 1 utilities under route-time priors
+    guarded: list[int]  # pre-execution guardrail outcome per query
+    retrieval_plan: dict[int, list[int]]  # top_k → query positions
+    query_vecs: dict[int, np.ndarray]  # position → (d,) embedded query
+    refinement_on: bool
+    t0: float  # perf_counter at route start (wallclock accounting)
+
+    @property
+    def n(self) -> int:
+        return len(self.queries)
+
+
+@dataclasses.dataclass
+class RetrievedBatch:
+    """Output of :func:`retrieve`: per-position (scores, ids) rows from the
+    grouped fixed-shape MIPS searches."""
+
+    routed: RoutedBatch
+    retrievals: dict[int, tuple[np.ndarray, np.ndarray]]  # position → (k,) rows
+    search_calls: int  # compiled search_batch invocations (one per k group)
+
+
+@dataclasses.dataclass
+class AdmittedBatch:
+    """Output of :func:`assemble`: guardrail-final bundles, fetched passages,
+    and built prompts — everything generation needs, no index access left."""
+
+    retrieved: RetrievedBatch
+    final_bundle: list[int]  # post-retrieval-guardrail bundle per query
+    passages: list[list[str]]
+    confidences: list[float]
+    prompts: list[str]
+    embedded: list[bool]  # did this query spend an embed call (billing)
+
+    @property
+    def routed(self) -> RoutedBatch:
+        return self.retrieved.routed
+
+
+@dataclasses.dataclass
+class DecodedBatch:
+    """Output of :func:`decode`: full executions for the speculative plan,
+    keyed for reuse by the replay pass in :func:`finalize`."""
+
+    admitted: AdmittedBatch
+    executions: list[Execution]
+    exec_cache: dict[tuple[int, int], Execution]  # (position, guarded idx)
+    search_calls: int  # retrieve-stage calls; finalize adds replay searches
+
+    @property
+    def routed(self) -> RoutedBatch:
+        return self.admitted.routed
+
+
+# --------------------------------------------------------------------------- #
+# Per-query execution core (shared by decode and the replay pass)              #
+# --------------------------------------------------------------------------- #
+def execute_one(
+    engine: "RAGEngine",
+    qid: int,
+    query: str,
+    routed_idx: int,
+    reference: str | None,
+) -> Execution:
+    """Run one routed query through retrieve → assemble → decode.
+
+    The replay path's single-query execution. It *is* the batched middle
+    stages applied to a one-element plan — not a re-implementation — so it
+    can never drift from what the pipeline computed for the speculative
+    choices. Embeds on the caller's thread (only ``route``/``finalize`` may
+    call this: the embedder cache is confined to those boundaries).
+    """
+    guarded = engine.guardrails.pre_execution(int(routed_idx)).bundle_index
+    bundle = engine.catalog[guarded]
+    plan: dict[int, list[int]] = {}
+    qvecs: dict[int, np.ndarray] = {}
+    if not bundle.skip_retrieval:
+        qvecs[0] = np.asarray(engine.embedder.embed([query]), np.float32)[0]
+        plan[bundle.top_k] = [0]
+    routed = RoutedBatch(
+        qid0=qid,
+        queries=[query],
+        references=[reference],
+        complexity=np.zeros((1,), np.float64),
+        choices=np.asarray([routed_idx], np.int32),
+        utilities=np.zeros((1, 1), np.float64),
+        guarded=[guarded],
+        retrieval_plan=plan,
+        query_vecs=qvecs,
+        refinement_on=False,
+        t0=0.0,
+    )
+    decoded = decode(engine, assemble(engine, retrieve(engine, routed)))
+    return decoded.executions[0]
+
+
+def make_record(
+    engine: "RAGEngine",
+    qid: int,
+    query: str,
+    ex: Execution,
+    utility: float,
+    realized: float,
+    *,
+    complexity: float = 0.0,
+) -> QueryRecord:
+    """Build the Appendix-F row for one execution."""
+    bundle = engine.catalog[ex.final_bundle_idx]
+    return QueryRecord(
+        query=query,
+        strategy=bundle.name,
+        bundle=bundle.name,
+        utility=utility,
+        quality_proxy=ex.quality,
+        realized_utility=realized,
+        latency=ex.latency_ms,
+        prompt_tokens=ex.bill.prompt_tokens,
+        completion_tokens=ex.bill.completion_tokens,
+        embedding_tokens=ex.bill.embedding_tokens,
+        retrieval_confidence=ex.confidence,
+        complexity_score=complexity,
+        index_embedding_tokens=engine.ledger.index_embedding_tokens if qid == 0 else 0,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Stage 1: route (mutates: query counter, embedder cache)                      #
+# --------------------------------------------------------------------------- #
+def route(
+    engine: "RAGEngine",
+    queries: Sequence[str],
+    references: Sequence[str | None],
+) -> RoutedBatch:
+    """Signals → priors → speculative vectorized routing → query embedding.
+
+    The only entry stage: stamps query ids (so pipelined micro-batches keep
+    arrival-ordered qids even before earlier batches finalize) and embeds the
+    queries the speculative plan will retrieve for (one embed call per k
+    group, through the engine's query-vector cache). Must be called serially
+    in arrival order.
+    """
+    t0 = time.perf_counter()
+    queries = list(queries)
+    refs = list(references)
+    n = len(queries)
+    qid0 = engine._query_counter
+
+    cplx_np = np.asarray(engine.router.complexity_batch(queries))
+    lat0, cost0 = engine._priors()
+    choices, util_np = engine.router.route_batch_np(
+        cplx_np, latency_override=lat0, cost_override=cost0
+    )
+
+    guarded = [engine.guardrails.pre_execution(int(c)).bundle_index for c in choices]
+    plan: dict[int, list[int]] = {}
+    for i in range(n):
+        bundle = engine.catalog[guarded[i]]
+        if not bundle.skip_retrieval:
+            plan.setdefault(bundle.top_k, []).append(i)
+    query_vecs: dict[int, np.ndarray] = {}
+    for _k, idxs in plan.items():
+        vecs = np.asarray(engine.embedder.embed([queries[i] for i in idxs]), np.float32)
+        for r, i in enumerate(idxs):
+            query_vecs[i] = vecs[r]
+
+    # Allocate the ids only once nothing in this stage can fail: a routing
+    # or embedding error must not leak qids (latency noise and generator
+    # verbosity are seeded per query_id, so a leak would shift every later
+    # record off the reference stream). route is contractually serial, so
+    # deferring the increment cannot race a concurrent allocation.
+    engine._query_counter += n
+
+    return RoutedBatch(
+        qid0=qid0,
+        queries=queries,
+        references=refs,
+        complexity=cplx_np,
+        choices=choices,
+        utilities=util_np,
+        guarded=guarded,
+        retrieval_plan=plan,
+        query_vecs=query_vecs,
+        refinement_on=lat0 is not None,
+        t0=t0,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Stage 2: retrieve (pure)                                                     #
+# --------------------------------------------------------------------------- #
+def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
+    """Grouped MIPS: one compiled ``search_batch`` call per (bundle, k) group.
+
+    Pure — reads only the immutable index (and its idempotent compiled-
+    closure cache); safe to run on a worker thread concurrently with other
+    micro-batches' stages.
+    """
+    retrievals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    calls = 0
+    for k, idxs in routed.retrieval_plan.items():
+        qmat = jnp.asarray(np.stack([routed.query_vecs[i] for i in idxs]))
+        scores, ids = engine.index.search_batch(qmat, k)
+        calls += 1
+        scores_np = np.asarray(scores, np.float32)
+        ids_np = np.asarray(ids, np.int32)
+        for r, i in enumerate(idxs):
+            retrievals[i] = (scores_np[r], ids_np[r])
+    return RetrievedBatch(routed=routed, retrievals=retrievals, search_calls=calls)
+
+
+# --------------------------------------------------------------------------- #
+# Stage 3: assemble (pure) — guardrails + passage fetch + prompt build         #
+# --------------------------------------------------------------------------- #
+def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
+    """Post-retrieval guardrails (low-confidence demotion), passage payload
+    fetch, and prompt construction. Pure given the artifact."""
+    routed = retrieved.routed
+    final_bundle: list[int] = []
+    passages_all: list[list[str]] = []
+    confidences: list[float] = []
+    prompts: list[str] = []
+    embedded: list[bool] = []
+    for i in range(routed.n):
+        bundle_idx = routed.guarded[i]
+        bundle = engine.catalog[bundle_idx]
+        passages: list[str] = []
+        confidence = float("nan")
+        did_embed = not bundle.skip_retrieval
+        if did_embed:
+            scores, ids = retrieved.retrievals[i]
+            confidence = float(scores[0]) if scores.size else float("nan")
+            post = engine.guardrails.post_retrieval(bundle_idx, confidence)
+            if post.demoted:
+                bundle_idx = post.bundle_index
+                passages = []
+            else:
+                passages = [p.text for p in engine.index.get_passages(ids)]
+        final_bundle.append(bundle_idx)
+        passages_all.append(passages)
+        confidences.append(confidence)
+        prompts.append(build_prompt(routed.queries[i], passages))
+        embedded.append(did_embed)
+    return AdmittedBatch(
+        retrieved=retrieved,
+        final_bundle=final_bundle,
+        passages=passages_all,
+        confidences=confidences,
+        prompts=prompts,
+        embedded=embedded,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Stage 4: decode (pure) — generation, billing, latency, quality               #
+# --------------------------------------------------------------------------- #
+def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
+    """Generate per query under its final bundle; bill tokens and sample the
+    latency model. Pure given the artifact (generator/latency memo caches
+    are idempotent)."""
+    routed = admitted.routed
+    executions: list[Execution] = []
+    exec_cache: dict[tuple[int, int], Execution] = {}
+    for i in range(routed.n):
+        qid = routed.qid0 + i
+        query = routed.queries[i]
+        reference = routed.references[i]
+        bundle = engine.catalog[admitted.final_bundle[i]]
+        answer = engine.generator.generate(
+            query, admitted.passages[i], bundle.generation, query_id=qid
+        )
+        embedded_texts = [query] if admitted.embedded[i] else []
+        bill = bill_query(admitted.prompts[i], answer, embedded_texts)
+        latency_ms = engine.latency_model.sample_ms(
+            query_id=qid,
+            embed_tokens=bill.embedding_tokens,
+            retrieval_k=bundle.top_k,
+            prompt_tokens=bill.prompt_tokens,
+            completion_tokens=bill.completion_tokens,
+        )
+        quality = (
+            lexical_overlap(answer, reference) if reference is not None else float("nan")
+        )
+        ex = Execution(
+            final_bundle_idx=admitted.final_bundle[i],
+            passages=admitted.passages[i],
+            confidence=admitted.confidences[i],
+            answer=answer,
+            prompt=admitted.prompts[i],
+            bill=bill,
+            latency_ms=latency_ms,
+            quality=quality,
+        )
+        executions.append(ex)
+        exec_cache[(i, routed.guarded[i])] = ex
+    return DecodedBatch(
+        admitted=admitted,
+        executions=executions,
+        exec_cache=exec_cache,
+        search_calls=admitted.retrieved.search_calls,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Stage 5: finalize (mutates: telemetry, billing ledger; replay fix-up)        #
+# --------------------------------------------------------------------------- #
+def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse]":
+    """Exact replay + commit. Must be called serially, in arrival order.
+
+    Telemetry refinement makes query i's priors a function of queries < i,
+    so position-accurate routing is inherently sequential. The heavy stages
+    aren't: retrieval/generation depend only on (query, bundle), and the
+    speculation already executed them in batch. One cheap host pass replays
+    the telemetry stream on a clone, re-routes each position with its true
+    priors (microseconds via the numpy mirror), and re-executes only the
+    mispredictions — typically none; under a deep pipeline, whatever the
+    staleness of the speculative priors required. Then billing, realized
+    utility, telemetry append, and response assembly.
+    """
+    from repro.serving.engine import EngineResponse
+
+    routed = decoded.routed
+    n = routed.n
+    qid0 = routed.qid0
+    queries, refs = routed.queries, routed.references
+    choices, util_np = routed.choices, routed.utilities
+    executions = list(decoded.executions)
+
+    if routed.refinement_on:
+        choices = choices.copy()
+        sim = engine.telemetry.clone_for_replay()
+        for i in range(n):
+            lp, cp = engine._priors(sim)
+            ci, ui = engine.router.route_batch_np(
+                routed.complexity[i : i + 1], latency_override=lp, cost_override=cp
+            )
+            util_np[i] = ui[0]
+            choice = int(ci[0])
+            if choice != choices[i]:
+                choices[i] = choice
+                guarded = engine.guardrails.pre_execution(choice).bundle_index
+                ex = decoded.exec_cache.get((i, guarded))
+                if ex is None:
+                    ex = execute_one(engine, qid0 + i, queries[i], choice, refs[i])
+                    if not engine.catalog[guarded].skip_retrieval:
+                        decoded.search_calls += 1
+                    decoded.exec_cache[(i, guarded)] = ex
+                executions[i] = ex
+            sim.log(make_record(engine, qid0 + i, queries[i], executions[i], 0.0, 0.0))
+
+    q_realized = np.asarray(
+        [ex.quality if refs[i] is not None else 0.0 for i, ex in enumerate(executions)],
+        np.float32,
+    )
+    lat_arr = np.asarray([ex.latency_ms for ex in executions], np.float32)
+    cost_arr = np.asarray([ex.bill.total for ex in executions], np.float32)
+    realized = np.asarray(
+        realized_utility(
+            jnp.asarray(q_realized),
+            jnp.asarray(lat_arr),
+            jnp.asarray(cost_arr),
+            weights=engine.router.config.weights,
+            norm=engine.config.realized_norm,
+        )
+    )
+
+    wall = (
+        (time.perf_counter() - routed.t0) * 1000 / n
+        if engine.config.measure_wallclock
+        else None
+    )
+    responses = []
+    for i, ex in enumerate(executions):
+        qid = qid0 + i
+        engine.ledger.add(ex.bill)
+        record = make_record(
+            engine,
+            qid,
+            queries[i],
+            ex,
+            float(util_np[i, choices[i]]),
+            float(realized[i]),
+            complexity=float(routed.complexity[i]),
+        )
+        engine.telemetry.log(record)
+        responses.append(
+            EngineResponse(
+                answer=ex.answer, record=record, passages=ex.passages, wallclock_ms=wall
+            )
+        )
+    return responses
+
+
+# --------------------------------------------------------------------------- #
+# Pipeline executor                                                            #
+# --------------------------------------------------------------------------- #
+class StagePipeline:
+    """N-deep micro-batch executor over the five stages.
+
+    ``depth`` micro-batches may be in flight between ``route`` and
+    ``finalize`` at once; the side-effect-free middle stages
+    (retrieve → assemble → decode) drain on ``workers`` threads while the
+    caller's thread stays free for token decode. ``route`` runs on the
+    submitting thread and ``finalize`` on the polling thread, in strict
+    submission order — the recombination barrier that keeps records
+    bit-identical to the sequential loop at every setting.
+
+    ``depth=1`` is the fully synchronous path: no worker threads are
+    created, ``submit`` runs the middle stages inline, and ``poll`` returns
+    the finalized batch immediately (the old ``--no-overlap`` behavior).
+    """
+
+    def __init__(self, engine: "RAGEngine", *, depth: int = 2, workers: int = 1):
+        self.engine = engine
+        self.depth = max(1, int(depth))
+        self.workers = max(1, int(workers)) if self.depth > 1 else 0
+        self._pool = ThreadPoolExecutor(max_workers=self.workers) if self.workers else None
+        self._inflight: deque[tuple[object, Future | DecodedBatch]] = deque()
+        # deterministic per-stage counters (the CI gate's burst-serial cell)
+        self.stage_batches = 0
+        self.retrieve_calls = 0
+
+    def _middle(self, routed: RoutedBatch) -> DecodedBatch:
+        return decode(self.engine, assemble(self.engine, retrieve(self.engine, routed)))
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    def can_submit(self) -> bool:
+        return len(self._inflight) < self.depth
+
+    def submit(
+        self,
+        queries: Sequence[str],
+        references: Sequence[str | None],
+        tag: object = None,
+    ) -> None:
+        """Route a micro-batch (serially, on this thread) and hand its middle
+        stages to the worker pool. ``tag`` is returned with the finalized
+        responses by :meth:`poll` (e.g. the arrival events for admission)."""
+        if not self.can_submit():
+            raise RuntimeError(
+                f"pipeline full: {len(self._inflight)} micro-batches in flight "
+                f"(depth {self.depth}); poll() before submitting more"
+            )
+        routed = route(self.engine, queries, references)
+        self.stage_batches += 1
+        work: Future | DecodedBatch
+        if self._pool is not None:
+            work = self._pool.submit(self._middle, routed)
+        else:
+            work = self._middle(routed)
+        self._inflight.append((tag, work))
+
+    def poll(self) -> "tuple[object, list[EngineResponse]] | None":
+        """Finalize the oldest micro-batch if its middle stages are done.
+
+        Strict submission-order recombination: only the head of the queue
+        may finalize, so telemetry/billing commits happen in arrival order
+        no matter how the worker threads interleave."""
+        if not self._inflight:
+            return None
+        tag, work = self._inflight[0]
+        if isinstance(work, Future):
+            if not work.done():
+                return None
+            decoded = work.result()
+        else:
+            decoded = work
+        self._inflight.popleft()
+        responses = finalize(self.engine, decoded)
+        self.retrieve_calls += decoded.search_calls
+        return tag, responses
+
+    def wait_head(self, timeout: float) -> None:
+        """Block until the oldest in-flight micro-batch finishes its middle
+        stages (or ``timeout`` elapses). No-op when nothing is pending."""
+        if self._inflight and isinstance(self._inflight[0][1], Future):
+            futures_wait([self._inflight[0][1]], timeout=timeout)
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

@@ -1,24 +1,28 @@
-"""Streaming serving loop: live intake, retrieval/decode overlap, real decode.
+"""Streaming serving loop: live intake, N-deep stage pipelining, real decode.
 
 The batched path (``RAGEngine.answer_batch`` / ``serve_batch``) consumes
 pre-collected batches; this module serves a **live arrival queue**. A
 :class:`StreamingEngine` admits :class:`~repro.serving.workload.Arrival`
 events as wall-clock time reaches them, micro-batches whatever is waiting
-through the engine's vectorized route→embed→search→generate fast path, and
-feeds the routed requests to the :class:`ContinuousBatchScheduler` for
-token-level decode.
+through the engine's typed stage chain (``route → retrieve → assemble →
+decode → finalize``; serving/stages.py), and feeds the routed requests to
+the :class:`ContinuousBatchScheduler` for token-level decode.
 
-**Two-slot pipeline.** The routing/retrieval stage for micro-batch N+1 runs
-on a worker thread while the scheduler decodes micro-batch N on the main
-thread, so decode never stalls on FAISS/Pallas MIPS and retrieval never
-waits for the decode loop (``StreamConfig.overlap=False`` serializes the
-two stages — the closed-loop benchmark measures both). At most one routing
-stage is in flight at a time, which also serializes all engine-state
-mutation: micro-batches enter ``answer_batch`` in strict arrival order, so a
-drained streaming run produces records **bit-identical** to one
-``answer_batch`` call over the same arrival-ordered stream (chunking the
-stream never changes records — the consecutive-batches parity the batched
-tests pin).
+**N-deep stage pipeline.** The middle stages (retrieve/assemble/decode) are
+side-effect-free, so a :class:`~repro.serving.stages.StagePipeline` keeps up
+to ``StreamConfig.pipeline_depth`` micro-batches in flight at once, drained
+by ``retrieval_workers`` worker threads, while the scheduler decodes tokens
+on the main thread — decode never stalls on FAISS/Pallas MIPS and retrieval
+never waits for the decode loop. ``route`` (query ids, priors, query-vector
+cache) and ``finalize`` (replay, billing, telemetry) run on the main thread
+in strict arrival order, which is the recombination barrier that keeps a
+drained streaming run **bit-identical** to one ``answer_batch`` call over
+the same arrival-ordered stream at every (depth, workers) setting: the
+finalize-stage replay re-routes each position under its true telemetry
+priors, so speculative staleness from deep pipelining never reaches a
+record. ``pipeline_depth=1`` (the deprecated ``overlap=False``) serializes
+everything on the main thread with no worker pool — the deterministic cell
+the CI benchmark gate counts.
 
 Backpressure is typed end to end: a full intake queue or a scheduler refusal
 surfaces as a :class:`~repro.serving.scheduler.Rejection` carrying the
@@ -31,8 +35,6 @@ import dataclasses
 import math
 import time
 from collections import deque
-from concurrent.futures import Future, ThreadPoolExecutor
-from concurrent.futures import wait as futures_wait
 from typing import Callable, Sequence
 
 import numpy as np
@@ -43,8 +45,8 @@ from repro.serving.scheduler import (
     Rejection,
     Request,
     SchedulerConfig,
-    requests_from_records,
 )
+from repro.serving.stages import StagePipeline
 from repro.serving.workload import Arrival, ArrivalProcess
 
 
@@ -52,8 +54,19 @@ from repro.serving.workload import Arrival, ArrivalProcess
 class StreamConfig:
     microbatch_max: int = 16  # queries per routing/retrieval stage
     max_intake: int = 1024  # front-door cap (pre-routing backpressure)
-    overlap: bool = True  # pipeline retrieval against decode
+    # Stage-pipeline shape: up to `pipeline_depth` micro-batches in flight
+    # between route and finalize, their middle stages drained by
+    # `retrieval_workers` threads. Depth 1 = fully serial, no worker pool.
+    pipeline_depth: int = 2
+    retrieval_workers: int = 1
+    # Deprecated master switch (pre-StagePipeline API): overlap=False forces
+    # depth 1 regardless of pipeline_depth, matching the old --no-overlap.
+    overlap: bool = True
     idle_sleep_s: float = 0.0002  # nothing to decode, nothing due: yield
+
+    @property
+    def effective_depth(self) -> int:
+        return 1 if not self.overlap else max(1, self.pipeline_depth)
 
 
 @dataclasses.dataclass
@@ -83,11 +96,19 @@ class StreamResult:
     step_history: list[dict]
     wall_s: float
     offered_qps: float
-    overlap: bool
+    pipeline_depth: int
+    retrieval_workers: int
+    stage_batches: int  # micro-batches routed through the pipeline
+    retrieve_calls: int  # compiled search_batch calls (incl. replay)
 
     @property
     def records(self) -> list:
         return [r.record for r in self.responses]
+
+    @property
+    def overlap(self) -> bool:
+        """Back-compat view: depth > 1 means stages overlap decode."""
+        return self.pipeline_depth > 1
 
     def percentile_ms(self, attr: str, q: float) -> float:
         vals = [
@@ -107,6 +128,8 @@ class StreamResult:
         return {
             "offered_qps": fin(self.offered_qps),
             "overlap": self.overlap,
+            "pipeline_depth": self.pipeline_depth,
+            "retrieval_workers": self.retrieval_workers,
             "completed": completed,
             "rejected": len(self.rejections),
             "wall_s": self.wall_s,
@@ -117,6 +140,8 @@ class StreamResult:
             "p95_ttlt_ms": fin(self.percentile_ms("ttlt_s", 95)),
             "max_queue_depth": max((m["queued"] for m in self.step_history), default=0),
             "decode_steps": len(self.step_history),
+            "stage_batches": self.stage_batches,
+            "retrieve_calls": self.retrieve_calls,
         }
 
 
@@ -138,45 +163,42 @@ class StreamingEngine:
         )
         self.decode_fn = decode_fn or (lambda active: [False] * len(active))
         self.config = config
-        # Monotone id source seeded past every id the scheduler has ever
-        # seen (accepted or rejected), so reusing a scheduler never mints a
-        # colliding request_id.
-        self._next_id = self.scheduler.next_request_id
 
     # ------------------------------------------------------------------ #
     def run(self, workload: ArrivalProcess | Sequence[Arrival]) -> StreamResult:
         """Serve the workload to completion; returns responses + timeline.
 
         The loop interleaves four duties each iteration: (1) move due
-        arrivals into the intake queue, (2) launch a routing/retrieval
-        micro-batch when none is in flight, (3) harvest a finished stage
-        into scheduler admission, (4) run one decode step if anything is
-        active or queued. With ``overlap`` the stage launched in (2) runs on
-        a worker thread, so (4) proceeds concurrently.
+        arrivals into the intake queue, (2) harvest every finished
+        head-of-line micro-batch out of the stage pipeline into scheduler
+        admission (finalize runs here, in strict arrival order), (3) launch
+        a routing micro-batch when the pipeline has room, (4) run one decode
+        step if anything is active or queued. With ``pipeline_depth > 1``
+        the middle stages launched in (3) run on worker threads, so (4)
+        proceeds concurrently with retrieval/assembly/generation.
         """
         arrivals = list(workload)
         offered = workload.offered_qps if isinstance(workload, ArrivalProcess) else float("nan")
         cfg = self.config
         sched = self.scheduler
+        pipeline = StagePipeline(
+            self.engine, depth=cfg.effective_depth, workers=cfg.retrieval_workers
+        )
         intake: deque[Arrival] = deque()
         responses: list[EngineResponse] = []
         rejections: list[Rejection] = []
         timings: dict[int, RequestTiming] = {}
         step_history: list[dict] = []
-        inflight: Future | None = None
-        inflight_batch: list[Arrival] = []
-        executor = ThreadPoolExecutor(max_workers=1) if cfg.overlap else None
         ev = 0
         t0 = time.perf_counter()
-        now = 0.0
 
         def clock() -> float:
             return time.perf_counter() - t0
 
-        def route_stage(batch: list[Arrival]) -> list[EngineResponse]:
-            return self.engine.answer_batch(
-                [a.query for a in batch], [a.reference for a in batch]
-            )
+        def harvest() -> None:
+            while (done := pipeline.poll()) is not None:
+                batch, stage_responses = done
+                self._admit(batch, stage_responses, responses, rejections, timings, clock())
 
         try:
             while True:
@@ -199,22 +221,18 @@ class StreamingEngine:
                         continue
                     intake.append(a)
 
-                # (3) harvest a finished routing stage → scheduler admission
-                if inflight is not None and inflight.done():
-                    batch, inflight_batch = inflight_batch, []
-                    stage_responses = inflight.result()
-                    inflight = None
-                    self._admit(batch, stage_responses, responses, rejections, timings, clock())
+                # (2) harvest finished micro-batches → finalize + admission
+                harvest()
 
-                # (2) launch the next routing/retrieval micro-batch
-                if inflight is None and intake:
+                # (3) launch the next routing micro-batch if there's room
+                if intake and pipeline.can_submit():
                     batch = [intake.popleft() for _ in range(min(cfg.microbatch_max, len(intake)))]
-                    if executor is not None:
-                        inflight_batch = batch
-                        inflight = executor.submit(route_stage, batch)
-                    else:
-                        stage_responses = route_stage(batch)
-                        self._admit(batch, stage_responses, responses, rejections, timings, clock())
+                    pipeline.submit(
+                        [a.query for a in batch], [a.reference for a in batch], tag=batch
+                    )
+                    # a depth-1 pipeline finishes inline: admit without
+                    # waiting a loop turn (the old serial-path behavior)
+                    harvest()
 
                 # (4) decode: one token for everything active
                 if sched.active or sched.queue_depth():
@@ -235,25 +253,24 @@ class StreamingEngine:
                     continue  # decode-bound: re-check intake immediately
 
                 # exit: nothing anywhere
-                if ev >= len(arrivals) and not intake and inflight is None:
+                if ev >= len(arrivals) and not intake and pipeline.in_flight == 0:
                     break
 
-                # idle: wait for the stage thread or the next arrival.
+                # idle: wait for the head micro-batch or the next arrival.
                 # Block on the future instead of polling — spinning here
-                # would steal the GIL from the routing thread we're waiting
+                # would steal the GIL from the stage workers we're waiting
                 # for. Wake early for the next arrival so intake stays live.
-                if inflight is not None:
+                if pipeline.in_flight:
                     wait_s = 0.05
                     if ev < len(arrivals):
                         wait_s = min(wait_s, max(arrivals[ev].time_s - clock(), 0.0))
-                    futures_wait([inflight], timeout=max(wait_s, cfg.idle_sleep_s))
+                    pipeline.wait_head(max(wait_s, cfg.idle_sleep_s))
                 elif ev < len(arrivals):
                     wait = arrivals[ev].time_s - clock()
                     if wait > 0:
                         time.sleep(min(wait, 0.005))
         finally:
-            if executor is not None:
-                executor.shutdown(wait=True)
+            pipeline.shutdown()
 
         return StreamResult(
             responses=responses,
@@ -262,7 +279,10 @@ class StreamingEngine:
             step_history=step_history,
             wall_s=clock(),
             offered_qps=offered,
-            overlap=cfg.overlap,
+            pipeline_depth=pipeline.depth,
+            retrieval_workers=pipeline.workers,
+            stage_batches=pipeline.stage_batches,
+            retrieve_calls=pipeline.retrieve_calls,
         )
 
     # ------------------------------------------------------------------ #
@@ -275,12 +295,9 @@ class StreamingEngine:
         timings: dict[int, RequestTiming],
         now: float,
     ) -> None:
-        """Convert one routed micro-batch into scheduler submissions."""
+        """Convert one finalized micro-batch into scheduler submissions."""
         sched = self.scheduler
-        reqs = requests_from_records(
-            [r.record for r in stage_responses], start_id=self._next_id
-        )
-        self._next_id += len(reqs)
+        reqs = sched.make_requests([r.record for r in stage_responses])
         responses.extend(stage_responses)
         for arrival, req in zip(batch, reqs):
             tm = RequestTiming(arrival_s=arrival.time_s, routed_s=now)

@@ -28,7 +28,8 @@ def _serving(speedup=3.6, decode_steps=350):
     }
 
 
-def _streaming(completed=28, rejected=0, decode_steps=358):
+def _streaming(completed=28, rejected=0, decode_steps=358, stage_batches=2,
+               retrieve_calls=5):
     return {
         "benchmark": "streaming_paper28",
         "streaming_qps": 30.0,  # telemetry, ungated
@@ -37,6 +38,8 @@ def _streaming(completed=28, rejected=0, decode_steps=358):
             "completed": completed,
             "rejected": rejected,
             "decode_steps": decode_steps,
+            "stage_batches": stage_batches,
+            "retrieve_calls": retrieve_calls,
         },
     }
 
@@ -103,6 +106,20 @@ def test_null_gate_container_fails_not_disarms():
     fails = compare(base, _streaming(), STREAMING_METRICS, threshold=0.2)
     assert len(fails) == len(STREAMING_METRICS)
     assert all("null" in f for f in fails)
+
+
+def test_stage_counters_have_zero_band():
+    """gate.stage_batches / gate.retrieve_calls are exact structural
+    counters: a single extra routed micro-batch or index search fails."""
+    fails = compare(_streaming(), _streaming(stage_batches=3), STREAMING_METRICS,
+                    threshold=0.2)
+    assert len(fails) == 1 and "gate.stage_batches" in fails[0]
+    fails = compare(_streaming(), _streaming(retrieve_calls=6), STREAMING_METRICS,
+                    threshold=0.2)
+    assert len(fails) == 1 and "gate.retrieve_calls" in fails[0]
+    # fewer searches (better grouping) passes
+    assert compare(_streaming(), _streaming(retrieve_calls=4), STREAMING_METRICS,
+                   threshold=0.2) == []
 
 
 def test_zero_rejected_baseline_fails_on_any_rejection():
