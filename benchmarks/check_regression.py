@@ -30,6 +30,11 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     per-stage counters from the StagePipeline (band 0: the serial cell's
     micro-batching and grouped-retrieval structure is exact, so any extra
     routed batch or index search is a structural regression, not noise).
+  - ``gate.backend_search_calls.dense`` — the per-backend counter
+    (*exact*: any change in either direction fails): the gate cell serves
+    the dense-only paper catalog, so every search must stay on the dense
+    backend — a drop means searches migrated to another backend, not an
+    improvement.
 
 A missing *current* artifact fails (the benchmark didn't run). A metric
 missing from the *baseline* warns and passes (it predates the gate —
@@ -58,6 +63,12 @@ class Metric:
     desc: str
     higher_is_better: bool = True
     threshold: float | None = None  # fractional band; None = CLI/global value
+    # exact metrics fail on ANY change, in either direction. Use for
+    # counters whose *distribution* is the contract: e.g. the per-backend
+    # search count, where a "drop" usually means searches migrated to a
+    # different backend — an improvement under a one-sided band, a routing
+    # regression in reality.
+    exact: bool = False
 
 
 # artifact file → gated metrics
@@ -94,6 +105,17 @@ GATED_METRICS: dict[str, list[Metric]] = {
             "burst-serial grouped index searches (deterministic)",
             higher_is_better=False,
             threshold=0.0,
+        ),
+        # exact: the gate cell runs the paper (dense-only) catalog, so its
+        # per-backend counter must stay exactly the dense total. A one-sided
+        # band would wave through searches migrating to another backend
+        # (dense count *drops*), which is precisely the regression this
+        # metric exists to catch.
+        Metric(
+            "gate.backend_search_calls.dense",
+            "burst-serial dense-backend searches (deterministic)",
+            higher_is_better=False,
+            exact=True,
         ),
     ],
 }
@@ -143,6 +165,13 @@ def compare(
             failures.append(f"{m.key}: non-finite committed baseline {base!r} ({m.desc})")
             continue
         base_f, cur_f = float(base), float(cur)
+        if m.exact:
+            if cur_f != base_f:
+                failures.append(
+                    f"{m.key}: {cur_f:.2f} vs baseline {base_f:.2f} "
+                    f"(exact metric: any change fails) — {m.desc}"
+                )
+            continue
         if m.higher_is_better:
             bad = cur_f < (1.0 - band) * base_f
         else:

@@ -46,6 +46,14 @@ class Bundle:
     axis; the quality-prior modulation (utility.py) uses it so that complex
     queries favour deep bundles. It is a derived, catalog-relative quantity —
     ``BundleCatalog`` recomputes it from rank when not supplied.
+
+    ``backend`` names the retrieval method the bundle routes through
+    (``retrieval/backend.py``); ``"dense"`` — exact MIPS — is the paper's
+    regime and the default, so the Table-I catalog is unchanged. The
+    backend's static :class:`~repro.retrieval.backend.BackendCost`
+    descriptor scales the bundle's latency/quality priors (the
+    ``effective_*`` properties), which is how the router discriminates a
+    cheap lexical bundle from an exact dense one at the same depth.
     """
 
     name: str
@@ -56,6 +64,7 @@ class Bundle:
     cost_prior_tokens: float
     generation: GenerationSpec = GenerationSpec()
     depth_affinity: float = 0.0
+    backend: str = "dense"
 
     def __post_init__(self):
         if self.top_k < 0:
@@ -66,6 +75,26 @@ class Bundle:
             raise ValueError(f"retrieval bundles must have top_k>0 ({self.name})")
         if not (0.0 <= self.quality_prior <= 1.0):
             raise ValueError(f"quality_prior must be in [0,1] ({self.name})")
+        if not self.backend:
+            raise ValueError(f"backend must be a non-empty name ({self.name})")
+
+    @property
+    def backend_cost(self):
+        """Static cost descriptor of this bundle's retrieval backend."""
+        from repro.retrieval.backend import backend_cost  # lazy: no core→retrieval cycle
+
+        return backend_cost(self.backend)
+
+    @property
+    def effective_latency_prior_ms(self) -> float:
+        """Latency prior scaled by the backend's retrieve-stage cost (×1.0
+        for dense, so paper-catalog priors are bit-identical)."""
+        return self.latency_prior_ms * self.backend_cost.latency_scale
+
+    @property
+    def effective_quality_prior(self) -> float:
+        """Quality prior discounted by the backend's expected recall@k."""
+        return self.quality_prior * self.backend_cost.recall_prior
 
 
 def _paper_bundles() -> tuple[Bundle, ...]:
@@ -123,21 +152,62 @@ class BundleCatalog:
     def names(self) -> tuple[str, ...]:
         return tuple(b.name for b in self._bundles)
 
+    # -- backend views --------------------------------------------------------
+    @property
+    def backend_names(self) -> tuple[str, ...]:
+        """Per-bundle backend name, catalog order."""
+        return tuple(b.backend for b in self._bundles)
+
+    def backends_used(self) -> tuple[str, ...]:
+        """Unique backends any retrieval bundle routes through (first-use
+        order) — what an engine must construct to serve this catalog."""
+        return tuple(
+            dict.fromkeys(b.backend for b in self._bundles if not b.skip_retrieval)
+        )
+
+    def routed_by_backend(self, strategy_counts: Mapping[str, int]) -> dict[str, int]:
+        """Aggregate per-bundle routed counts (``TelemetryStore.
+        strategy_counts``) by retrieval backend, with skip-retrieval bundles
+        under ``"no_retrieval"``. Sorted keys — the single (backend × depth)
+        routing view the serve CLI prints and the catalog-comparison
+        benchmark emits."""
+        out: dict[str, int] = {}
+        for name, n in strategy_counts.items():
+            b = self[name]
+            key = "no_retrieval" if b.skip_retrieval else b.backend
+            out[key] = out.get(key, 0) + n
+        return dict(sorted(out.items()))
+
     # -- array views ---------------------------------------------------------
     def as_arrays(self) -> Mapping[str, jnp.ndarray]:
         """Catalog priors as a dict of f32 arrays, shape ``(n_bundles,)``.
 
         Keys: quality_prior, latency_prior_ms, cost_prior_tokens, top_k,
-        skip_retrieval, depth_affinity.
+        skip_retrieval, depth_affinity, backend_recall,
+        backend_latency_scale.
+
+        ``latency_prior_ms`` is the *effective* (backend-scaled) prior;
+        ``backend_recall`` carries each bundle's backend recall prior for
+        the utility function to fold into expected quality (utility.py).
+        Both are exactly 1.0-scaled for dense bundles, so the paper
+        catalog's arrays are bit-identical to the pre-backend ones.
         """
         b = self._bundles
         return {
             "quality_prior": jnp.array([x.quality_prior for x in b], jnp.float32),
-            "latency_prior_ms": jnp.array([x.latency_prior_ms for x in b], jnp.float32),
+            "latency_prior_ms": jnp.array(
+                [x.effective_latency_prior_ms for x in b], jnp.float32
+            ),
             "cost_prior_tokens": jnp.array([x.cost_prior_tokens for x in b], jnp.float32),
             "top_k": jnp.array([x.top_k for x in b], jnp.int32),
             "skip_retrieval": jnp.array([x.skip_retrieval for x in b], jnp.bool_),
             "depth_affinity": jnp.array([x.depth_affinity for x in b], jnp.float32),
+            "backend_recall": jnp.array(
+                [x.backend_cost.recall_prior for x in b], jnp.float32
+            ),
+            "backend_latency_scale": jnp.array(
+                [x.backend_cost.latency_scale for x in b], jnp.float32
+            ),
         }
 
     def with_bundle(self, bundle: Bundle) -> "BundleCatalog":
@@ -147,6 +217,57 @@ class BundleCatalog:
 
     def __repr__(self) -> str:
         return f"BundleCatalog({', '.join(self.names)})"
+
+
+def _extended_bundles() -> tuple[Bundle, ...]:
+    """The backend-aware catalog: Table I plus three non-dense operating
+    points — the cheap-lexical / approximate / fused regimes "Fast or
+    Better?" (Su et al., 2025) shows matter for user-controlled
+    cost-accuracy tradeoffs.
+
+    * ``bm25_light`` — lexical top-3, no embed call at all: cheaper than
+      ``light_rag`` on every axis. ``quality_prior`` is the expected
+      quality *given a lexical hit*; the backend's recall prior (0.62)
+      discounts it to ~0.58 effective in Eq. 1, and the strongly shallow
+      affinity (−0.75) confines it to the simplest queries.
+    * ``ivf_medium`` — approximate top-5 over the same vectors at roughly
+      half the scoring cost; the IVF recall prior (0.81 at the default
+      2/4 probe) is what the router trades against its latency edge over
+      ``medium_rag``, and the mild affinity (0.15) slots it between the
+      shallow and deep dense bands.
+    * ``hybrid_heavy`` — dense+BM25 fusion at depth 10: the quality
+      ceiling, priced above ``heavy_rag`` (two searches + fusion).
+
+    Priors follow the Table-I convention (latency = model-scale ms before
+    the backend scale; cost = expected billed tokens — note ``bm25_light``
+    saves the ~7 embedding tokens grounded bundles bill). The values are
+    calibrated so a ``router_default`` pass over the 28-query paper
+    benchmark exercises all four backends (pinned by
+    tests/test_backend.py); the complexity bands they induce survive
+    telemetry refinement because the recall discount and affinity — not
+    the static latency/cost priors refinement replaces — carry the
+    discrimination.
+    """
+    gen = GenerationSpec()
+    return _paper_bundles() + (
+        Bundle("bm25_light", 3, False, 0.94, 45.0, 208.0, gen, -0.75, backend="bm25"),
+        Bundle("ivf_medium", 5, False, 0.84, 60.0, 275.0, gen, 0.15, backend="ivf"),
+        Bundle("hybrid_heavy", 10, False, 0.86, 100.0, 367.0, gen, 1.0, backend="hybrid"),
+    )
+
+
+CATALOG_PRESETS: tuple[str, ...] = ("paper", "extended")
+
+
+def make_catalog(preset: str = "paper") -> BundleCatalog:
+    """Catalog presets: ``paper`` (Table I, dense-only — the parity-pinned
+    default) or ``extended`` (paper + BM25-light / IVF-medium /
+    hybrid-heavy; the (backend × depth × generation) catalog)."""
+    if preset == "paper":
+        return BundleCatalog()
+    if preset == "extended":
+        return BundleCatalog(_extended_bundles())
+    raise ValueError(f"unknown catalog preset {preset!r}; expected one of {CATALOG_PRESETS}")
 
 
 DEFAULT_CATALOG = BundleCatalog()

@@ -185,9 +185,15 @@ class TelemetryStore:
         return ready >= 2
 
     def refined_latency_priors(self) -> np.ndarray:
-        """Per-bundle latency estimates for Eq. 1 (consistent units)."""
+        """Per-bundle latency estimates for Eq. 1 (consistent units).
+
+        The static base is the *effective* (backend-scaled) prior, so a
+        cheap lexical/approximate bundle keeps its latency edge until
+        telemetry observes it (×1.0 for dense — bit-identical to the raw
+        Table-I prior)."""
         priors = np.array(
-            [self.catalog[n].latency_prior_ms for n in self.catalog.names], np.float64
+            [self.catalog[n].effective_latency_prior_ms for n in self.catalog.names],
+            np.float64,
         )
         if not self.refine_latency:
             return priors

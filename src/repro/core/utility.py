@@ -139,6 +139,15 @@ def selection_utilities(
     priors reflect the telemetry state at its position in the stream. The
     normalization is per row either way, so an ``(N, B)`` call is exactly N
     stacked ``(B,)`` calls.
+
+    Backend-aware priors: when ``catalog_arrays`` carries ``backend_recall``
+    (a backend-aware catalog — bundles.as_arrays), each bundle's quality
+    prior is discounted by its retrieval backend's expected recall@k before
+    modulation, so Eq. 1 discriminates an approximate/lexical bundle from an
+    exact dense one at the same depth. Dense bundles carry recall 1.0 — an
+    exact multiplicative identity, so the paper catalog's utilities are
+    bit-identical. (Backend *latency* priors arrive already folded into
+    ``latency_prior_ms`` / the telemetry store's refined vectors.)
     """
     lat = (
         jnp.asarray(latency_override, jnp.float32)
@@ -150,8 +159,12 @@ def selection_utilities(
         if cost_override is not None
         else catalog_arrays["cost_prior_tokens"]
     )
+    quality_prior = catalog_arrays["quality_prior"]
+    recall = catalog_arrays.get("backend_recall")
+    if recall is not None:
+        quality_prior = quality_prior * jnp.asarray(recall, jnp.float32)
     qhat = modulated_quality(
-        catalog_arrays["quality_prior"],
+        quality_prior,
         catalog_arrays["depth_affinity"],
         complexity,
         gamma=gamma,
@@ -196,7 +209,12 @@ def selection_utilities_np(
     """
     f32 = np.float32
     c = np.asarray(complexity, f32)[..., None]  # (N, 1)
-    q = np.asarray(catalog_arrays["quality_prior"], f32)[None, :]  # (1, B)
+    quality_prior = np.asarray(catalog_arrays["quality_prior"], f32)
+    recall = catalog_arrays.get("backend_recall")
+    if recall is not None:
+        # same op, same order as the jnp path (backend recall discount)
+        quality_prior = quality_prior * np.asarray(recall, f32)
+    q = quality_prior[None, :]  # (1, B)
     a = np.asarray(catalog_arrays["depth_affinity"], f32)[None, :]
     deep = np.square(np.clip(a, f32(0.0), f32(1.0)))
     hinge = np.maximum(c - f32(c1), f32(0.0))

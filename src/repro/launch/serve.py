@@ -17,6 +17,12 @@ def main() -> None:
     ap.add_argument("--docs", default=None, help="newline-separated passages (default: paper corpus)")
     ap.add_argument("--questions", default=None, help="one query per line (default: paper queries)")
     ap.add_argument("--policy", default="router_default")
+    ap.add_argument(
+        "--catalog", default="paper", choices=("paper", "extended"),
+        help="bundle catalog preset: 'paper' = Table I (dense-only, parity-"
+        "pinned); 'extended' adds BM25-light / IVF-medium / hybrid-heavy "
+        "bundles routed through the pluggable retrieval backends",
+    )
     ap.add_argument("--out", default="results/serve.csv")
     ap.add_argument("--epsilon", type=float, default=0.0)
     ap.add_argument("--min-confidence", type=float, default=0.0)
@@ -44,11 +50,12 @@ def main() -> None:
 
     import dataclasses
 
+    from repro.core.bundles import make_catalog
     from repro.core.guardrails import GuardrailConfig
     from repro.core.policies import make_policy
     from repro.core.router import RouterConfig
     from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS, corpus_document
-    from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages
+    from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages, make_backends
     from repro.serving.engine import EngineConfig, RAGEngine
 
     if args.questions:
@@ -61,15 +68,20 @@ def main() -> None:
 
     doc = open(args.docs).read() if args.docs else corpus_document()
 
-    router = make_policy(args.policy, config=RouterConfig(epsilon=args.epsilon))
+    catalog = make_catalog(args.catalog)
+    router = make_policy(args.policy, catalog=catalog, config=RouterConfig(epsilon=args.epsilon))
     embedder = HashedNGramEmbedder(dim=256)
     passages = line_passages(doc)
     index, index_tokens = DenseIndex.build(passages, embedder)
+    backends = make_backends(
+        index, passages, embedder, names=("dense", *catalog.backends_used())
+    )
     engine = RAGEngine(
         router,
         index,
         embedder,
         catalog=router.catalog,
+        backends=backends,
         config=EngineConfig(
             guardrails=GuardrailConfig(
                 min_retrieval_confidence=args.min_confidence,
@@ -111,6 +123,9 @@ def main() -> None:
     telemetry = engine.telemetry if args.stream else engine.run(queries, references)
     telemetry.to_csv(args.out)
     print(telemetry.summary_json())
+    if args.catalog != "paper":
+        # (backend × depth) routing view: which retrieval method served what
+        print(f"routed by backend: {catalog.routed_by_backend(telemetry.strategy_counts())}")
     print(f"wrote {len(telemetry.records)} records to {args.out}")
 
 

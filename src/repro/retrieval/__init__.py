@@ -1,6 +1,18 @@
 """Retrieval substrate: tokenization, chunking, embedding, dense MIPS index,
-BM25, IVF ANN, hybrid fusion, distributed top-k."""
+BM25, IVF ANN, hybrid fusion, distributed top-k — all unified behind the
+batched :class:`~repro.retrieval.backend.RetrievalBackend` protocol."""
 
+from repro.retrieval.backend import (
+    BM25Backend,
+    BackendCost,
+    DEFAULT_BACKEND_COSTS,
+    DenseBackend,
+    HybridBackend,
+    IVFBackend,
+    RetrievalBackend,
+    backend_cost,
+    make_backends,
+)
 from repro.retrieval.bm25 import BM25Index, BM25Params
 from repro.retrieval.chunking import Passage, corpus_passages, line_passages, sliding_window_passages
 from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, StackedEmbedder
@@ -11,6 +23,9 @@ from repro.retrieval.tokenizer import count_tokens, lexical_overlap, terms, word
 from repro.retrieval.topk import blocked_topk, distributed_topk, merge_topk
 
 __all__ = [
+    "BM25Backend", "BackendCost", "DEFAULT_BACKEND_COSTS", "DenseBackend",
+    "HybridBackend", "IVFBackend", "RetrievalBackend", "backend_cost",
+    "make_backends",
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",
     "sliding_window_passages", "CachingEmbedder", "HashedNGramEmbedder", "StackedEmbedder",
     "HybridRetriever", "rrf_fuse", "weighted_fuse", "DenseIndex", "SearchResult",

@@ -38,10 +38,14 @@ class BM25Index:
     per-passage contributions.
     """
 
-    def __init__(self, passages: Sequence[Passage], params: BM25Params = BM25Params()):
-        self.params = params
+    def __init__(self, passages: Sequence[Passage], params: BM25Params | None = None):
+        # Default to None and construct per instance: a shared default
+        # instance in the signature would alias every index built without
+        # explicit params onto one object (harmless while BM25Params stays
+        # frozen, a footgun the moment it grows mutable state).
+        self.params = params if params is not None else BM25Params()
         self.n_passages = len(passages)
-        self._slots = 1 << params.vocab_hash_bits
+        self._slots = 1 << self.params.vocab_hash_bits
 
         doc_lens = np.zeros((self.n_passages,), np.float32)
         post_term: list[int] = []
@@ -64,42 +68,68 @@ class BM25Index:
         self.doc_lens = jnp.asarray(doc_lens)
         self.avgdl = float(doc_lens.mean()) if self.n_passages else 0.0
         self.post_term = np.asarray(post_term, np.int64)
-        self.post_doc = jnp.asarray(np.asarray(post_doc, np.int32))
-        self.post_tf = jnp.asarray(np.asarray(post_tf, np.float32))
+        order = np.argsort(self.post_term, kind="stable")
+        # sort postings by term slot for fast searchsorted gather; keep the
+        # doc column on host too (the batched path computes segment ids there)
+        self.post_term = self.post_term[order]
+        self._post_doc_np = np.asarray(post_doc, np.int32)[order]
+        self.post_doc = jnp.asarray(self._post_doc_np)
+        self.post_tf = jnp.asarray(np.asarray(post_tf, np.float32)[order])
         # idf per posting (precomputed — slot idf is static)
         n = max(self.n_passages, 1)
         idf = np.array(
             [np.log(1.0 + (n - df[t] + 0.5) / (df[t] + 0.5)) for t in post_term], np.float32
         )
-        self.post_idf = jnp.asarray(idf)
-        # sort postings by term slot for fast searchsorted gather
-        order = np.argsort(self.post_term, kind="stable")
-        self.post_term = self.post_term[order]
-        self.post_doc = self.post_doc[np.asarray(order)]
-        self.post_tf = self.post_tf[np.asarray(order)]
-        self.post_idf = self.post_idf[np.asarray(order)]
+        self.post_idf = jnp.asarray(idf[order])
 
-    def score(self, query: str) -> np.ndarray:
-        """BM25 scores for all passages, shape (n_passages,)."""
+    def _postings_for(self, query: str) -> np.ndarray:
+        """Indices of this query's matching postings (sorted-slot ranges)."""
         q_slots = sorted(
             {_stable_hash(t, "bm25") % self._slots for t in terms(query, remove_stopwords=True)}
         )
-        if not q_slots or self.n_passages == 0:
-            return np.zeros((self.n_passages,), np.float32)
+        if not q_slots:
+            return np.array([], np.int64)
         # host-side postings range lookup (binary search over sorted slots)
         lo = np.searchsorted(self.post_term, q_slots, side="left")
         hi = np.searchsorted(self.post_term, q_slots, side="right")
-        sel = np.concatenate([np.arange(a, b) for a, b in zip(lo, hi)]) if len(q_slots) else np.array([], np.int64)
-        if sel.size == 0:
-            return np.zeros((self.n_passages,), np.float32)
-        sel_j = jnp.asarray(sel.astype(np.int32))
-        return np.asarray(self._score_postings(sel_j))
+        return np.concatenate([np.arange(a, b) for a, b in zip(lo, hi)])
 
-    @dataclasses.dataclass(frozen=True)
-    class _Static:
-        pass
+    def score(self, query: str) -> np.ndarray:
+        """BM25 scores for all passages, shape (n_passages,)."""
+        return self.score_batch([query])[0]
 
-    def _score_postings(self, sel: jnp.ndarray) -> jnp.ndarray:
+    def score_batch(self, queries: Sequence[str]) -> np.ndarray:
+        """BM25 scores for a query batch, shape (n_queries, n_passages).
+
+        One fused device pass for the whole batch: every query's matching
+        postings concatenate into a single edge list whose segment id is
+        ``row * n_passages + doc``, so a lone ``segment_sum`` scatters all
+        (query, passage) contributions at once — the batched mirror of the
+        single-query path, bit-identical per row regardless of batch shape
+        (each row's postings are disjoint segments).
+        """
+        nq = len(queries)
+        if nq == 0 or self.n_passages == 0:
+            return np.zeros((nq, self.n_passages), np.float32)
+        sels = [self._postings_for(q) for q in queries]
+        total = sum(s.size for s in sels)
+        if total == 0:
+            return np.zeros((nq, self.n_passages), np.float32)
+        sel = np.concatenate([s for s in sels if s.size])
+        rows = np.concatenate(
+            [np.full((s.size,), r, np.int64) for r, s in enumerate(sels) if s.size]
+        )
+        seg = rows * self.n_passages + self._post_doc_np[sel]
+        out = self._score_postings(
+            jnp.asarray(sel.astype(np.int32)),
+            jnp.asarray(seg.astype(np.int32)),
+            nq * self.n_passages,
+        )
+        return np.asarray(out).reshape(nq, self.n_passages)
+
+    def _score_postings(
+        self, sel: jnp.ndarray, seg: jnp.ndarray, num_segments: int
+    ) -> jnp.ndarray:
         k1, b = self.params.k1, self.params.b
         tf = self.post_tf[sel]
         idf = self.post_idf[sel]
@@ -107,10 +137,22 @@ class BM25Index:
         dl = self.doc_lens[doc]
         denom = tf + k1 * (1.0 - b + b * dl / max(self.avgdl, 1e-9))
         contrib = idf * tf * (k1 + 1.0) / denom
-        return jax.ops.segment_sum(contrib, doc, num_segments=self.n_passages)
+        return jax.ops.segment_sum(contrib, seg, num_segments=num_segments)
 
     def search(self, query: str, k: int) -> tuple[np.ndarray, np.ndarray]:
-        scores = self.score(query)
+        scores, ids = self.search_batch([query], k)
+        return scores[0], ids[0]
+
+    def search_batch(
+        self, queries: Sequence[str], k: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(n,) query strings → (scores (n, k), ids (n, k)), descending per
+        row with stable passage-id tie-breaks; ``k`` clamps to the corpus.
+        Queries with no matching terms score 0 everywhere (ids 0..k-1)."""
         k = min(k, self.n_passages)
-        ids = np.argsort(-scores, kind="stable")[:k]
-        return scores[ids].astype(np.float32), ids.astype(np.int32)
+        scores = self.score_batch(queries)
+        ids = np.argsort(-scores, axis=-1, kind="stable")[:, :k]
+        return (
+            np.take_along_axis(scores, ids, axis=-1).astype(np.float32),
+            ids.astype(np.int32),
+        )

@@ -14,6 +14,7 @@ a hybrid bundle drops into the catalog without touching the routing API
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.retrieval.bm25 import BM25Index
@@ -81,15 +82,53 @@ class HybridRetriever:
         self.candidates_per_list = candidates_per_list
 
     def search(self, query: str, k: int) -> SearchResult:
+        scores, ids = self.search_batch([query], k)
+        return SearchResult(ids[0], scores[0])
+
+    def search_batch(
+        self,
+        queries: list[str],
+        k: int,
+        *,
+        query_vecs: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched fusion: (n,) queries → (scores (n, k), ids (n, k)).
+
+        One batched dense MIPS call and one batched BM25 call feed a
+        per-row fusion; each row is identical to a single-query
+        :meth:`search` (fusion is per-query, so batch shape can't leak into
+        a row). ``query_vecs`` reuses already-embedded vectors (the serving
+        engine's query cache); when omitted the queries are embedded here.
+        ``k`` clamps to the corpus, and because both candidate lists carry
+        ``m >= k`` entries the fused union always fills all k slots.
+
+        Scores: RRF fusion reports the *dense cosine* of each fused id
+        (0.0 for ids only BM25 surfaced) so retrieval confidence stays
+        comparable with the dense backend; weighted fusion reports the
+        fused score itself.
+        """
+        n = len(queries)
+        k = min(k, self.dense.size)
+        if n == 0 or k == 0:
+            return np.zeros((n, k), np.float32), np.zeros((n, k), np.int32)
         m = min(max(k, self.candidates_per_list), self.dense.size)
-        qv = self.embedder.embed([query])[0]
-        d = self.dense.search(qv, m)
-        s_scores, s_ids = self.sparse.search(query, m)
-        if self.fusion == "rrf":
-            scores, ids = rrf_fuse([(d.scores, d.passage_ids), (s_scores, s_ids)], k)
-        else:
-            scores, ids = weighted_fuse((d.scores, d.passage_ids), (s_scores, s_ids), k, w_dense=self.w_dense)
-        # Confidence stays cosine-based (comparable across retrievers).
-        dense_by_id = {int(i): float(s) for s, i in zip(d.scores, d.passage_ids)}
-        conf_scores = np.array([dense_by_id.get(int(i), 0.0) for i in ids], np.float32)
-        return SearchResult(ids, conf_scores if self.fusion == "rrf" else scores)
+        qv = query_vecs if query_vecs is not None else self.embedder.embed(queries)
+        d_scores, d_ids = self.dense.search_batch(jnp.asarray(qv), m)
+        d_scores = np.asarray(d_scores, np.float32)
+        d_ids = np.asarray(d_ids, np.int32)
+        s_scores, s_ids = self.sparse.search_batch(queries, m)
+        out_scores = np.zeros((n, k), np.float32)
+        out_ids = np.zeros((n, k), np.int32)
+        for r in range(n):
+            dense_r = (d_scores[r], d_ids[r])
+            sparse_r = (s_scores[r], s_ids[r])
+            if self.fusion == "rrf":
+                _, ids = rrf_fuse([dense_r, sparse_r], k)
+                # Confidence stays cosine-based (comparable across retrievers).
+                dense_by_id = {int(i): float(s) for s, i in zip(d_scores[r], d_ids[r])}
+                scores = np.array([dense_by_id.get(int(i), 0.0) for i in ids], np.float32)
+            else:
+                scores, ids = weighted_fuse(dense_r, sparse_r, k, w_dense=self.w_dense)
+            out_scores[r, : len(ids)] = scores
+            out_ids[r, : len(ids)] = ids
+        return out_scores, out_ids

@@ -81,22 +81,68 @@ class IVFIndex:
     def n_clusters(self) -> int:
         return self.centroids.shape[0]
 
+    def _search_fn(self, k: int, n_probe: int):
+        """Cached jit-compiled fixed-shape ``(Q_BLOCK, d)`` probe+score
+        closure — one compiled program per (k, n_probe), like
+        ``DenseIndex._search_fn``. The fixed block shape is what makes a
+        query row's scores independent of the caller's batch size: XLA may
+        tile a shape-(nq, d) matmul differently per nq, which perturbs the
+        last float bits — enough to break the serving pipeline's bit-exact
+        chunking parity for IVF-backed bundles."""
+        cache = getattr(self, "_fn_cache", None)
+        if cache is None:
+            cache = self._fn_cache = {}
+        fn = cache.get((k, n_probe))
+        if fn is not None:
+            return fn
+
+        def core(q: jnp.ndarray):  # (Q_BLOCK, d) raw; normalized in-closure
+            q = l2_normalize(q)
+            _, probe = jax.lax.top_k(q @ self.centroids.T, n_probe)  # (bq, p)
+            cand_ids = self.buckets[probe].reshape(q.shape[0], -1)  # (bq, p*cap)
+            cand_mask = self.bucket_mask[probe].reshape(q.shape[0], -1)
+            cand_vecs = self.embeddings[jnp.maximum(cand_ids, 0)]  # (bq, m, d)
+            scores = jnp.einsum("qd,qmd->qm", q, cand_vecs)
+            scores = jnp.where(cand_mask, scores, -jnp.inf)
+            k_eff = min(k, scores.shape[-1])
+            v, sel = jax.lax.top_k(scores, k_eff)
+            ids = jnp.take_along_axis(cand_ids, sel, axis=-1)
+            return v, ids
+
+        fn = cache[(k, n_probe)] = jax.jit(core)
+        return fn
+
     def search_batch(
         self, query_vecs: jnp.ndarray, k: int, *, n_probe: int = 4
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """Probed approximate search. Returns (scores, ids), (nq, k)."""
-        q = l2_normalize(jnp.asarray(query_vecs, jnp.float32))
+        """Probed approximate search. Returns (scores, ids), (nq, k_eff).
+
+        Queries run through a cached compiled closure in fixed ``Q_BLOCK``
+        chunks (zero-padded), so each row's result is bit-identical whether
+        it arrives alone or inside any batch — the same contract as
+        ``DenseIndex.search_batch``, and what the serving layer's
+        mixed-backend parity tests pin."""
+        from repro.retrieval.index import Q_BLOCK
+
+        q = np.asarray(query_vecs, np.float32)
+        nq = q.shape[0]
         n_probe = min(n_probe, self.n_clusters)
-        _, probe = jax.lax.top_k(q @ self.centroids.T, n_probe)  # (nq, p)
-        cand_ids = self.buckets[probe].reshape(q.shape[0], -1)  # (nq, p*cap)
-        cand_mask = self.bucket_mask[probe].reshape(q.shape[0], -1)
-        cand_vecs = self.embeddings[jnp.maximum(cand_ids, 0)]  # (nq, m, d)
-        scores = jnp.einsum("qd,qmd->qm", q, cand_vecs)
-        scores = jnp.where(cand_mask, scores, -jnp.inf)
-        k_eff = min(k, scores.shape[-1])
-        v, sel = jax.lax.top_k(scores, k_eff)
-        ids = jnp.take_along_axis(cand_ids, sel, axis=-1)
-        return v, ids
+        cap = self.buckets.shape[1]
+        k_eff = min(k, n_probe * cap)
+        if nq == 0:
+            return jnp.zeros((0, k_eff), jnp.float32), jnp.zeros((0, k_eff), jnp.int32)
+        fn = self._search_fn(k, n_probe)
+        pad = (-nq) % Q_BLOCK
+        if pad:
+            q = np.concatenate([q, np.zeros((pad, q.shape[1]), np.float32)], axis=0)
+        vals, ids = [], []
+        for s in range(0, q.shape[0], Q_BLOCK):
+            v, i = fn(jnp.asarray(q[s : s + Q_BLOCK]))
+            vals.append(np.asarray(v, np.float32))
+            ids.append(np.asarray(i, np.int32))
+        v_np = np.concatenate(vals, axis=0)[:nq] if len(vals) > 1 else vals[0][:nq]
+        i_np = np.concatenate(ids, axis=0)[:nq] if len(ids) > 1 else ids[0][:nq]
+        return jnp.asarray(v_np), jnp.asarray(i_np)
 
     def recall_vs_exact(self, queries: jnp.ndarray, k: int, *, n_probe: int = 4) -> float:
         """Measured recall@k against exact MIPS — calibration telemetry."""

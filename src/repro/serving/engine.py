@@ -31,13 +31,14 @@ thin compositions of those stages and all produce *bit-identical* records:
 
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import dataclasses
 
 import numpy as np
 
 from repro.core.bundles import BundleCatalog, DEFAULT_CATALOG
+from repro.retrieval.backend import DenseBackend, RetrievalBackend, make_backends
 from repro.core.guardrails import GuardrailConfig, Guardrails
 from repro.core.router import Router
 from repro.core.telemetry import QueryRecord, TelemetryStore
@@ -102,9 +103,25 @@ class RAGEngine:
         catalog: BundleCatalog = DEFAULT_CATALOG,
         config: EngineConfig = EngineConfig(),
         index_embedding_tokens: int = 0,
+        backends: Mapping[str, RetrievalBackend] | None = None,
     ):
         self.router = router
         self.index = index
+        # Pluggable retrieval: bundle.backend names a RetrievalBackend here.
+        # Default is the dense adapter over `index` — a pure delegation, so
+        # a dense-only (paper) catalog serves bit-identical records whether
+        # or not the caller ever heard of backends.
+        self.backends: dict[str, RetrievalBackend] = (
+            dict(backends) if backends is not None else {}
+        )
+        self.backends.setdefault("dense", DenseBackend(index))
+        missing = [b for b in catalog.backends_used() if b not in self.backends]
+        if missing:
+            raise ValueError(
+                f"catalog routes through backends {missing} but the engine only "
+                f"has {sorted(self.backends)}; build them with "
+                "repro.retrieval.backend.make_backends and pass backends=..."
+            )
         # Query-vector cache: repeated queries skip the embed stage entirely
         # (compute only — τ_embed billing stays per call, Eq. 2).
         self.embedder = (
@@ -142,19 +159,24 @@ class RAGEngine:
         direct_completion = 170  # unconstrained answers run long (§VII.B)
         lat, cost = [], []
         for b in self.catalog:
+            # validation guarantees a backend for every retrieval bundle;
+            # skip_retrieval bundles never touch one (scale is moot at k=0)
+            backend = self.backends.get(b.backend)
             if b.skip_retrieval:
                 prompt = direct_prompt
                 completion = direct_completion
                 emb = 0
             else:
                 prompt = base_prompt + tokens_per_passage * b.top_k
-                emb = embed_tokens
+                # BM25-style backends never spend the embed call
+                emb = embed_tokens if backend.requires_query_vecs else 0
                 completion = grounded_completion
             stages_ms = self.latency_model.stages_ms(
                 embed_tokens=emb,
                 retrieval_k=b.top_k,
                 prompt_tokens=prompt,
                 completion_tokens=completion,
+                retrieval_latency_scale=backend.cost.latency_scale if backend else 1.0,
             )
             lat.append(sum(stages_ms.values()))
             cost.append(prompt + completion + emb)
@@ -276,17 +298,27 @@ def build_paper_engine(
     embed_dim: int = 256,
     config: EngineConfig = EngineConfig(),
 ) -> RAGEngine:
-    """Engine wired to the paper's benchmark corpus (Appendix E)."""
+    """Engine wired to the paper's benchmark corpus (Appendix E).
+
+    Builds every retrieval backend the router's catalog routes through
+    (``catalog.backends_used()``) over the shared corpus — the paper
+    catalog needs only the dense index; the extended catalog adds BM25 /
+    IVF / hybrid adapters deterministically (seeded IVF k-means)."""
     from repro.data.benchmark import corpus_document
 
     embedder = HashedNGramEmbedder(dim=embed_dim)
     passages = line_passages(corpus_document())
     index, index_tokens = DenseIndex.build(passages, embedder)
+    catalog = policy_router.catalog
+    backends = make_backends(
+        index, passages, embedder, names=("dense", *catalog.backends_used())
+    )
     return RAGEngine(
         policy_router,
         index,
         embedder,
-        catalog=policy_router.catalog,
+        catalog=catalog,
         config=config,
         index_embedding_tokens=index_tokens,
+        backends=backends,
     )

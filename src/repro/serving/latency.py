@@ -51,11 +51,25 @@ class LatencyModel:
         retrieval_k: int,
         prompt_tokens: int,
         completion_tokens: int,
+        retrieval_latency_scale: float = 1.0,
     ) -> dict:
+        """Per-stage latency decomposition (ms).
+
+        ``retrieval_latency_scale`` is the retrieval backend's static cost
+        multiplier on the retrieve stage (``BackendCost.latency_scale``):
+        1.0 is exact dense MIPS — the calibration anchor and an exact
+        multiplicative identity, so dense-backend latencies are
+        bit-identical to the pre-backend model — while e.g. BM25's 0.25
+        makes a lexical bundle's modeled retrieve time reflect that it
+        scores postings, not the full embedding matrix.
+        """
         c = self.config
         stages = {
             "embed": (c.embed_base_ms + c.embed_per_token_ms * embed_tokens) if embed_tokens else 0.0,
-            "retrieve": (c.retrieve_base_ms + c.retrieve_per_k_ms * retrieval_k) if retrieval_k else 0.0,
+            "retrieve": (c.retrieve_base_ms + c.retrieve_per_k_ms * retrieval_k)
+            * retrieval_latency_scale
+            if retrieval_k
+            else 0.0,
             "prefill": c.prefill_per_token_ms * prompt_tokens,
             "decode": c.decode_per_token_ms * completion_tokens,
             "overhead": c.api_overhead_ms,

@@ -6,7 +6,7 @@ carries everything the next stage needs, so a stage never reaches back into
 the engine for per-query state:
 
     route(queries)            -> RoutedBatch      (qids, priors, speculation)
-    retrieve(RoutedBatch)     -> RetrievedBatch   (grouped MIPS searches)
+    retrieve(RoutedBatch)     -> RetrievedBatch   (searches grouped by (backend, k))
     assemble(RetrievedBatch)  -> AdmittedBatch    (guardrails + prompt build)
     decode(AdmittedBatch)     -> DecodedBatch     (generation, billing, latency)
     finalize(DecodedBatch)    -> list[EngineResponse]  (replay, ledger, telemetry)
@@ -88,8 +88,8 @@ class RoutedBatch:
     choices: np.ndarray  # (n,) int32 — speculative routed bundle per query
     utilities: np.ndarray  # (n, B) — Eq. 1 utilities under route-time priors
     guarded: list[int]  # pre-execution guardrail outcome per query
-    retrieval_plan: dict[int, list[int]]  # top_k → query positions
-    query_vecs: dict[int, np.ndarray]  # position → (d,) embedded query
+    retrieval_plan: dict[tuple[str, int], list[int]]  # (backend, top_k) → positions
+    query_vecs: dict[int, np.ndarray]  # position → (d,) embedded query (vec backends only)
     refinement_on: bool
     t0: float  # perf_counter at route start (wallclock accounting)
 
@@ -101,11 +101,12 @@ class RoutedBatch:
 @dataclasses.dataclass
 class RetrievedBatch:
     """Output of :func:`retrieve`: per-position (scores, ids) rows from the
-    grouped fixed-shape MIPS searches."""
+    backend-grouped batched searches."""
 
     routed: RoutedBatch
     retrievals: dict[int, tuple[np.ndarray, np.ndarray]]  # position → (k,) rows
-    search_calls: int  # compiled search_batch invocations (one per k group)
+    search_calls: int  # search_batch invocations (one per (backend, k) group)
+    search_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -134,6 +135,7 @@ class DecodedBatch:
     executions: list[Execution]
     exec_cache: dict[tuple[int, int], Execution]  # (position, guarded idx)
     search_calls: int  # retrieve-stage calls; finalize adds replay searches
+    search_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def routed(self) -> RoutedBatch:
@@ -160,11 +162,12 @@ def execute_one(
     """
     guarded = engine.guardrails.pre_execution(int(routed_idx)).bundle_index
     bundle = engine.catalog[guarded]
-    plan: dict[int, list[int]] = {}
+    plan: dict[tuple[str, int], list[int]] = {}
     qvecs: dict[int, np.ndarray] = {}
     if not bundle.skip_retrieval:
-        qvecs[0] = np.asarray(engine.embedder.embed([query]), np.float32)[0]
-        plan[bundle.top_k] = [0]
+        if engine.backends[bundle.backend].requires_query_vecs:
+            qvecs[0] = np.asarray(engine.embedder.embed([query]), np.float32)[0]
+        plan[(bundle.backend, bundle.top_k)] = [0]
     routed = RoutedBatch(
         qid0=qid,
         queries=[query],
@@ -240,13 +243,15 @@ def route(
     )
 
     guarded = [engine.guardrails.pre_execution(int(c)).bundle_index for c in choices]
-    plan: dict[int, list[int]] = {}
+    plan: dict[tuple[str, int], list[int]] = {}
     for i in range(n):
         bundle = engine.catalog[guarded[i]]
         if not bundle.skip_retrieval:
-            plan.setdefault(bundle.top_k, []).append(i)
+            plan.setdefault((bundle.backend, bundle.top_k), []).append(i)
     query_vecs: dict[int, np.ndarray] = {}
-    for _k, idxs in plan.items():
+    for (bname, _k), idxs in plan.items():
+        if not engine.backends[bname].requires_query_vecs:
+            continue  # lexical backends never spend the embed call
         vecs = np.asarray(engine.embedder.embed([queries[i] for i in idxs]), np.float32)
         for r, i in enumerate(idxs):
             query_vecs[i] = vecs[r]
@@ -277,23 +282,38 @@ def route(
 # Stage 2: retrieve (pure)                                                     #
 # --------------------------------------------------------------------------- #
 def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
-    """Grouped MIPS: one compiled ``search_batch`` call per (bundle, k) group.
+    """Backend-grouped search: one batched ``search_batch`` call per
+    (backend, k) group — the dense groups hit the compiled MIPS closures,
+    lexical/approximate groups their own batched paths.
 
-    Pure — reads only the immutable index (and its idempotent compiled-
-    closure cache); safe to run on a worker thread concurrently with other
-    micro-batches' stages.
+    Pure — reads only the immutable backends (and their idempotent
+    compiled-closure caches); safe to run on a worker thread concurrently
+    with other micro-batches' stages.
     """
     retrievals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
     calls = 0
-    for k, idxs in routed.retrieval_plan.items():
-        qmat = jnp.asarray(np.stack([routed.query_vecs[i] for i in idxs]))
-        scores, ids = engine.index.search_batch(qmat, k)
+    calls_by: dict[str, int] = {}
+    for (bname, k), idxs in routed.retrieval_plan.items():
+        backend = engine.backends[bname]
+        qtexts = [routed.queries[i] for i in idxs]
+        qmat = (
+            jnp.asarray(np.stack([routed.query_vecs[i] for i in idxs]))
+            if backend.requires_query_vecs
+            else None
+        )
+        scores, ids = backend.search_batch(qtexts, qmat, k)
         calls += 1
+        calls_by[bname] = calls_by.get(bname, 0) + 1
         scores_np = np.asarray(scores, np.float32)
         ids_np = np.asarray(ids, np.int32)
         for r, i in enumerate(idxs):
             retrievals[i] = (scores_np[r], ids_np[r])
-    return RetrievedBatch(routed=routed, retrievals=retrievals, search_calls=calls)
+    return RetrievedBatch(
+        routed=routed,
+        retrievals=retrievals,
+        search_calls=calls,
+        search_calls_by_backend=calls_by,
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -313,8 +333,10 @@ def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
         bundle = engine.catalog[bundle_idx]
         passages: list[str] = []
         confidence = float("nan")
-        did_embed = not bundle.skip_retrieval
-        if did_embed:
+        # retrieval and embedding are now distinct spends: a lexical backend
+        # retrieves without ever embedding (billing reads `embedded`)
+        did_embed = i in routed.query_vecs
+        if not bundle.skip_retrieval:
             scores, ids = retrieved.retrievals[i]
             confidence = float(scores[0]) if scores.size else float("nan")
             post = engine.guardrails.post_retrieval(bundle_idx, confidence)
@@ -322,7 +344,8 @@ def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
                 bundle_idx = post.bundle_index
                 passages = []
             else:
-                passages = [p.text for p in engine.index.get_passages(ids)]
+                backend = engine.backends[bundle.backend]
+                passages = [p.text for p in backend.get_passages(ids)]
         final_bundle.append(bundle_idx)
         passages_all.append(passages)
         confidences.append(confidence)
@@ -358,12 +381,18 @@ def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
         )
         embedded_texts = [query] if admitted.embedded[i] else []
         bill = bill_query(admitted.prompts[i], answer, embedded_texts)
+        backend = engine.backends.get(bundle.backend)
         latency_ms = engine.latency_model.sample_ms(
             query_id=qid,
             embed_tokens=bill.embedding_tokens,
             retrieval_k=bundle.top_k,
             prompt_tokens=bill.prompt_tokens,
             completion_tokens=bill.completion_tokens,
+            retrieval_latency_scale=(
+                backend.cost.latency_scale
+                if backend is not None and not bundle.skip_retrieval
+                else 1.0
+            ),
         )
         quality = (
             lexical_overlap(answer, reference) if reference is not None else float("nan")
@@ -385,6 +414,7 @@ def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
         executions=executions,
         exec_cache=exec_cache,
         search_calls=admitted.retrieved.search_calls,
+        search_calls_by_backend=dict(admitted.retrieved.search_calls_by_backend),
     )
 
 
@@ -429,8 +459,11 @@ def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse
                 ex = decoded.exec_cache.get((i, guarded))
                 if ex is None:
                     ex = execute_one(engine, qid0 + i, queries[i], choice, refs[i])
-                    if not engine.catalog[guarded].skip_retrieval:
+                    guarded_bundle = engine.catalog[guarded]
+                    if not guarded_bundle.skip_retrieval:
                         decoded.search_calls += 1
+                        by = decoded.search_calls_by_backend
+                        by[guarded_bundle.backend] = by.get(guarded_bundle.backend, 0) + 1
                     decoded.exec_cache[(i, guarded)] = ex
                 executions[i] = ex
             sim.log(make_record(engine, qid0 + i, queries[i], executions[i], 0.0, 0.0))
@@ -506,6 +539,7 @@ class StagePipeline:
         # deterministic per-stage counters (the CI gate's burst-serial cell)
         self.stage_batches = 0
         self.retrieve_calls = 0
+        self.retrieve_calls_by_backend: dict[str, int] = {}
 
     def _middle(self, routed: RoutedBatch) -> DecodedBatch:
         return decode(self.engine, assemble(self.engine, retrieve(self.engine, routed)))
@@ -558,6 +592,10 @@ class StagePipeline:
         self._inflight.popleft()
         responses = finalize(self.engine, decoded)
         self.retrieve_calls += decoded.search_calls
+        for bname, n in decoded.search_calls_by_backend.items():
+            self.retrieve_calls_by_backend[bname] = (
+                self.retrieve_calls_by_backend.get(bname, 0) + n
+            )
         return tag, responses
 
     def wait_head(self, timeout: float) -> None:

@@ -100,6 +100,9 @@ class StreamResult:
     retrieval_workers: int
     stage_batches: int  # micro-batches routed through the pipeline
     retrieve_calls: int  # compiled search_batch calls (incl. replay)
+    # per-backend search_batch calls (incl. replay): {"dense": 15, ...} —
+    # deterministic on the serial cell, the CI gate's per-backend counter
+    retrieve_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def records(self) -> list:
@@ -142,6 +145,7 @@ class StreamResult:
             "decode_steps": len(self.step_history),
             "stage_batches": self.stage_batches,
             "retrieve_calls": self.retrieve_calls,
+            "backend_search_calls": dict(sorted(self.retrieve_calls_by_backend.items())),
         }
 
 
@@ -283,6 +287,7 @@ class StreamingEngine:
             retrieval_workers=pipeline.workers,
             stage_batches=pipeline.stage_batches,
             retrieve_calls=pipeline.retrieve_calls,
+            retrieve_calls_by_backend=dict(pipeline.retrieve_calls_by_backend),
         )
 
     # ------------------------------------------------------------------ #

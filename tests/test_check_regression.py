@@ -29,7 +29,7 @@ def _serving(speedup=3.6, decode_steps=350):
 
 
 def _streaming(completed=28, rejected=0, decode_steps=358, stage_batches=2,
-               retrieve_calls=5):
+               retrieve_calls=5, dense_calls=5):
     return {
         "benchmark": "streaming_paper28",
         "streaming_qps": 30.0,  # telemetry, ungated
@@ -40,6 +40,7 @@ def _streaming(completed=28, rejected=0, decode_steps=358, stage_batches=2,
             "decode_steps": decode_steps,
             "stage_batches": stage_batches,
             "retrieve_calls": retrieve_calls,
+            "backend_search_calls": {"dense": dense_calls},
         },
     }
 
@@ -120,6 +121,19 @@ def test_stage_counters_have_zero_band():
     # fewer searches (better grouping) passes
     assert compare(_streaming(), _streaming(retrieve_calls=4), STREAMING_METRICS,
                    threshold=0.2) == []
+
+
+def test_backend_search_counter_is_exact_both_directions():
+    """gate.backend_search_calls.dense is an *exact* metric: the gate cell
+    serves the dense-only paper catalog, so any change fails — including a
+    drop, which under a one-sided band would wave through searches
+    migrating to a different backend (total retrieve_calls unchanged)."""
+    for moved in (6, 4):
+        fails = compare(_streaming(), _streaming(dense_calls=moved),
+                        STREAMING_METRICS, threshold=0.2)
+        assert len(fails) == 1 and "gate.backend_search_calls.dense" in fails[0]
+        assert "exact" in fails[0]
+    assert compare(_streaming(), _streaming(), STREAMING_METRICS, threshold=0.2) == []
 
 
 def test_zero_rejected_baseline_fails_on_any_rejection():
