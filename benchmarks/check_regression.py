@@ -19,6 +19,10 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     stops being fast, not when the runner is busy.
   - ``closed_loop.decode_steps`` — deterministic step count for draining
     the paper workload through the scheduler (lower is better).
+  - ``cache.hits`` / ``cache.misses`` — the cached-backend cell's
+    counters over two deterministic epochs (*exact*, band 0: hit/miss
+    totals are bit-stable, so any drift is a structural change to cache
+    keying, eviction, or upstream routing — never noise).
 * ``BENCH_streaming.json`` (``gate`` section = the single-threaded
   burst-serial cell, whose counters are bit-stable run-to-run)
   - ``gate.completed`` — every request must still drain.
@@ -79,6 +83,23 @@ GATED_METRICS: dict[str, list[Metric]] = {
             "closed_loop.decode_steps",
             "closed-loop decode steps (deterministic)",
             higher_is_better=False,
+        ),
+        # band 0 (exact): the cache cell runs two deterministic
+        # single-threaded epochs, so its hit/miss counters are bit-stable.
+        # Fewer hits means the cache keying or LRU discipline regressed;
+        # *more* hits means routing/embedding upstream changed what gets
+        # searched — both directions are structural changes the gate must
+        # surface, so the metrics are exact rather than one-sided.
+        Metric(
+            "cache.hits",
+            "cached-backend hits over 2 deterministic epochs",
+            exact=True,
+        ),
+        Metric(
+            "cache.misses",
+            "cached-backend misses over 2 deterministic epochs",
+            higher_is_better=False,
+            exact=True,
         ),
     ],
     "BENCH_streaming.json": [

@@ -382,6 +382,104 @@ def bench_catalog_comparison(artifact_path: str | None = None) -> list[tuple[str
     return out
 
 
+def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
+    """Cached + sharded retrieval cells for ``BENCH_serving.json``.
+
+    **Cache cell (gated, band 0).** The paper engine with its dense backend
+    wrapped in a 32-entry ``CachedBackend`` serves the 28-query benchmark
+    for two epochs. Routing, embedding, and eviction are all deterministic
+    single-threaded, so the cumulative hit/miss counters are bit-stable
+    run-to-run — committed under ``cache`` and gated as *exact* metrics in
+    ``benchmarks/check_regression.py`` (any drift means the cache keying,
+    the LRU discipline, or upstream routing changed). ``records_identical``
+    double-checks the cache never changed an answer.
+
+    **Sharding cell (ungated telemetry).** The same workload on a 1-shard vs
+    4-shard dense backend: wall-clock qps per arm plus ``records_identical``
+    (the bit-exactness contract). Wall time is host-dependent — telemetry
+    only, never a pass/fail bar; on this tiny corpus sharding mostly *costs*
+    (4 small searches + merge vs 1), the cell exists to track the overhead
+    and pin the exactness as corpora grow.
+    """
+    import json
+    import os
+
+    from repro.core.policies import make_policy
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+    from repro.retrieval import CachedBackend, ShardedBackend
+    from repro.serving.engine import build_paper_engine
+
+    queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
+    n = len(queries)
+    epochs = 2
+
+    ref = build_paper_engine(make_policy("router_default"))
+    for _ in range(epochs):
+        ref.answer_batch(queries, refs)
+    ref_csv = ref.telemetry.to_csv()
+
+    # -- cache cell (deterministic counters; gated) -------------------------
+    cache_eng = build_paper_engine(make_policy("router_default"))
+    cached = CachedBackend(cache_eng.backends["dense"], capacity=32)
+    cache_eng.backends["dense"] = cached
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        cache_eng.answer_batch(queries, refs)
+    cache_wall = time.perf_counter() - t0
+    stats = cached.stats()
+    cache_cell = {
+        "capacity": cached.capacity,
+        "epochs": epochs,
+        "hits": stats.hits,
+        "misses": stats.misses,
+        "evictions": stats.evictions,
+        "records_identical": cache_eng.telemetry.to_csv() == ref_csv,
+    }
+
+    # -- sharding cell (wall-clock telemetry + exactness) --------------------
+    shard_cells = {}
+    for n_shards in (1, 4):
+        eng = build_paper_engine(make_policy("router_default"))
+        if n_shards > 1:
+            eng.backends["dense"] = ShardedBackend.from_dense(
+                eng.index, n_shards=n_shards
+            )
+        eng.answer_batch(queries, refs)  # warm: compiles per shard shape
+        t0 = time.perf_counter()
+        eng.answer_batch(queries, refs)
+        wall = time.perf_counter() - t0
+        shard_cells[str(n_shards)] = {
+            "qps": n / wall if wall else None,
+            "records_identical": eng.telemetry.to_csv() == ref_csv,
+        }
+
+    if artifact_path and os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            artifact = json.load(f)
+        artifact["cache"] = cache_cell
+        artifact["sharding"] = shard_cells
+        with open(artifact_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+
+    hit_rate = stats.hits / max(stats.hits + stats.misses, 1)
+    qps1, qps4 = shard_cells["1"]["qps"], shard_cells["4"]["qps"]
+    return [
+        (
+            "rag_cached_2epochs",
+            cache_wall / (n * epochs) * 1e6,
+            f"{stats.hits}h/{stats.misses}m/{stats.evictions}e "
+            f"({hit_rate:.0%} hit rate, parity={cache_cell['records_identical']})",
+        ),
+        (
+            "rag_sharded_4",
+            1e6 / qps4 if qps4 else 0.0,  # degenerate-timer cells report, not crash
+            f"{qps4 or float('nan'):.0f} q/s vs {qps1 or float('nan'):.0f} "
+            f"unsharded (parity={shard_cells['4']['records_identical']})",
+        ),
+    ]
+
+
 def main() -> None:
     """Standalone entry: ``python -m benchmarks.micro [--smoke] [--out DIR]``.
 
@@ -407,11 +505,13 @@ def main() -> None:
         [bench_routing,
          lambda: bench_engine_batched(serving_artifact, iters=3),
          lambda: bench_catalog_comparison(serving_artifact),
+         lambda: bench_cache_sharding(serving_artifact),
          lambda: bench_streaming(streaming_artifact)]
         if args.smoke
         else [bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine,
               lambda: bench_engine_batched(serving_artifact),
               lambda: bench_catalog_comparison(serving_artifact),
+              lambda: bench_cache_sharding(serving_artifact),
               lambda: bench_streaming(streaming_artifact)]
     )
     for section in sections:

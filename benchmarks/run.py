@@ -29,6 +29,8 @@ def main() -> None:
         import os
 
         from benchmarks.micro import (
+            bench_cache_sharding,
+            bench_catalog_comparison,
             bench_engine,
             bench_engine_batched,
             bench_kernel_oracles,
@@ -45,6 +47,8 @@ def main() -> None:
             bench_kernel_oracles,
             bench_engine,
             lambda: bench_engine_batched(serving_artifact),
+            lambda: bench_catalog_comparison(serving_artifact),
+            lambda: bench_cache_sharding(serving_artifact),
             lambda: bench_streaming(streaming_artifact),
         )
         for section in sections:

@@ -1,112 +1,76 @@
-"""End-to-end serving driver: CA-RAG routing + continuous-batching scheduler
-+ a REAL (tiny) transformer decoding answers token-by-token.
+"""End-to-end streaming demo: CA-RAG routing + continuous batching + a REAL
+(tiny) transformer decoding answers token-by-token on the scheduler slots.
 
-This is the paper-kind end-to-end example (serving): batched requests are
-routed to bundles, retrieval runs per bundle depth, prompts enter the
-continuous-batching scheduler, and a models/transformer backbone decodes
-with its KV cache until every request completes.
+The modern serving surface in ~40 lines: ``build_paper_engine`` wires the
+corpus, index, backends, and telemetry; ``serve_stream`` admits a Poisson
+(or burst) arrival queue, pipelines route/retrieve/assemble/decode through
+the N-deep ``StagePipeline``, and drains a ``TransformerSlotDecoder`` — the
+same path ``python -m repro.launch.serve --stream`` runs (see README.md and
+docs/serving.md).
 
     PYTHONPATH=src python examples/serve_rag.py
+    PYTHONPATH=src python examples/serve_rag.py --n-queries 28 --rate-qps 50
+    PYTHONPATH=src python examples/serve_rag.py --shards 2 --cache-size 64
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import argparse
+import json
+import math
 
 from repro.core.policies import make_policy
-from repro.data.benchmark import BENCHMARK_QUERIES, corpus_document
-from repro.models.kvcache import KVCache
-from repro.models.transformer import TransformerConfig, decode_step, init_params, prefill
-from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages
-from repro.retrieval.tokenizer import count_tokens
-from repro.serving.generator import build_prompt
-from repro.serving.scheduler import ContinuousBatchScheduler, Request, SchedulerConfig
-
-VOCAB = 512
-SLOTS = 4
-MAX_LEN = 96
-
-
-def hash_tokenize(text: str, n: int = 48) -> np.ndarray:
-    """Toy deterministic tokenizer for the demo backbone."""
-    words = text.lower().split()[:n]
-    ids = [hash(w) % (VOCAB - 2) + 2 for w in words]
-    return np.asarray(ids or [2], np.int32)
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import scale_backends
+from repro.serving.engine import build_paper_engine
+from repro.serving.generator import TransformerSlotDecoder
+from repro.serving.streaming import StreamConfig, serve_stream
 
 
 def main():
-    # --- models ---------------------------------------------------------
-    cfg = TransformerConfig(
-        name="demo-gen", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
-        d_ff=128, vocab=VOCAB, compute_dtype=jnp.float32, param_dtype=jnp.float32,
-        max_seq_len=MAX_LEN,
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-queries", type=int, default=8,
+                    help="how many paper-benchmark queries to stream")
+    ap.add_argument("--rate-qps", type=float, default=0.0,
+                    help="offered load; <=0 means every query arrives at t=0")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="micro-batches in flight through the stage pipeline")
+    ap.add_argument("--retrieval-workers", type=int, default=1,
+                    help="threads draining the pure middle stages")
+    ap.add_argument("--cache-size", type=int, default=0,
+                    help="exact query-result LRU per backend (0 = off)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the dense corpus across S shards")
+    args = ap.parse_args()
+
+    queries = list(BENCHMARK_QUERIES)[: args.n_queries]
+    refs = list(REFERENCE_ANSWERS)[: args.n_queries]
+
+    engine = build_paper_engine(make_policy("router_default"))
+    engine.backends = scale_backends(
+        engine.backends, engine.index,
+        cache_size=args.cache_size, shards=args.shards,
     )
-    params = init_params(jax.random.PRNGKey(0), cfg)
 
-    # --- retrieval + routing --------------------------------------------
-    router = make_policy("router_default")
-    embedder = HashedNGramEmbedder(dim=128)
-    passages = line_passages(corpus_document())
-    index, _ = DenseIndex.build(passages, embedder)
+    decoder = TransformerSlotDecoder.tiny(n_slots=8)  # match scheduler slots
+    decoder.warmup()  # jit compile must not bill to the first batch's TTFT
 
-    # --- route + retrieve + enqueue --------------------------------------
-    sched = ContinuousBatchScheduler(SchedulerConfig(max_batch_slots=SLOTS, n_pages=256, page_size=8))
-    prompts: dict[int, np.ndarray] = {}
-    for i, q in enumerate(BENCHMARK_QUERIES[:8]):
-        decision = router.route(q)[0]
-        ctx = []
-        if not decision.bundle.skip_retrieval:
-            res = index.search(embedder.embed([q])[0], decision.bundle.top_k)
-            ctx = [p.text for p in index.get_passages(res.passage_ids)]
-        prompt = build_prompt(q, ctx)
-        prompts[i] = hash_tokenize(prompt)
-        sched.submit(
-            Request(
-                request_id=i, query=q, bundle_name=decision.bundle.name,
-                prompt_tokens=count_tokens(prompt), max_new_tokens=12,
-            )
-        )
-        print(f"req {i}: {decision.bundle.name:11s} ctx={len(ctx):2d} prompt_tok={count_tokens(prompt):3d}  {q[:46]}")
+    result = serve_stream(
+        engine,
+        queries,
+        refs,
+        rate_qps=args.rate_qps if args.rate_qps > 0 else math.inf,
+        decode_fn=decoder,
+        config=StreamConfig(
+            pipeline_depth=args.pipeline_depth,
+            retrieval_workers=args.retrieval_workers,
+        ),
+    )
 
-    # --- continuous batching decode loop ----------------------------------
-    slot_state = {
-        "cache": KVCache.zeros(cfg.n_layers, SLOTS, MAX_LEN, cfg.n_kv_heads, cfg.head_dim, dtype=jnp.float32),
-        "tokens": jnp.zeros((SLOTS,), jnp.int32),
-        "assigned": {},  # slot → request_id
-    }
-
-    def decode_fn(active):
-        # map requests to slots, prefill on admission
-        for slot in range(SLOTS):
-            rid = slot_state["assigned"].get(slot)
-            live_ids = {r.request_id for r in active}
-            if rid is not None and rid not in live_ids:
-                del slot_state["assigned"][slot]
-        for r in active:
-            if r.request_id not in slot_state["assigned"].values():
-                free = next(s for s in range(SLOTS) if s not in slot_state["assigned"])
-                slot_state["assigned"][free] = r.request_id
-                toks = jnp.asarray(prompts[r.request_id])[None, :]
-                logits, cache1 = prefill(params, cfg, toks, max_len=MAX_LEN)
-                c = slot_state["cache"]
-                c = KVCache(
-                    k=c.k.at[:, free].set(cache1.k[:, 0]),
-                    v=c.v.at[:, free].set(cache1.v[:, 0]),
-                    lengths=c.lengths.at[free].set(cache1.lengths[0]),
-                )
-                slot_state["cache"] = c
-                slot_state["tokens"] = slot_state["tokens"].at[free].set(
-                    jnp.argmax(logits[0]).astype(jnp.int32)
-                )
-        logits, slot_state["cache"] = decode_step(
-            params, cfg, slot_state["cache"], slot_state["tokens"]
-        )
-        slot_state["tokens"] = jnp.argmax(logits, -1).astype(jnp.int32)
-        return [False] * len(active)
-
-    history = sched.run_until_drained(decode_fn)
-    print(f"\ncompleted {len(sched.completed)} requests in {len(history)} scheduler steps")
-    print("scheduler summary:", sched.summary())
+    for resp in result.responses:
+        r = resp.record
+        print(f"{r.strategy:12s} conf={r.retrieval_confidence:6.3f} "
+              f"tokens={r.total_billed_tokens:4d}  {r.query[:48]}")
+    print("\nstream summary:")
+    print(json.dumps(result.summary(), indent=2))
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ the utility function itself, keeping the routing math auditable.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
 
 from repro.core.bundles import BundleCatalog
 
@@ -28,6 +29,14 @@ class GuardrailConfig:
     max_context_tokens: int | None = None
     max_cost_tokens: int | None = None
     fallback_bundle: str = "direct_llm"
+    # Per-backend low-confidence thresholds, overriding the global value for
+    # bundles routed through that backend. Confidence *units differ per
+    # backend* (cosine for dense/IVF/hybrid, raw unbounded BM25 for bm25 —
+    # docs/retrieval.md#caveats), so one global threshold cannot be
+    # meaningful across a mixed-backend catalog: set e.g.
+    # ``{"bm25": 2.5}`` to guard lexical bundles on their own scale. An
+    # entry of 0.0 disables the guardrail for that backend.
+    min_retrieval_confidence_by_backend: Mapping[str, float] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,16 +69,31 @@ class Guardrails:
                     return GuardrailOutcome(best, True, "cost_ceiling")
         return GuardrailOutcome(bundle_index, False, None)
 
+    def confidence_threshold(self, backend: str) -> float:
+        """The low-confidence threshold for bundles on ``backend`` — the
+        per-backend override when configured, the global value otherwise."""
+        by_backend = self.config.min_retrieval_confidence_by_backend
+        if by_backend is not None and backend in by_backend:
+            return float(by_backend[backend])
+        return self.config.min_retrieval_confidence
+
     def post_retrieval(
         self, bundle_index: int, retrieval_confidence: float
     ) -> GuardrailOutcome:
-        """Low-confidence fallback after retrieval, before generation."""
+        """Low-confidence fallback after retrieval, before generation.
+
+        The threshold is resolved per backend (see
+        :meth:`confidence_threshold`): retrieval confidence is the top hit's
+        score, whose scale is backend-specific, so a mixed-backend catalog
+        guards each backend on its own scale.
+        """
         cfg = self.config
         b = self.catalog[bundle_index]
+        threshold = self.confidence_threshold(b.backend)
         if (
             not b.skip_retrieval
-            and cfg.min_retrieval_confidence > 0.0
-            and retrieval_confidence < cfg.min_retrieval_confidence
+            and threshold > 0.0
+            and retrieval_confidence < threshold
         ):
             return GuardrailOutcome(self._fallback_idx, True, "low_retrieval_confidence")
         return GuardrailOutcome(bundle_index, False, None)

@@ -118,6 +118,7 @@ class Router:
         *,
         latency_override: jnp.ndarray | None = None,
         cost_override: jnp.ndarray | None = None,
+        recall_override: jnp.ndarray | None = None,
     ) -> jnp.ndarray:
         """Eq. 1 utilities ``(N, B)`` from a complexity vector ``(N,)``."""
         return selection_utilities(
@@ -131,6 +132,7 @@ class Router:
             global_decay=self.config.global_decay,
             latency_override=latency_override,
             cost_override=cost_override,
+            recall_override=recall_override,
         )
 
     def route_batch_arrays(
@@ -140,6 +142,7 @@ class Router:
         key: jax.Array | None = None,
         latency_override: jnp.ndarray | None = None,
         cost_override: jnp.ndarray | None = None,
+        recall_override: jnp.ndarray | None = None,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Route a complexity batch → (bundle_idx ``(N,)`` i32, U ``(N,B)``).
 
@@ -154,6 +157,7 @@ class Router:
             complexity,
             latency_override=latency_override,
             cost_override=cost_override,
+            recall_override=recall_override,
         )
         choice = jnp.argmax(utilities, axis=-1).astype(jnp.int32)
         eps = self.config.epsilon
@@ -173,6 +177,7 @@ class Router:
         *,
         latency_override: np.ndarray | None = None,
         cost_override: np.ndarray | None = None,
+        recall_override: np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Host mirror of :meth:`route_batch_arrays` (numpy, no device
         dispatch) — bit-identical utilities and choices; see
@@ -186,7 +191,10 @@ class Router:
         if self.config.epsilon > 0.0:
             raise ValueError("route_batch_np is greedy-only (epsilon > 0 unsupported)")
         utilities = self._utilities_np(
-            complexity, latency_override=latency_override, cost_override=cost_override
+            complexity,
+            latency_override=latency_override,
+            cost_override=cost_override,
+            recall_override=recall_override,
         )
         return utilities.argmax(axis=-1).astype(np.int32), utilities
 
@@ -196,6 +204,7 @@ class Router:
         *,
         latency_override: np.ndarray | None = None,
         cost_override: np.ndarray | None = None,
+        recall_override: np.ndarray | None = None,
     ) -> np.ndarray:
         return selection_utilities_np(
             self._arrays_np,
@@ -208,6 +217,7 @@ class Router:
             global_decay=self.config.global_decay,
             latency_override=latency_override,
             cost_override=cost_override,
+            recall_override=recall_override,
         )
 
     # ------------------------------------------------------------------ #
@@ -220,6 +230,7 @@ class Router:
         key: jax.Array | None = None,
         latency_override: np.ndarray | None = None,
         cost_override: np.ndarray | None = None,
+        recall_override: np.ndarray | None = None,
     ) -> list[RoutingDecision]:
         """Route query strings; returns full audit records."""
         single = isinstance(queries, str)
@@ -230,6 +241,7 @@ class Router:
             key=key,
             latency_override=latency_override,
             cost_override=cost_override,
+            recall_override=recall_override,
         )
         idx_np = np.asarray(idx)
         util_np = np.asarray(utilities)
@@ -278,18 +290,28 @@ class FixedRouter(Router):
         super().__init__(catalog, config)
         self.fixed_index = catalog.index_of(bundle_name)
 
-    def route_batch_arrays(self, complexity, *, key=None, latency_override=None, cost_override=None):
+    def route_batch_arrays(
+        self, complexity, *, key=None, latency_override=None, cost_override=None,
+        recall_override=None,
+    ):
         utilities = self.utilities_from_complexity(
             complexity,
             latency_override=latency_override,
             cost_override=cost_override,
+            recall_override=recall_override,
         )
         n = utilities.shape[0]
         return jnp.full((n,), self.fixed_index, dtype=jnp.int32), utilities
 
-    def route_batch_np(self, complexity, *, latency_override=None, cost_override=None):
+    def route_batch_np(
+        self, complexity, *, latency_override=None, cost_override=None,
+        recall_override=None,
+    ):
         utilities = self._utilities_np(
-            complexity, latency_override=latency_override, cost_override=cost_override
+            complexity,
+            latency_override=latency_override,
+            cost_override=cost_override,
+            recall_override=recall_override,
         )
         n = utilities.shape[0]
         return np.full((n,), self.fixed_index, dtype=np.int32), utilities

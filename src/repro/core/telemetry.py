@@ -99,12 +99,41 @@ class BundleStats:
         self.sum_quality += quality
 
 
+@dataclasses.dataclass
+class RecallStats:
+    """Running per-backend ``recall_vs_exact`` observations.
+
+    One observation = one measured recall@k of a backend against exact
+    retrieval over some query sample (``RAGEngine.calibrate_backend_recall``
+    logs one per query). The refined recall prior shrinks toward the static
+    curve until ``count`` clears the store's ``recall_min_samples``.
+    """
+
+    count: int = 0
+    total: float = 0.0
+
+    def update(self, recall: float) -> None:
+        self.count += 1
+        self.total += recall
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+
 class TelemetryStore:
     """Accumulates QueryRecords; provides refined priors + CSV/JSON export.
 
     ``min_volume`` gates refinement ("after sufficient query volume"): until a
     bundle has that many observations, its static prior is used. ``blend``
     mixes prior and EMA so refinement is gradual and auditable.
+
+    Beyond the latency/cost EMAs, the store also accumulates per-backend
+    **recall calibration** observations (:meth:`observe_recall`): measured
+    ``recall_vs_exact`` samples that refine each bundle's static backend
+    recall prior (:meth:`refined_recall_priors`) once a backend clears
+    ``recall_min_samples`` — the live counterpart of the static
+    ``BackendCost.recall_prior`` curve (docs/retrieval.md#calibrating-recall-priors-from-telemetry).
     """
 
     def __init__(
@@ -118,6 +147,7 @@ class TelemetryStore:
         refine_cost: bool = True,
         structural_latency: np.ndarray | None = None,
         structural_cost: np.ndarray | None = None,
+        recall_min_samples: int = 8,
     ):
         self.catalog = catalog
         self.ema_beta = ema_beta
@@ -130,8 +160,10 @@ class TelemetryStore:
         # bundles telemetry hasn't sampled yet, and as the blend anchor.
         self.structural_latency = structural_latency
         self.structural_cost = structural_cost
+        self.recall_min_samples = recall_min_samples
         self.records: list[QueryRecord] = []
         self.stats: dict[str, BundleStats] = {name: BundleStats() for name in catalog.names}
+        self.recall_obs: dict[str, RecallStats] = {}
 
     # -- ingestion ----------------------------------------------------------
     def log(self, record: QueryRecord) -> None:
@@ -170,8 +202,12 @@ class TelemetryStore:
             refine_cost=self.refine_cost,
             structural_latency=self.structural_latency,
             structural_cost=self.structural_cost,
+            recall_min_samples=self.recall_min_samples,
         )
         clone.stats = {name: dataclasses.replace(st) for name, st in self.stats.items()}
+        clone.recall_obs = {
+            name: dataclasses.replace(st) for name, st in self.recall_obs.items()
+        }
         return clone
 
     # -- refined priors -------------------------------------------------------
@@ -206,6 +242,62 @@ class TelemetryStore:
         if not self.refine_cost:
             return priors
         return self._refine(priors, attr="ema_cost_tokens", structural=self.structural_cost)
+
+    # -- recall calibration ---------------------------------------------------
+    def observe_recall(self, backend: str, recall: float) -> None:
+        """Log one measured ``recall_vs_exact`` observation for a backend.
+
+        Observations come from explicit calibration passes (e.g.
+        ``RAGEngine.calibrate_backend_recall`` comparing a backend's hits
+        against the exact dense backend's), never from the serving hot path,
+        so they are constant within any one micro-batch — which is why the
+        finalize replay needs no recall staleness handling.
+        """
+        if not (0.0 <= recall <= 1.0):
+            raise ValueError(f"recall must be in [0, 1], got {recall}")
+        self.recall_obs.setdefault(backend, RecallStats()).update(float(recall))
+
+    def refined_recall_priors(self) -> np.ndarray | None:
+        """Per-bundle backend-recall priors refined from observations.
+
+        Returns ``None`` when **no** backend has reached
+        ``recall_min_samples`` — the common case, and the fast path that
+        keeps unobserved catalogs (the paper's dense-only regime in
+        particular) byte-identical: the routing layer then uses the static
+        ``backend_recall`` column exactly as before.
+
+        Otherwise returns a ``(B,)`` float64 vector where each bundle's
+        entry is:
+
+        * the **static** curve value (``bundle.backend_cost.recall_prior``)
+          when its backend is below the min-sample threshold — the
+          shrinkage guard: sparse, noisy recall samples must not move
+          routing;
+        * otherwise the shrinkage blend
+          ``w·mean_observed + (1−w)·static`` with
+          ``w = count / (count + recall_min_samples)`` — asymptotically
+          trusting the measurements, never snapping to them.
+
+        Dense bundles keep their exact static 1.0 unless someone explicitly
+        observes "dense" (exact retrieval has nothing to calibrate), so the
+        quality-prior multiply stays the exact identity the paper-catalog
+        parity depends on.
+        """
+        n0 = self.recall_min_samples
+        if not any(st.count >= n0 for st in self.recall_obs.values()):
+            return None
+        out = []
+        for name in self.catalog.names:
+            bundle = self.catalog[name]
+            static = float(bundle.backend_cost.recall_prior)
+            obs = self.recall_obs.get(bundle.backend)
+            if obs is None or obs.count < n0:
+                out.append(static)
+                continue
+            w = obs.count / (obs.count + n0)
+            refined = w * obs.mean + (1.0 - w) * static
+            out.append(min(max(refined, 1e-6), 1.0))
+        return np.asarray(out, np.float64)
 
     def _refine(self, priors: np.ndarray, attr: str, structural: np.ndarray | None) -> np.ndarray:
         """Refinement in *observed* units (paper §IV.A step 2: "priors and

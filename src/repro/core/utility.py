@@ -128,6 +128,7 @@ def selection_utilities(
     global_decay: float = DEFAULT_GLOBAL_DECAY,
     latency_override: jnp.ndarray | None = None,
     cost_override: jnp.ndarray | None = None,
+    recall_override: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Eq. 1 for a batch of queries: returns utilities ``(N, B)``.
 
@@ -148,6 +149,13 @@ def selection_utilities(
     exact multiplicative identity, so the paper catalog's utilities are
     bit-identical. (Backend *latency* priors arrive already folded into
     ``latency_prior_ms`` / the telemetry store's refined vectors.)
+
+    ``recall_override`` replaces the static ``backend_recall`` column with a
+    telemetry-calibrated ``(B,)`` vector
+    (``TelemetryStore.refined_recall_priors``) — the closed loop that lets
+    measured ``recall_vs_exact`` observations reprice approximate backends.
+    Same multiply, same op order, so a ``None`` override (or an override
+    equal to the static curve) is bit-identical to the static path.
     """
     lat = (
         jnp.asarray(latency_override, jnp.float32)
@@ -160,7 +168,10 @@ def selection_utilities(
         else catalog_arrays["cost_prior_tokens"]
     )
     quality_prior = catalog_arrays["quality_prior"]
-    recall = catalog_arrays.get("backend_recall")
+    recall = (
+        recall_override if recall_override is not None
+        else catalog_arrays.get("backend_recall")
+    )
     if recall is not None:
         quality_prior = quality_prior * jnp.asarray(recall, jnp.float32)
     qhat = modulated_quality(
@@ -195,6 +206,7 @@ def selection_utilities_np(
     global_decay: float = DEFAULT_GLOBAL_DECAY,
     latency_override: np.ndarray | None = None,
     cost_override: np.ndarray | None = None,
+    recall_override: np.ndarray | None = None,
 ) -> np.ndarray:
     """Host (numpy) mirror of :func:`selection_utilities`.
 
@@ -210,7 +222,10 @@ def selection_utilities_np(
     f32 = np.float32
     c = np.asarray(complexity, f32)[..., None]  # (N, 1)
     quality_prior = np.asarray(catalog_arrays["quality_prior"], f32)
-    recall = catalog_arrays.get("backend_recall")
+    recall = (
+        recall_override if recall_override is not None
+        else catalog_arrays.get("backend_recall")
+    )
     if recall is not None:
         # same op, same order as the jnp path (backend recall discount)
         quality_prior = quality_prior * np.asarray(recall, f32)

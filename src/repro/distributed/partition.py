@@ -94,6 +94,14 @@ class ShardingPolicy:
     def kv_lengths(self) -> P:
         return P(self.dp)
 
+    # -- retrieval corpus (N, d) --------------------------------------------
+    def corpus_rows(self) -> P:
+        """Retrieval corpus embeddings: rows over the data axes, dims
+        replicated — the layout both ``DenseIndex.sharded_search_fn`` and
+        the host-level ``retrieval/sharded.py`` backend partition by, so
+        one mesh serves model shards and corpus shards consistently."""
+        return P(self.dp, None)
+
 
 def zero_shard(spec: P, shape: tuple[int, ...], data_axes: tuple[str, ...], axis_sizes: dict[str, int]) -> P:
     """ZeRO-style moment sharding: add the data axes to the first unsharded

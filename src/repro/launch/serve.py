@@ -26,7 +26,25 @@ def main() -> None:
     ap.add_argument("--out", default="results/serve.csv")
     ap.add_argument("--epsilon", type=float, default=0.0)
     ap.add_argument("--min-confidence", type=float, default=0.0)
+    ap.add_argument(
+        "--min-confidence-backend", action="append", default=[], metavar="NAME=VAL",
+        help="per-backend low-confidence threshold override (repeatable), "
+        "e.g. --min-confidence-backend bm25=2.5 — confidence units differ "
+        "per backend (docs/retrieval.md), so lexical bundles need their own "
+        "scale; 0 disables the guardrail for that backend",
+    )
     ap.add_argument("--max-cost-tokens", type=int, default=None)
+    ap.add_argument(
+        "--cache-size", type=int, default=0, metavar="N",
+        help="wrap every retrieval backend in an exact query-result LRU of N "
+        "entries (0 = no caching); repeated queries are served at memory "
+        "speed with bit-identical results",
+    )
+    ap.add_argument(
+        "--shards", type=int, default=1, metavar="S",
+        help="partition the dense corpus across S shards (fan-out + fused "
+        "top-k merge; bit-identical to unsharded). 1 = single index",
+    )
     ap.add_argument(
         "--stream", action="store_true",
         help="serve from a live Poisson arrival queue (retrieval/decode overlap) "
@@ -76,6 +94,32 @@ def main() -> None:
     backends = make_backends(
         index, passages, embedder, names=("dense", *catalog.backends_used())
     )
+    from repro.retrieval import scale_backends
+
+    backends = scale_backends(
+        backends, index, cache_size=args.cache_size, shards=args.shards
+    )
+
+    per_backend_conf: dict[str, float] = {}
+    for item in args.min_confidence_backend:
+        name, sep, val = item.partition("=")
+        try:
+            threshold = float(val)
+        except ValueError:
+            threshold = None
+        if not sep or not name or threshold is None:
+            raise SystemExit(
+                f"--min-confidence-backend expects NAME=VAL, got {item!r}"
+            )
+        if name not in backends:
+            # a typo here would silently fall back to the global threshold —
+            # exactly the guardrail hole the flag exists to close
+            raise SystemExit(
+                f"--min-confidence-backend: unknown backend {name!r} "
+                f"(this catalog serves {sorted(backends)})"
+            )
+        per_backend_conf[name] = threshold
+
     engine = RAGEngine(
         router,
         index,
@@ -86,6 +130,7 @@ def main() -> None:
             guardrails=GuardrailConfig(
                 min_retrieval_confidence=args.min_confidence,
                 max_cost_tokens=args.max_cost_tokens,
+                min_retrieval_confidence_by_backend=per_backend_conf or None,
             )
         ),
         index_embedding_tokens=index_tokens,
@@ -126,6 +171,10 @@ def main() -> None:
     if args.catalog != "paper":
         # (backend × depth) routing view: which retrieval method served what
         print(f"routed by backend: {catalog.routed_by_backend(telemetry.strategy_counts())}")
+    if args.cache_size > 0:
+        from repro.retrieval import cache_stats_view
+
+        print(f"backend cache: {cache_stats_view(engine.backends)}")
     print(f"wrote {len(telemetry.records)} records to {args.out}")
 
 

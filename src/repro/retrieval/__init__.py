@@ -14,11 +14,19 @@ from repro.retrieval.backend import (
     make_backends,
 )
 from repro.retrieval.bm25 import BM25Index, BM25Params
+from repro.retrieval.cache import (
+    CachedBackend,
+    CacheStats,
+    cache_stats_view,
+    scale_backends,
+    wrap_cached,
+)
 from repro.retrieval.chunking import Passage, corpus_passages, line_passages, sliding_window_passages
 from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, StackedEmbedder
 from repro.retrieval.hybrid import HybridRetriever, rrf_fuse, weighted_fuse
 from repro.retrieval.index import DenseIndex, SearchResult, l2_normalize
 from repro.retrieval.ivf import IVFIndex, kmeans
+from repro.retrieval.sharded import ShardedBackend, shard_bounds
 from repro.retrieval.tokenizer import count_tokens, lexical_overlap, terms, words
 from repro.retrieval.topk import blocked_topk, distributed_topk, merge_topk
 
@@ -26,6 +34,8 @@ __all__ = [
     "BM25Backend", "BackendCost", "DEFAULT_BACKEND_COSTS", "DenseBackend",
     "HybridBackend", "IVFBackend", "RetrievalBackend", "backend_cost",
     "make_backends",
+    "CachedBackend", "CacheStats", "cache_stats_view", "scale_backends", "wrap_cached",
+    "ShardedBackend", "shard_bounds",
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",
     "sliding_window_passages", "CachingEmbedder", "HashedNGramEmbedder", "StackedEmbedder",
     "HybridRetriever", "rrf_fuse", "weighted_fuse", "DenseIndex", "SearchResult",

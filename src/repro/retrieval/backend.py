@@ -75,6 +75,7 @@ class BackendCost:
             raise ValueError(f"recall_prior must be in (0, 1], got {self.recall_prior}")
 
     def flops_per_query(self, corpus_size: int) -> float:
+        """Total scoring FLOPs one query spends over a corpus of this size."""
         return self.flops_per_item * corpus_size
 
 
@@ -111,7 +112,8 @@ class RetrievalBackend(Protocol):
     requires_query_vecs: bool
 
     @property
-    def size(self) -> int:  # corpus passages indexed
+    def size(self) -> int:
+        """Corpus passages indexed."""
         ...
 
     def search_batch(
@@ -129,7 +131,9 @@ class RetrievalBackend(Protocol):
         handle any row width."""
         ...
 
-    def get_passages(self, ids: Sequence[int]) -> list[Passage]: ...
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Resolve returned passage ids to their text payloads."""
+        ...
 
 
 class DenseBackend:
@@ -153,14 +157,17 @@ class DenseBackend:
 
     @property
     def size(self) -> int:
+        """Corpus passages indexed."""
         return self.index.size
 
     def search_batch(self, queries, query_vecs, k):
+        """Exact MIPS over the full corpus (pure index delegation)."""
         return self.index.search_batch(
             query_vecs, k, scorer=self.scorer, interpret=self.interpret
         )
 
     def get_passages(self, ids) -> list[Passage]:
+        """Resolve passage ids through the wrapped index."""
         return self.index.get_passages(ids)
 
 
@@ -196,9 +203,11 @@ class IVFBackend:
 
     @property
     def size(self) -> int:
+        """Corpus passages indexed."""
         return int(self.ivf.embeddings.shape[0])
 
     def search_batch(self, queries, query_vecs, k):
+        """Probed approximate search over the ``n_probe`` nearest clusters."""
         # Rows may come back narrower than k when the probed candidate pool
         # is smaller (k' = min(k, n_probe × bucket_capacity)): with few
         # clusters and a small corpus an ivf bundle's top_k can exceed what
@@ -218,6 +227,7 @@ class IVFBackend:
         return scores, ids
 
     def get_passages(self, ids) -> list[Passage]:
+        """Resolve passage ids against the stored payloads."""
         if self.passages is None:
             raise ValueError("IVFBackend built without passage payloads")
         return [self.passages[int(i)] for i in ids]
@@ -242,12 +252,15 @@ class BM25Backend:
 
     @property
     def size(self) -> int:
+        """Corpus passages indexed."""
         return self.bm25.n_passages
 
     def search_batch(self, queries, query_vecs, k):
+        """Batched lexical scoring (query vectors are ignored)."""
         return self.bm25.search_batch(queries, k)
 
     def get_passages(self, ids) -> list[Passage]:
+        """Resolve passage ids against the stored payloads."""
         return [self.passages[int(i)] for i in ids]
 
 
@@ -270,12 +283,15 @@ class HybridBackend:
 
     @property
     def size(self) -> int:
+        """Corpus passages indexed."""
         return self.hybrid.dense.size
 
     def search_batch(self, queries, query_vecs, k):
+        """Fused dense + BM25 search (reuses the given query vectors)."""
         return self.hybrid.search_batch(queries, k, query_vecs=query_vecs)
 
     def get_passages(self, ids) -> list[Passage]:
+        """Resolve passage ids through the dense side's index."""
         return self.hybrid.dense.get_passages(ids)
 
 

@@ -71,10 +71,21 @@ def l2_normalize(x: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
 class DenseIndex:
     """Exact MIPS index over passage embeddings."""
 
-    def __init__(self, embeddings: jnp.ndarray, passages: Sequence[Passage] | None = None):
+    def __init__(
+        self,
+        embeddings: jnp.ndarray,
+        passages: Sequence[Passage] | None = None,
+        *,
+        assume_normalized: bool = False,
+    ):
         if embeddings.ndim != 2:
             raise ValueError(f"embeddings must be (n, d), got {embeddings.shape}")
-        self.embeddings = l2_normalize(jnp.asarray(embeddings, jnp.float32))
+        # assume_normalized: the rows are already unit-norm (e.g. a slice of
+        # another index's .embeddings — the ShardedBackend construction path).
+        # Skipping the re-normalization matters for bit-exactness: dividing a
+        # unit vector by its ~1.0 norm perturbs last-bit floats.
+        emb = jnp.asarray(embeddings, jnp.float32)
+        self.embeddings = emb if assume_normalized else l2_normalize(emb)
         self.passages = list(passages) if passages is not None else None
         if self.passages is not None and len(self.passages) != embeddings.shape[0]:
             raise ValueError("passages/embeddings length mismatch")

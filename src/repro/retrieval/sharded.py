@@ -1,0 +1,226 @@
+"""Sharded retrieval: corpora larger than one host's index, one config flag.
+
+The scaling seam the ROADMAP's heavy-traffic north star needs: RAGO
+(Jiang et al., 2025) shows retrieval sharding is — with caching — the
+dominant systems lever for RAG serving, and "Towards Understanding Systems
+Trade-offs in RAG" (2024) shows retrieval cost dominates exactly the
+heavy-bundle regime the router prices. :class:`ShardedBackend` partitions
+the corpus into S contiguous row ranges, fans ``search_batch`` out across
+per-shard inner backends (optionally on threads), globalizes the returned
+ids, and merges the per-shard top-k candidate lists with the repo's
+existing fused top-k primitive (:func:`repro.retrieval.topk.merge_topk`).
+
+Exactness — the property every test here pins:
+
+* Merging per-shard top-k lists of length k loses nothing for a global
+  top-k (any global top-k element is a local top-k element of its shard —
+  the same argument ``topk.distributed_topk`` rests on).
+* Per-shard dense scoring is **bit-identical** to unsharded scoring: a
+  ``(Q_BLOCK, d) @ (d, n_shard)`` matmul reduces over ``d`` exactly like
+  the full-corpus matmul (the reduction axis is unchanged; only output
+  columns are partitioned), and shard indexes are built over *slices of the
+  already-normalized* embeddings (``DenseIndex(assume_normalized=True)``)
+  so no value is ever re-normalized.
+* Tie-breaking matches too: within a shard ``top_k`` prefers the lowest
+  local id, and the left-to-right merge prefers the lowest shard, so equal
+  scores resolve to the lowest *global* id — exactly what the unsharded
+  path does.
+
+Together these make a sharded dense backend a drop-in for ``"dense"``:
+drained serving runs are bit-identical to the unsharded engine at every
+pipeline setting (tests/test_cache_sharded.py sweeps this).
+
+Device mapping: the same partitioning is ``shard_map``-ready. Corpus rows
+shard over the mesh's data axes (:meth:`repro.distributed.partition.
+ShardingPolicy.corpus_rows`), queries replicate, and the per-shard local
+top-k + all-gather merge is already implemented as
+``DenseIndex.sharded_search_fn`` — :func:`mesh_layout` returns the spec
+triple so a TPU deployment partitions the corpus exactly like this
+host-level backend does.
+"""
+
+from __future__ import annotations
+
+import bisect
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.backend import BackendCost, DenseBackend, RetrievalBackend
+from repro.retrieval.chunking import Passage
+from repro.retrieval.index import DenseIndex
+from repro.retrieval.topk import merge_topk
+
+
+def shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous near-equal ``[start, stop)`` row ranges for ``n`` rows.
+
+    ``numpy.array_split`` semantics: the first ``n % n_shards`` shards get
+    one extra row, so non-divisible corpus sizes are first-class (and
+    pinned by the property tests).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > n:
+        raise ValueError(f"n_shards={n_shards} > corpus rows n={n}")
+    base, extra = divmod(n, n_shards)
+    bounds, start = [], 0
+    for s in range(n_shards):
+        stop = start + base + (1 if s < extra else 0)
+        bounds.append((start, stop))
+        start = stop
+    return bounds
+
+
+def mesh_layout(policy=None):
+    """``shard_map`` spec triple ``(corpus, queries, out)`` for this
+    partitioning on a device mesh.
+
+    Corpus rows shard over the data axes, queries and merged outputs
+    replicate — the layout ``DenseIndex.sharded_search_fn`` executes. Takes
+    a :class:`~repro.distributed.partition.ShardingPolicy` (default
+    constructed) so multi-pod meshes reuse their axis-name bundle.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.partition import ShardingPolicy
+
+    policy = policy or ShardingPolicy()
+    return policy.corpus_rows(), P(None, None), P(None, None)
+
+
+class ShardedBackend:
+    """S-way partitioned retrieval behind the one-backend protocol.
+
+    ``shards`` are inner backends over contiguous corpus partitions and
+    ``offsets`` their global row offsets. ``workers > 1`` fans the per-shard
+    searches out on a thread pool (results are combined in shard order, so
+    threading never changes the answer).
+    """
+
+    def __init__(
+        self,
+        shards: Sequence[RetrievalBackend],
+        offsets: Sequence[int],
+        *,
+        name: str | None = None,
+        cost: BackendCost | None = None,
+        workers: int = 0,
+    ):
+        if not shards:
+            raise ValueError("need at least one shard")
+        if len(shards) != len(offsets):
+            raise ValueError(f"{len(shards)} shards but {len(offsets)} offsets")
+        self.shards = list(shards)
+        self.offsets = [int(o) for o in offsets]
+        if self.offsets != sorted(self.offsets):
+            raise ValueError("offsets must be ascending (contiguous partitions)")
+        self.name = name if name is not None else self.shards[0].name
+        self.cost = cost if cost is not None else self.shards[0].cost
+        self.requires_query_vecs = any(s.requires_query_vecs for s in self.shards)
+        self.workers = max(0, int(workers))
+        self._pool = ThreadPoolExecutor(max_workers=self.workers) if self.workers > 1 else None
+
+    @classmethod
+    def from_dense(
+        cls,
+        index: DenseIndex,
+        *,
+        n_shards: int,
+        workers: int = 0,
+        scorer: str = "blocked",
+        interpret: bool = False,
+    ) -> "ShardedBackend":
+        """Partition a built :class:`DenseIndex` into S per-shard dense
+        backends — the ``--shards`` CLI path.
+
+        Slices the index's *normalized* embeddings (and passage payloads)
+        into contiguous ranges; each shard is a ``DenseIndex(...,
+        assume_normalized=True)`` so per-row values are bit-identical to the
+        unsharded index's.
+        """
+        bounds = shard_bounds(index.size, n_shards)
+        shards: list[RetrievalBackend] = []
+        for start, stop in bounds:
+            sub_passages = index.passages[start:stop] if index.passages is not None else None
+            sub = DenseIndex(
+                index.embeddings[start:stop], sub_passages, assume_normalized=True
+            )
+            shards.append(DenseBackend(sub, scorer=scorer, interpret=interpret))
+        return cls(shards, [b[0] for b in bounds], workers=workers)
+
+    @property
+    def n_shards(self) -> int:
+        """Number of corpus partitions."""
+        return len(self.shards)
+
+    @property
+    def size(self) -> int:
+        """Total corpus passages indexed across every shard."""
+        return sum(s.size for s in self.shards)
+
+    # -- search ---------------------------------------------------------------
+    def _shard_search(
+        self,
+        shard_idx: int,
+        queries: Sequence[str],
+        query_vecs: jnp.ndarray | None,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One shard's ``search_batch`` with ids globalized by its offset."""
+        shard = self.shards[shard_idx]
+        scores, ids = shard.search_batch(queries, query_vecs, k)
+        scores = np.asarray(scores, np.float32)
+        ids = np.asarray(ids, np.int32) + np.int32(self.offsets[shard_idx])
+        return scores, ids
+
+    def search_batch(
+        self,
+        queries: Sequence[str],
+        query_vecs: jnp.ndarray | None,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Fan out to every shard, merge per-shard top-k into the global
+        top-k.
+
+        Each shard clamps ``k`` to its own row count, so ``k`` larger than a
+        shard (or than the whole corpus) degrades exactly like the unsharded
+        backend: the merged width is ``min(k, total corpus rows)`` for exact
+        shards. Merging uses :func:`~repro.retrieval.topk.merge_topk`
+        left-to-right — pure selection over already-computed scores, so no
+        arithmetic (and no float drift) happens at merge time.
+        """
+        if self._pool is not None:
+            futures = [
+                self._pool.submit(self._shard_search, s, queries, query_vecs, k)
+                for s in range(self.n_shards)
+            ]
+            parts = [f.result() for f in futures]
+        else:
+            parts = [
+                self._shard_search(s, queries, query_vecs, k)
+                for s in range(self.n_shards)
+            ]
+        vals = jnp.asarray(parts[0][0])
+        ids = jnp.asarray(parts[0][1])
+        for sv, si in parts[1:]:
+            width = min(k, vals.shape[-1] + sv.shape[-1])
+            vals, ids = merge_topk(vals, ids, jnp.asarray(sv), jnp.asarray(si), width)
+        return np.asarray(vals, np.float32), np.asarray(ids, np.int32)
+
+    # -- payloads -------------------------------------------------------------
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Resolve global passage ids to payloads via their owning shard."""
+        out: list[Passage] = []
+        for gid in ids:
+            gid = int(gid)
+            s = bisect.bisect_right(self.offsets, gid) - 1
+            out.extend(self.shards[s].get_passages([gid - self.offsets[s]]))
+        return out
+
+    def shutdown(self) -> None:
+        """Stop the fan-out thread pool (no-op when running serially)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

@@ -176,27 +176,109 @@ class RAGEngine:
                 retrieval_k=b.top_k,
                 prompt_tokens=prompt,
                 completion_tokens=completion,
-                retrieval_latency_scale=backend.cost.latency_scale if backend else 1.0,
+                # `is not None`, never truthiness: container-like backends
+                # (CachedBackend defines __len__) are falsy while empty
+                retrieval_latency_scale=(
+                    backend.cost.latency_scale if backend is not None else 1.0
+                ),
             )
             lat.append(sum(stages_ms.values()))
             cost.append(prompt + completion + emb)
         return np.asarray(lat, np.float64), np.asarray(cost, np.float64)
 
     def _priors(self, telemetry: TelemetryStore | None = None):
-        """Refined (latency, cost) prior vectors from a telemetry store —
-        the live store by default, or a replay clone (the finalize stage)."""
+        """Refined (latency, cost, recall) prior vectors from a telemetry
+        store — the live store by default, or a replay clone (the finalize
+        stage). The recall vector is ``None`` until some backend clears the
+        store's min-sample threshold (``refined_recall_priors``), which
+        keeps unobserved catalogs routing on the static curve bit-exactly.
+        """
         store = telemetry if telemetry is not None else self.telemetry
         if not self.config.use_telemetry_refinement:
-            return None, None
+            return None, None, None
+        recall = store.refined_recall_priors()
+        if recall is not None:
+            recall = recall.astype(np.float32)
         if self.config.warm_start_telemetry and not store.refinement_active:
             return (
                 np.asarray(store.structural_latency, np.float32),
                 np.asarray(store.structural_cost, np.float32),
+                recall,
             )
         return (
             store.refined_latency_priors().astype(np.float32),
             store.refined_cost_priors().astype(np.float32),
+            recall,
         )
+
+    def calibrate_backend_recall(
+        self,
+        queries: Sequence[str],
+        *,
+        backends: Sequence[str] | None = None,
+        k: int | None = None,
+    ) -> dict[str, float]:
+        """Measure each backend's recall@k against exact dense retrieval and
+        log the observations into the telemetry store.
+
+        This is the live counterpart of the static ``BackendCost.recall_prior``
+        curve: per query, the overlap between a backend's returned ids and
+        the exact dense backend's top-k becomes one
+        :meth:`~repro.core.telemetry.TelemetryStore.observe_recall` sample.
+        Once a backend clears ``recall_min_samples``, routing consumes the
+        shrunk refined prior instead of the static curve
+        (docs/retrieval.md#calibrating-recall-priors-from-telemetry).
+
+        ``backends`` defaults to every non-dense backend the catalog routes
+        through; ``k`` defaults per backend to the deepest ``top_k`` among
+        its bundles. Returns the mean measured recall per backend.
+        """
+        queries = list(queries)
+        if not queries:
+            raise ValueError("need at least one calibration query")
+        targets = list(
+            backends
+            if backends is not None
+            else [b for b in self.catalog.backends_used() if b != "dense"]
+        )
+        unknown = [t for t in targets if t not in self.backends]
+        if unknown:
+            raise ValueError(f"unknown backends {unknown}; have {sorted(self.backends)}")
+        import jax.numpy as jnp
+
+        dense = self.backends["dense"]
+        vecs = np.asarray(self.embedder.embed(queries), np.float32)
+        vec_mat = jnp.asarray(vecs)
+        exact_by_k: dict[int, np.ndarray] = {}  # the expensive search, once per k
+        out: dict[str, float] = {}
+        for name in targets:
+            backend = self.backends[name]
+            kk = k
+            if kk is None:
+                depths = [
+                    b.top_k
+                    for b in self.catalog
+                    if b.backend == name and not b.skip_retrieval
+                ]
+                kk = max(depths) if depths else 5
+            kk = min(kk, dense.size)
+            exact_ids = exact_by_k.get(kk)
+            if exact_ids is None:
+                _, exact_ids = dense.search_batch(queries, vec_mat, kk)
+                exact_by_k[kk] = exact_ids
+            _, ids = backend.search_batch(
+                queries, vec_mat if backend.requires_query_vecs else None, kk
+            )
+            exact_np, ids_np = np.asarray(exact_ids), np.asarray(ids)
+            recalls = []
+            for i in range(len(queries)):
+                exact_row = set(exact_np[i].tolist())
+                hit = len(exact_row & set(ids_np[i].tolist()))
+                r = hit / max(len(exact_row), 1)
+                self.telemetry.observe_recall(name, r)
+                recalls.append(r)
+            out[name] = float(np.mean(recalls))
+        return out
 
     # ------------------------------------------------------------------ #
     # Entry points: thin compositions of the five stages                   #

@@ -95,6 +95,7 @@ class RoutedBatch:
 
     @property
     def n(self) -> int:
+        """Number of queries in this micro-batch."""
         return len(self.queries)
 
 
@@ -107,6 +108,9 @@ class RetrievedBatch:
     retrievals: dict[int, tuple[np.ndarray, np.ndarray]]  # position → (k,) rows
     search_calls: int  # search_batch invocations (one per (backend, k) group)
     search_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-backend cache hit/miss/eviction deltas incurred by this batch's
+    # searches (CachedBackend-wrapped backends only; empty otherwise)
+    cache_events: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -123,6 +127,7 @@ class AdmittedBatch:
 
     @property
     def routed(self) -> RoutedBatch:
+        """The originating routing artifact (convenience accessor)."""
         return self.retrieved.routed
 
 
@@ -136,10 +141,28 @@ class DecodedBatch:
     exec_cache: dict[tuple[int, int], Execution]  # (position, guarded idx)
     search_calls: int  # retrieve-stage calls; finalize adds replay searches
     search_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
+    cache_events: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
 
     @property
     def routed(self) -> RoutedBatch:
+        """The originating routing artifact (convenience accessor)."""
         return self.admitted.routed
+
+
+def merge_cache_events(
+    total: dict[str, dict[str, int]], events: "Mapping[str, Mapping[str, int]]"
+) -> None:
+    """Accumulate per-backend cache counter dicts into ``total`` in place.
+
+    The single accumulation point for cache observability — the retrieve
+    stage, the finalize replay merge, and the :class:`StagePipeline` all
+    fold deltas through here, so a new counter field propagates everywhere
+    by appearing in :meth:`~repro.retrieval.cache.CacheStats.as_dict`.
+    """
+    for bname, ev in events.items():
+        tot = total.setdefault(bname, {})
+        for key, v in ev.items():
+            tot[key] = tot.get(key, 0) + v
 
 
 # --------------------------------------------------------------------------- #
@@ -151,7 +174,7 @@ def execute_one(
     query: str,
     routed_idx: int,
     reference: str | None,
-) -> Execution:
+) -> DecodedBatch:
     """Run one routed query through retrieve → assemble → decode.
 
     The replay path's single-query execution. It *is* the batched middle
@@ -159,6 +182,10 @@ def execute_one(
     can never drift from what the pipeline computed for the speculative
     choices. Embeds on the caller's thread (only ``route``/``finalize`` may
     call this: the embedder cache is confined to those boundaries).
+
+    Returns the one-element :class:`DecodedBatch` (execution at index 0),
+    so the caller can also merge its search/cache counters into the
+    enclosing batch's totals.
     """
     guarded = engine.guardrails.pre_execution(int(routed_idx)).bundle_index
     bundle = engine.catalog[guarded]
@@ -181,8 +208,7 @@ def execute_one(
         refinement_on=False,
         t0=0.0,
     )
-    decoded = decode(engine, assemble(engine, retrieve(engine, routed)))
-    return decoded.executions[0]
+    return decode(engine, assemble(engine, retrieve(engine, routed)))
 
 
 def make_record(
@@ -237,9 +263,9 @@ def route(
     qid0 = engine._query_counter
 
     cplx_np = np.asarray(engine.router.complexity_batch(queries))
-    lat0, cost0 = engine._priors()
+    lat0, cost0, rec0 = engine._priors()
     choices, util_np = engine.router.route_batch_np(
-        cplx_np, latency_override=lat0, cost_override=cost0
+        cplx_np, latency_override=lat0, cost_override=cost0, recall_override=rec0
     )
 
     guarded = [engine.guardrails.pre_execution(int(c)).bundle_index for c in choices]
@@ -287,12 +313,17 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
     lexical/approximate groups their own batched paths.
 
     Pure — reads only the immutable backends (and their idempotent
-    compiled-closure caches); safe to run on a worker thread concurrently
-    with other micro-batches' stages.
+    compiled/LRU caches: a :class:`~repro.retrieval.cache.CachedBackend` hit
+    returns bit-identical rows, so caching never perturbs results); safe to
+    run on a worker thread concurrently with other micro-batches' stages.
+    Cache-wrapped backends report their per-call hit/miss/eviction deltas
+    through the artifact's ``cache_events`` (the counters the streaming
+    summary surfaces as ``backend_cache``).
     """
     retrievals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
     calls = 0
     calls_by: dict[str, int] = {}
+    cache_events: dict[str, dict[str, int]] = {}
     for (bname, k), idxs in routed.retrieval_plan.items():
         backend = engine.backends[bname]
         qtexts = [routed.queries[i] for i in idxs]
@@ -301,7 +332,12 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
             if backend.requires_query_vecs
             else None
         )
-        scores, ids = backend.search_batch(qtexts, qmat, k)
+        stats_fn = getattr(backend, "search_batch_stats", None)
+        if stats_fn is not None:
+            scores, ids, delta = stats_fn(qtexts, qmat, k)
+            merge_cache_events(cache_events, {bname: delta.as_dict()})
+        else:
+            scores, ids = backend.search_batch(qtexts, qmat, k)
         calls += 1
         calls_by[bname] = calls_by.get(bname, 0) + 1
         scores_np = np.asarray(scores, np.float32)
@@ -313,6 +349,7 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
         retrievals=retrievals,
         search_calls=calls,
         search_calls_by_backend=calls_by,
+        cache_events=cache_events,
     )
 
 
@@ -415,6 +452,7 @@ def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
         exec_cache=exec_cache,
         search_calls=admitted.retrieved.search_calls,
         search_calls_by_backend=dict(admitted.retrieved.search_calls_by_backend),
+        cache_events={k: dict(v) for k, v in admitted.retrieved.cache_events.items()},
     )
 
 
@@ -447,9 +485,12 @@ def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse
         choices = choices.copy()
         sim = engine.telemetry.clone_for_replay()
         for i in range(n):
-            lp, cp = engine._priors(sim)
+            lp, cp, rp = engine._priors(sim)
             ci, ui = engine.router.route_batch_np(
-                routed.complexity[i : i + 1], latency_override=lp, cost_override=cp
+                routed.complexity[i : i + 1],
+                latency_override=lp,
+                cost_override=cp,
+                recall_override=rp,
             )
             util_np[i] = ui[0]
             choice = int(ci[0])
@@ -458,12 +499,16 @@ def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse
                 guarded = engine.guardrails.pre_execution(choice).bundle_index
                 ex = decoded.exec_cache.get((i, guarded))
                 if ex is None:
-                    ex = execute_one(engine, qid0 + i, queries[i], choice, refs[i])
-                    guarded_bundle = engine.catalog[guarded]
-                    if not guarded_bundle.skip_retrieval:
-                        decoded.search_calls += 1
-                        by = decoded.search_calls_by_backend
-                        by[guarded_bundle.backend] = by.get(guarded_bundle.backend, 0) + 1
+                    sub = execute_one(engine, qid0 + i, queries[i], choice, refs[i])
+                    ex = sub.executions[0]
+                    # fold the one-element replay execution's search/cache
+                    # activity into the batch totals (its plan is empty for
+                    # skip-retrieval bundles, so the merge is a no-op there)
+                    decoded.search_calls += sub.search_calls
+                    by = decoded.search_calls_by_backend
+                    for bname, cnt in sub.search_calls_by_backend.items():
+                        by[bname] = by.get(bname, 0) + cnt
+                    merge_cache_events(decoded.cache_events, sub.cache_events)
                     decoded.exec_cache[(i, guarded)] = ex
                 executions[i] = ex
             sim.log(make_record(engine, qid0 + i, queries[i], executions[i], 0.0, 0.0))
@@ -540,15 +585,19 @@ class StagePipeline:
         self.stage_batches = 0
         self.retrieve_calls = 0
         self.retrieve_calls_by_backend: dict[str, int] = {}
+        # per-backend cache hit/miss/eviction totals (CachedBackend only)
+        self.cache_events: dict[str, dict[str, int]] = {}
 
     def _middle(self, routed: RoutedBatch) -> DecodedBatch:
         return decode(self.engine, assemble(self.engine, retrieve(self.engine, routed)))
 
     @property
     def in_flight(self) -> int:
+        """Micro-batches currently between ``route`` and ``finalize``."""
         return len(self._inflight)
 
     def can_submit(self) -> bool:
+        """Whether another micro-batch fits under the configured depth."""
         return len(self._inflight) < self.depth
 
     def submit(
@@ -596,6 +645,7 @@ class StagePipeline:
             self.retrieve_calls_by_backend[bname] = (
                 self.retrieve_calls_by_backend.get(bname, 0) + n
             )
+        merge_cache_events(self.cache_events, decoded.cache_events)
         return tag, responses
 
     def wait_head(self, timeout: float) -> None:
@@ -605,5 +655,6 @@ class StagePipeline:
             futures_wait([self._inflight[0][1]], timeout=timeout)
 
     def shutdown(self) -> None:
+        """Stop the worker pool (no-op on the depth-1 serial path)."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)

@@ -103,6 +103,11 @@ class StreamResult:
     # per-backend search_batch calls (incl. replay): {"dense": 15, ...} —
     # deterministic on the serial cell, the CI gate's per-backend counter
     retrieve_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-backend cache hit/miss/eviction totals — populated only when a
+    # backend is CachedBackend-wrapped (--cache-size); deterministic on
+    # serial runs, telemetry under concurrency (results never change, only
+    # which micro-batch pays the miss)
+    backend_cache: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
 
     @property
     def records(self) -> list:
@@ -146,6 +151,9 @@ class StreamResult:
             "stage_batches": self.stage_batches,
             "retrieve_calls": self.retrieve_calls,
             "backend_search_calls": dict(sorted(self.retrieve_calls_by_backend.items())),
+            "backend_cache": {
+                b: dict(ev) for b, ev in sorted(self.backend_cache.items())
+            },
         }
 
 
@@ -288,6 +296,7 @@ class StreamingEngine:
             stage_batches=pipeline.stage_batches,
             retrieve_calls=pipeline.retrieve_calls,
             retrieve_calls_by_backend=dict(pipeline.retrieve_calls_by_backend),
+            backend_cache={k: dict(v) for k, v in pipeline.cache_events.items()},
         )
 
     # ------------------------------------------------------------------ #

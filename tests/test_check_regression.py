@@ -19,12 +19,18 @@ SERVING_METRICS = GATED_METRICS["BENCH_serving.json"]
 STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 
-def _serving(speedup=3.6, decode_steps=350):
+def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53):
     return {
         "benchmark": "paper_28_queries",
         "batched_qps": 500.0,  # telemetry, ungated
         "speedup": speedup,
         "closed_loop": {"decode_steps": decode_steps},
+        "cache": {
+            "capacity": 32,  # telemetry, ungated
+            "hits": cache_hits,
+            "misses": cache_misses,
+            "evictions": 21,  # telemetry, ungated
+        },
     }
 
 
@@ -81,6 +87,23 @@ def test_gate_fails_on_injected_25pct_drop(tmp_path):
     # -25% completions, +25% decode steps in both artifacts: three failures
     _write(cur, _serving(decode_steps=500), _streaming(completed=21, decode_steps=500))
     assert check_artifacts(base, cur, threshold=0.20) == 3
+
+
+def test_cache_counters_are_exact_both_directions():
+    """cache.hits / cache.misses are *exact* metrics: the cell is two
+    deterministic single-threaded epochs, so any drift in either direction
+    is a structural change (cache keying, LRU discipline, or upstream
+    routing) — including a "better" hit count, which would mean the
+    workload the cell serves silently changed."""
+    # fewer hits: cache effectiveness regressed
+    fails = compare(_serving(), _serving(cache_hits=10, cache_misses=61),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("exact" in f for f in fails)
+    # MORE hits also fails: the deterministic workload moved
+    fails = compare(_serving(), _serving(cache_hits=25), SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "cache.hits" in fails[0]
+    # unchanged counters pass
+    assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
 
 
 def test_gate_fails_on_counter_regressions(tmp_path):

@@ -1,0 +1,64 @@
+"""Documentation link integrity — stale docs fail tier-1, not just CI.
+
+Runs the same checker as the CI ``docs`` job (``tools/check_docs.py``)
+over ``README.md`` and ``docs/*.md``: every relative file link must
+resolve and every ``#anchor`` must match a real heading slug. Plus unit
+coverage of the checker itself, so it can't silently stop catching
+breakage.
+"""
+
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_docs import check_file, collect_markdown, github_slug, heading_slugs  # noqa: E402
+
+
+def test_repo_docs_have_no_broken_links():
+    files = collect_markdown([os.path.join(REPO, "README.md"), os.path.join(REPO, "docs")])
+    assert any(f.endswith("README.md") for f in files)
+    assert sum(f.endswith(("architecture.md", "serving.md", "retrieval.md")) for f in files) == 3
+    errors = [e for f in files for e in check_file(f)]
+    assert not errors, "\n".join(errors)
+
+
+def test_github_slug_rules():
+    assert github_slug("CI regression gate") == "ci-regression-gate"
+    assert github_slug("The `RetrievalBackend` protocol") == "the-retrievalbackend-protocol"
+    assert github_slug("Cached + sharded, really?!") == "cached--sharded-really"
+    assert github_slug("1. Sequential (`RAGEngine.answer`)") == "1-sequential-ragengineanswer"
+
+
+def test_heading_slugs_dedupe_and_skip_fences():
+    md = "# Top\n## Dup\n## Dup\n```\n# not a heading\n```\n## Tail\n"
+    slugs = heading_slugs(md)
+    assert {"top", "dup", "dup-1", "tail"} <= slugs
+    assert "not-a-heading" not in slugs
+
+
+def test_checker_catches_breakage(tmp_path):
+    good = tmp_path / "good.md"
+    good.write_text("# Title\n\nsee [self](#title) and [other](other.md#here)\n")
+    other = tmp_path / "other.md"
+    other.write_text("# Here\n")
+    assert check_file(str(good)) == []
+
+    bad = tmp_path / "bad.md"
+    bad.write_text(
+        "[gone](missing.md) [noanchor](other.md#nope) [selfmiss](#absent)\n"
+        "```\n[inside a fence](also-missing.md)\n```\n"
+    )
+    errors = check_file(str(bad))
+    assert len(errors) == 3  # the fenced link is NOT flagged
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+    assert any("#absent" in e for e in errors)
+
+
+def test_collect_markdown_validates(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        collect_markdown([str(tmp_path / "nope.py")])

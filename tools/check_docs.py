@@ -1,0 +1,134 @@
+"""Markdown link checker for the repo's documentation system.
+
+Validates every inline link in the given markdown files/directories:
+
+* **Relative file links** (``[text](docs/serving.md)``, ``[x](../README.md)``)
+  must resolve to an existing file, relative to the linking file's
+  directory.
+* **Anchor links** (``[x](#ci-regression-gate)`` or
+  ``[x](docs/serving.md#gates)``) must match a heading in the target file,
+  using GitHub's heading→anchor slug rules.
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI).
+
+Fenced code blocks and inline code spans are stripped before scanning, so
+markdown *examples* inside code fences never false-positive.
+
+Usage (the CI ``docs`` job, and ``tests/test_docs_links.py``):
+
+    python tools/check_docs.py README.md docs
+
+Exits 1 listing every broken link; 0 when all links resolve.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets are checked the same way. Targets never contain spaces in this
+# repo's docs; titles ("... \"t\"") are not used.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+_INLINE_CODE_RE = re.compile(r"`[^`\n]*`")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading→anchor slug: drop markup, lowercase, strip
+    punctuation, spaces→hyphens. (Duplicate-heading ``-N`` suffixes are
+    handled by :func:`heading_slugs`.)"""
+    text = _INLINE_CODE_RE.sub(lambda m: m.group(0).strip("`"), heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links → their text
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)  # punctuation out; keep word chars/-/space
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_text: str) -> set[str]:
+    """Every anchor a markdown file exposes, with GitHub's duplicate
+    ``-1``/``-2`` suffixing."""
+    counts: dict[str, int] = {}
+    slugs: set[str] = set()
+    for m in _HEADING_RE.finditer(_FENCE_RE.sub("", md_text)):
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(md_text: str):
+    """Yield every inline link target outside code fences/spans."""
+    text = _FENCE_RE.sub("", md_text)
+    text = _INLINE_CODE_RE.sub("", text)
+    for m in _LINK_RE.finditer(text):
+        yield m.group(1)
+
+
+def check_file(path: str) -> list[str]:
+    """Return a list of broken-link messages for one markdown file."""
+    errors: list[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for target in iter_links(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            resolved = os.path.normpath(os.path.join(base, file_part))
+            if not os.path.exists(resolved):
+                errors.append(f"{path}: broken link -> {target} (no such file)")
+                continue
+        else:
+            resolved = os.path.abspath(path)
+        if anchor:
+            if not resolved.endswith((".md", ".markdown")):
+                continue  # anchors into source files are line anchors etc.
+            with open(resolved, encoding="utf-8") as f:
+                slugs = heading_slugs(f.read())
+            if anchor not in slugs:
+                errors.append(
+                    f"{path}: broken anchor -> {target} "
+                    f"(no heading slug {anchor!r} in {os.path.relpath(resolved)})"
+                )
+    return errors
+
+
+def collect_markdown(paths: list[str]) -> list[str]:
+    """Expand files/directories into the markdown file list to check."""
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names) if n.endswith(".md")
+                )
+        elif p.endswith((".md", ".markdown")):
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"not a markdown file or directory: {p}")
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="markdown files and/or directories")
+    args = ap.parse_args()
+    files = collect_markdown(args.paths)
+    errors: list[str] = []
+    for path in files:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"docs link check: {len(errors)} broken link(s) in {len(files)} file(s)")
+        sys.exit(1)
+    print(f"docs link check: OK ({len(files)} file(s))")
+
+
+if __name__ == "__main__":
+    main()
