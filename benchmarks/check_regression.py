@@ -23,6 +23,12 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     counters over two deterministic epochs (*exact*, band 0: hit/miss
     totals are bit-stable, so any drift is a structural change to cache
     keying, eviction, or upstream routing — never noise).
+  - ``resilience.completed`` / ``resilience.degraded`` /
+    ``resilience.rejected`` / ``resilience.breaker_opens`` — the seeded
+    chaos cell's outcome counters (*exact*, band 0: the fault schedule is
+    keyed to the backend call index and the cell is single-threaded, so
+    any drift means the retry/breaker state machine or the degradation
+    ladder changed behaviour — docs/resilience.md).
 * ``BENCH_streaming.json`` (``gate`` section = the single-threaded
   burst-serial cell, whose counters are bit-stable run-to-run)
   - ``gate.completed`` — every request must still drain.
@@ -98,6 +104,35 @@ GATED_METRICS: dict[str, list[Metric]] = {
         Metric(
             "cache.misses",
             "cached-backend misses over 2 deterministic epochs",
+            higher_is_better=False,
+            exact=True,
+        ),
+        # band 0 (exact): the chaos cell's fault schedule is keyed to the
+        # backend call index and runs single-threaded, so every outcome
+        # counter is bit-stable. completed must stay 28 (the degradation
+        # ladder's availability contract); degraded / breaker_opens moving
+        # in EITHER direction means the fault schedule, the retry/breaker
+        # state machine, or the ladder's bundle choice changed — never noise.
+        Metric(
+            "resilience.completed",
+            "chaos-cell answered queries (availability contract)",
+            exact=True,
+        ),
+        Metric(
+            "resilience.degraded",
+            "chaos-cell degraded (ladder-served) answers",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "resilience.rejected",
+            "chaos-cell rejections",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "resilience.breaker_opens",
+            "chaos-cell circuit-breaker opens",
             higher_is_better=False,
             exact=True,
         ),

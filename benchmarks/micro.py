@@ -480,6 +480,99 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
     ]
 
 
+def bench_resilience(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
+    """Seeded chaos cell for ``BENCH_serving.json`` (gated, band 0).
+
+    The paper engine's dense backend is wrapped in a
+    ``FaultyBackend(CANONICAL_FAULT_PROFILE)`` (30% transient failures,
+    a deadline-busting stall every 6th call) under a
+    ``ResilientBackend(CANONICAL_RESILIENCE)`` (250ms timeout, 2 seeded
+    retries, 3-consecutive-failure breaker with a cooldown longer than the
+    run), then serves the 28-query benchmark through the serial streaming
+    cell. Every fault decision is keyed to the backend call index and the
+    cell is single-threaded, so the outcome counters are bit-stable
+    run-to-run: ``completed`` / ``degraded`` / ``rejected`` /
+    ``breaker_opens`` are committed under ``resilience`` and gated as
+    *exact* metrics in benchmarks/check_regression.py. Availability must be
+    100%: the degradation ladder answers every query the broken backend
+    can't (paper catalog → retrieval-free ``direct_llm``), tagged degraded.
+    Retry/timeout/fallback counters ride along as telemetry.
+    """
+    import json
+    import math
+    import os
+
+    from repro.core.policies import make_policy
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+    from repro.retrieval.faults import CANONICAL_FAULT_PROFILE, FaultyBackend
+    from repro.serving.engine import build_paper_engine
+    from repro.serving.resilience import CANONICAL_RESILIENCE, wrap_resilient
+    from repro.serving.streaming import StreamConfig, serve_stream
+
+    queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
+    n = len(queries)
+
+    eng = build_paper_engine(make_policy("router_default"))
+    faulty = FaultyBackend(eng.backends["dense"], CANONICAL_FAULT_PROFILE)
+    eng.backends["dense"] = faulty
+    eng.backends = wrap_resilient(eng.backends, CANONICAL_RESILIENCE)
+
+    t0 = time.perf_counter()
+    result = serve_stream(
+        eng, queries, refs, rate_qps=math.inf,
+        config=StreamConfig(pipeline_depth=1, overlap=False),
+    )
+    wall = time.perf_counter() - t0
+    s = result.summary()
+    res = s["resilience"]
+    degraded = sum(1 for r in result.records if r.degraded)
+
+    cell = {
+        "cell": "chaos_burst_serial",
+        "fault_profile": {
+            "backend": "dense",
+            "failure_rate": CANONICAL_FAULT_PROFILE.failure_rate,
+            "stall_every": CANONICAL_FAULT_PROFILE.stall_every,
+            "stall_ms": CANONICAL_FAULT_PROFILE.stall_ms,
+            "seed": CANONICAL_FAULT_PROFILE.seed,
+        },
+        # gated, band 0 — any drift means the fault schedule, the retry/
+        # breaker state machine, or the ladder's bundle choice changed
+        "completed": s["completed"],
+        "degraded": degraded,
+        "rejected": s["rejected"],
+        "breaker_opens": res["breaker_opens"],
+        # ungated telemetry
+        "availability": s["completed"] / n,
+        "retries": res["retries"],
+        "timeouts": res["timeouts"],
+        "failures": res["failures"],
+        "short_circuits": res["short_circuits"],
+        "fallbacks": res["fallbacks"],
+        "fallback_depth_total": res["fallback_depth_total"],
+        "breaker_state": res["breaker_state"],
+        "injected": dict(faulty.injected),
+    }
+
+    if artifact_path and os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            artifact = json.load(f)
+        artifact["resilience"] = cell
+        with open(artifact_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+
+    return [
+        (
+            "rag_chaos_serial",
+            wall / n * 1e6,
+            f"{s['completed']}/{n} answered, {degraded} degraded, "
+            f"{res['breaker_opens']} breaker open(s), "
+            f"availability={s['completed'] / n:.0%}",
+        )
+    ]
+
+
 def main() -> None:
     """Standalone entry: ``python -m benchmarks.micro [--smoke] [--out DIR]``.
 
@@ -506,12 +599,14 @@ def main() -> None:
          lambda: bench_engine_batched(serving_artifact, iters=3),
          lambda: bench_catalog_comparison(serving_artifact),
          lambda: bench_cache_sharding(serving_artifact),
+         lambda: bench_resilience(serving_artifact),
          lambda: bench_streaming(streaming_artifact)]
         if args.smoke
         else [bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine,
               lambda: bench_engine_batched(serving_artifact),
               lambda: bench_catalog_comparison(serving_artifact),
               lambda: bench_cache_sharding(serving_artifact),
+              lambda: bench_resilience(serving_artifact),
               lambda: bench_streaming(streaming_artifact)]
     )
     for section in sections:

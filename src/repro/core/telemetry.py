@@ -60,6 +60,12 @@ class QueryRecord:
     retrieval_confidence: float  # max cosine sim; NaN when retrieval skipped
     complexity_score: float
     index_embedding_tokens: int = 0  # offline bookkeeping (Eq. 2 note)
+    # Resilience tagging (serving/resilience.py). Deliberately NOT in
+    # CSV_FIELDS: the Appendix-F artifact schema is frozen, and a zero-fault
+    # run must stay byte-identical — the tag lives on the record object and
+    # in the resilience counters, not in the CSV.
+    degraded: bool = False  # answered off-plan via the degradation ladder
+    fallback_depth: int = 0  # ladder rungs walked to produce this answer
 
     @property
     def total_billed_tokens(self) -> int:
@@ -168,6 +174,13 @@ class TelemetryStore:
     # -- ingestion ----------------------------------------------------------
     def log(self, record: QueryRecord) -> None:
         self.records.append(record)
+        # Degraded answers are forced, not routed: a fault pushed them onto
+        # a fallback bundle, so their latency/cost say nothing about what
+        # that bundle does under normal routing. They stay in the record
+        # stream (auditable, counted) but never refine the EMA priors —
+        # injected chaos must not corrupt routing.
+        if record.degraded:
+            return
         if record.strategy in self.stats:
             self.stats[record.strategy].update(
                 record.latency,

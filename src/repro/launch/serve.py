@@ -46,6 +46,31 @@ def main() -> None:
         "top-k merge; bit-identical to unsharded). 1 = single index",
     )
     ap.add_argument(
+        "--fault-profile", action="append", default=[], metavar="NAME:K=V,...",
+        help="inject a seeded fault schedule into backend NAME (repeatable), "
+        "e.g. --fault-profile dense:failure_rate=0.3,stall_every=6,"
+        "stall_ms=1500,seed=2 — keys are FaultProfile fields; pair with "
+        "--retrieve-timeout-ms/--max-retries to exercise the resilience "
+        "ladder (docs/resilience.md)",
+    )
+    ap.add_argument(
+        "--retrieve-timeout-ms", type=float, default=None, metavar="MS",
+        help="per-search_batch timeout; a timed-out call counts as a failure "
+        "and is retried. Enables the ResilientBackend wrapper (with retries, "
+        "circuit breaker, and the degradation ladder) even at 0 retries",
+    )
+    ap.add_argument(
+        "--max-retries", type=int, default=None, metavar="N",
+        help="bounded seeded-backoff retries per retrieval call (default 2 "
+        "when resilience is active); enables the ResilientBackend wrapper",
+    )
+    ap.add_argument(
+        "--request-deadline-ms", type=float, default=None, metavar="MS",
+        help="per-request wall-clock deadline from arrival (--stream only); "
+        "requests already late at admission get a typed deadline_exceeded "
+        "rejection instead of burning decode slots",
+    )
+    ap.add_argument(
         "--stream", action="store_true",
         help="serve from a live Poisson arrival queue (retrieval/decode overlap) "
         "instead of one pre-collected batch",
@@ -94,11 +119,46 @@ def main() -> None:
     backends = make_backends(
         index, passages, embedder, names=("dense", *catalog.backends_used())
     )
-    from repro.retrieval import scale_backends
+    from repro.retrieval import FaultProfile, scale_backends, wrap_cached, wrap_faulty
 
-    backends = scale_backends(
-        backends, index, cache_size=args.cache_size, shards=args.shards
-    )
+    # Decorator stack, innermost first: shard (corpus layer) → faults (the
+    # flaky service itself) → cache (client-side; hits short-circuit faults)
+    # → resilience (timeout/retry/breaker/ladder around everything).
+    backends = scale_backends(backends, index, shards=args.shards)
+    fault_profiles: dict[str, FaultProfile] = {}
+    for spec in args.fault_profile:
+        try:
+            name, profile = FaultProfile.parse(spec)
+        except ValueError as err:
+            raise SystemExit(f"--fault-profile: {err}")
+        if name not in backends:
+            raise SystemExit(
+                f"--fault-profile: unknown backend {name!r} "
+                f"(this catalog serves {sorted(backends)})"
+            )
+        fault_profiles[name] = profile
+    if fault_profiles:
+        backends = wrap_faulty(backends, fault_profiles)
+    if args.cache_size > 0:
+        backends = wrap_cached(backends, capacity=args.cache_size)
+    if (
+        args.retrieve_timeout_ms is not None
+        or args.max_retries is not None
+        or fault_profiles
+    ):
+        from repro.serving.resilience import (
+            ResilienceConfig,
+            RetryPolicy,
+            wrap_resilient,
+        )
+
+        retry = RetryPolicy(
+            max_retries=args.max_retries if args.max_retries is not None else 2
+        )
+        backends = wrap_resilient(
+            backends,
+            ResilienceConfig(timeout_ms=args.retrieve_timeout_ms, retry=retry),
+        )
 
     per_backend_conf: dict[str, float] = {}
     for item in args.min_confidence_backend:
@@ -159,6 +219,7 @@ def main() -> None:
                 overlap=depth > 1,
                 pipeline_depth=depth,
                 retrieval_workers=args.retrieval_workers,
+                request_deadline_ms=args.request_deadline_ms,
             ),
         )
         print(json.dumps(result.summary(), indent=2))

@@ -22,6 +22,15 @@ from repro.retrieval.cache import (
     wrap_cached,
 )
 from repro.retrieval.chunking import Passage, corpus_passages, line_passages, sliding_window_passages
+from repro.retrieval.faults import (
+    CANONICAL_FAULT_PROFILE,
+    FaultProfile,
+    FaultyBackend,
+    RetrievalFault,
+    TransientBackendError,
+    has_injected_faults,
+    wrap_faulty,
+)
 from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, StackedEmbedder
 from repro.retrieval.hybrid import HybridRetriever, rrf_fuse, weighted_fuse
 from repro.retrieval.index import DenseIndex, SearchResult, l2_normalize
@@ -36,6 +45,8 @@ __all__ = [
     "make_backends",
     "CachedBackend", "CacheStats", "cache_stats_view", "scale_backends", "wrap_cached",
     "ShardedBackend", "shard_bounds",
+    "CANONICAL_FAULT_PROFILE", "FaultProfile", "FaultyBackend", "RetrievalFault",
+    "TransientBackendError", "has_injected_faults", "wrap_faulty",
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",
     "sliding_window_passages", "CachingEmbedder", "HashedNGramEmbedder", "StackedEmbedder",
     "HybridRetriever", "rrf_fuse", "weighted_fuse", "DenseIndex", "SearchResult",

@@ -284,9 +284,16 @@ def scale_backends(
 
 def cache_stats_view(backends: Mapping[str, RetrievalBackend]) -> dict[str, dict[str, int]]:
     """Cumulative per-backend cache counters for every cache-wrapped entry
-    of a backend map — what the CLI and examples print after a run."""
-    return {
-        name: b.stats().as_dict()
-        for name, b in backends.items()
-        if isinstance(b, CachedBackend)
-    }
+    of a backend map — what the CLI and examples print after a run. Walks
+    the decorator chain (``.inner``), so a cache nested under an outer
+    wrapper (e.g. ResilientBackend) still reports."""
+    out: dict[str, dict[str, int]] = {}
+    for name, b in backends.items():
+        for _ in range(16):  # bounded: decorator chains are shallow
+            if isinstance(b, CachedBackend):
+                out[name] = b.stats().as_dict()
+                break
+            b = getattr(b, "inner", None)
+            if b is None:
+                break
+    return out

@@ -1,0 +1,295 @@
+"""Seeded fault injection for retrieval backends — the chaos half of resilience.
+
+RAGO (Jiang et al., 2025) and the RAG systems-tradeoff studies agree that
+retrieval is the serving stage with the heaviest *tail*: remote indexes
+time out, shards stall, replicas brown out and return partial rows. Before
+the serving layer can claim to tolerate any of that, the repo needs a way
+to produce those behaviours **on demand and reproducibly** — flaky tests
+that fail only when a real network hiccups are worse than no tests.
+
+:class:`FaultyBackend` is the decorator that does it: it wraps any
+:class:`~repro.retrieval.backend.RetrievalBackend` behind the same batched
+protocol and injects faults drawn from a declarative :class:`FaultProfile`.
+Four fault kinds cover the failure taxonomy the resilience layer
+(serving/resilience.py) must absorb:
+
+* **transient exceptions** (``failure_rate``) — the call raises
+  :class:`TransientBackendError`; a retry may succeed.
+* **latency spikes** (``spike_rate`` / ``spike_ms``) — the call sleeps
+  briefly before answering; retries are *not* needed, timeouts should not
+  fire.
+* **deadline-busting stalls** (``stall_every`` / ``stall_ms``) — every Nth
+  call sleeps long enough that any sane per-call timeout fires; models a
+  wedged shard or a GC'd replica.
+* **degraded payloads** (``empty_rate`` / ``truncate_rate``) — the call
+  *succeeds* but returns zero or half-width result rows; models partial
+  replicas. These are data-quality faults: they flow through retrieval
+  normally and are caught downstream by the low-confidence guardrail, not
+  by retries.
+
+Determinism contract: every random decision is drawn from
+``np.random.default_rng((seed, call_index))`` where ``call_index`` is a
+per-wrapper counter — so a given profile produces the *same fault schedule*
+on every run as long as calls arrive in the same order (true for the
+serial pipeline cells the CI gate counts; under concurrent micro-batches
+the schedule is still seeded but the interleaving decides which call gets
+which index). Stalls are periodic by call index, not random — a schedule,
+not a coin flip.
+
+Composition: the faulty wrapper belongs *innermost* — around the raw
+backend, underneath :class:`~repro.retrieval.cache.CachedBackend` /
+:class:`~repro.serving.resilience.ResilientBackend` — because the thing
+that fails in production is the index service, not your client-side cache.
+``wrap_faulty`` applies profiles by backend name so chaos scenarios
+exercise the real decorator stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.retrieval.backend import BackendCost, RetrievalBackend
+from repro.retrieval.chunking import Passage
+
+
+class RetrievalFault(RuntimeError):
+    """Base class for fault conditions the resilience layer may absorb.
+
+    The serving ``retrieve`` stage treats this family — and only this
+    family — as "the backend is unhealthy, walk the degradation ladder".
+    Any other exception type is a programming error and propagates as a
+    typed :class:`~repro.serving.stages.StageError` instead.
+    """
+
+
+class TransientBackendError(RetrievalFault):
+    """A retryable failure: the same call may succeed if attempted again."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """Declarative, seeded fault schedule for one backend.
+
+    All rates are per *call* (one batched ``search_batch``), drawn
+    deterministically from ``(seed, call_index)``. ``stall_every`` is
+    periodic — call indices ``stall_every-1, 2*stall_every-1, ...`` stall —
+    so deadline-busting behaviour is a schedule, not a probability.
+    """
+
+    failure_rate: float = 0.0  # P(raise TransientBackendError)
+    spike_rate: float = 0.0  # P(sleep spike_ms before answering)
+    spike_ms: float = 0.0
+    stall_every: int = 0  # every Nth call sleeps stall_ms (0 = never)
+    stall_ms: float = 0.0
+    empty_rate: float = 0.0  # P(return zero-width result rows)
+    truncate_rate: float = 0.0  # P(return ceil(k/2)-width rows)
+    seed: int = 0
+
+    def __post_init__(self):
+        for f in ("failure_rate", "spike_rate", "empty_rate", "truncate_rate"):
+            v = getattr(self, f)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{f} must be in [0, 1], got {v}")
+        if self.stall_every < 0:
+            raise ValueError(f"stall_every must be >= 0, got {self.stall_every}")
+
+    @property
+    def is_zero(self) -> bool:
+        """True when this profile can never perturb a call (the parity case)."""
+        return (
+            self.failure_rate == 0.0
+            and self.spike_rate == 0.0
+            and self.stall_every == 0
+            and self.empty_rate == 0.0
+            and self.truncate_rate == 0.0
+        )
+
+    @classmethod
+    def parse(cls, spec: str) -> "tuple[str, FaultProfile]":
+        """Parse a CLI ``--fault-profile`` spec: ``NAME:key=value,...``.
+
+        Example: ``dense:failure_rate=0.3,stall_every=6,stall_ms=1500,seed=2``.
+        Returns ``(backend_name, profile)``.
+        """
+        if ":" not in spec:
+            raise ValueError(
+                f"fault profile spec must be NAME:key=value,... got {spec!r}"
+            )
+        name, _, body = spec.partition(":")
+        kwargs: dict[str, float | int] = {}
+        int_fields = {"stall_every", "seed"}
+        valid = {f.name for f in dataclasses.fields(cls)}
+        for item in filter(None, body.split(",")):
+            key, _, val = item.partition("=")
+            key = key.strip()
+            if key not in valid:
+                raise ValueError(f"unknown fault profile field {key!r} (have {sorted(valid)})")
+            kwargs[key] = int(val) if key in int_fields else float(val)
+        return name.strip(), cls(**kwargs)
+
+
+# The ISSUE's canonical chaos schedule: one backend with 30% transient
+# failures plus a periodic deadline-busting stall. Paired with
+# CANONICAL_RESILIENCE (serving/resilience.py) this drives the
+# bench_resilience gate cell and the chaos test suite.
+CANONICAL_FAULT_PROFILE = FaultProfile(
+    failure_rate=0.3, stall_every=6, stall_ms=1500.0, seed=2
+)
+
+
+class FaultyBackend:
+    """Deterministic fault-injecting decorator over any retrieval backend.
+
+    Drop-in: ``name`` / ``cost`` / ``requires_query_vecs`` / ``size`` /
+    ``get_passages`` delegate to the inner backend, so bundles and the
+    serving stages compose with it without knowing it exists. Only
+    ``search_batch`` is perturbed — passage payload fetches are assumed
+    local (they read the already-retrieved ids).
+
+    ``sleep`` is injectable so tests can observe stall/spike *decisions*
+    without paying wall-clock time.
+    """
+
+    #: Marker the calibration path checks: measured recall from a backend
+    #: that fabricates empty/truncated rows must never refine routing priors.
+    injects_faults = True
+
+    def __init__(
+        self,
+        inner: RetrievalBackend,
+        profile: FaultProfile,
+        *,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.inner = inner
+        self.profile = profile
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self._calls = 0
+        # observability: what the schedule actually injected so far
+        self.injected: dict[str, int] = {
+            "failures": 0, "spikes": 0, "stalls": 0, "empties": 0, "truncations": 0,
+        }
+
+    # -- protocol surface (delegation) --------------------------------------
+    @property
+    def name(self) -> str:
+        """The inner backend's routing name — fault wrapping is invisible."""
+        return self.inner.name
+
+    @property
+    def cost(self) -> BackendCost:
+        """The inner backend's static cost descriptor, unchanged."""
+        return self.inner.cost
+
+    @property
+    def requires_query_vecs(self) -> bool:
+        """Whether the inner backend consumes embedded query vectors."""
+        return self.inner.requires_query_vecs
+
+    @property
+    def size(self) -> int:
+        """Corpus passages indexed by the inner backend."""
+        return self.inner.size
+
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Fetch passage payloads from the inner backend (never faulted)."""
+        return self.inner.get_passages(ids)
+
+    def __bool__(self) -> bool:
+        """Always truthy regardless of any container-like inner backend."""
+        return True
+
+    # -- fault core ----------------------------------------------------------
+    @property
+    def calls(self) -> int:
+        """Search calls observed so far (the fault-schedule clock)."""
+        with self._lock:
+            return self._calls
+
+    def search_batch(
+        self,
+        queries: Sequence[str] | None,
+        query_vecs,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched search with the profile's faults applied to this call."""
+        p = self.profile
+        with self._lock:
+            idx = self._calls
+            self._calls += 1
+        if p.is_zero:  # parity fast path: no RNG draw, no perturbation
+            return self.inner.search_batch(queries, query_vecs, k)
+        # One RNG per call, keyed by (seed, call index): the draw order below
+        # is part of the schedule contract — reordering it changes schedules.
+        rng = np.random.default_rng((p.seed, idx))
+        fail_u, spike_u, empty_u, trunc_u = rng.random(4)
+        if p.stall_every and (idx + 1) % p.stall_every == 0:
+            with self._lock:
+                self.injected["stalls"] += 1
+            self._sleep(p.stall_ms / 1000.0)
+        if fail_u < p.failure_rate:
+            with self._lock:
+                self.injected["failures"] += 1
+            raise TransientBackendError(
+                f"injected transient failure on backend {self.name!r} (call {idx})"
+            )
+        if spike_u < p.spike_rate:
+            with self._lock:
+                self.injected["spikes"] += 1
+            self._sleep(p.spike_ms / 1000.0)
+        scores, ids = self.inner.search_batch(queries, query_vecs, k)
+        scores = np.asarray(scores, np.float32)
+        ids = np.asarray(ids, np.int32)
+        if empty_u < p.empty_rate:
+            with self._lock:
+                self.injected["empties"] += 1
+            return scores[:, :0], ids[:, :0]
+        if trunc_u < p.truncate_rate and scores.shape[1] > 1:
+            with self._lock:
+                self.injected["truncations"] += 1
+            keep = max(1, -(-scores.shape[1] // 2))  # ceil(k/2), never zero
+            return scores[:, :keep], ids[:, :keep]
+        return scores, ids
+
+
+def wrap_faulty(
+    backends: Mapping[str, RetrievalBackend],
+    profiles: Mapping[str, FaultProfile],
+    *,
+    sleep: Callable[[float], None] = time.sleep,
+) -> dict[str, RetrievalBackend]:
+    """Wrap named backends of a backend map in :class:`FaultyBackend`.
+
+    ``profiles`` maps backend name → profile; unnamed backends pass through
+    untouched. Unknown names raise — a chaos scenario that silently faults
+    nothing is a green test lying about coverage.
+    """
+    unknown = [n for n in profiles if n not in backends]
+    if unknown:
+        raise ValueError(f"fault profiles name unknown backends {unknown}; have {sorted(backends)}")
+    return {
+        name: FaultyBackend(b, profiles[name], sleep=sleep) if name in profiles else b
+        for name, b in backends.items()
+    }
+
+
+def has_injected_faults(backend: RetrievalBackend) -> bool:
+    """True if a fault injector sits anywhere in a backend's decorator stack.
+
+    Walks the ``inner`` chain (CachedBackend/ResilientBackend/FaultyBackend
+    all expose it) so calibration can refuse to learn recall priors from a
+    backend whose result rows may be fabricated.
+    """
+    seen = 0
+    while backend is not None and seen < 16:  # decorator stacks are shallow
+        if getattr(backend, "injects_faults", False):
+            return True
+        backend = getattr(backend, "inner", None)
+        seen += 1
+    return False

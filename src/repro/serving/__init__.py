@@ -14,6 +14,19 @@ from repro.serving.generator import (
     build_prompt,
 )
 from repro.serving.latency import LatencyModel, LatencyModelConfig
+from repro.serving.resilience import (
+    BackendUnavailableError,
+    BreakerConfig,
+    CANONICAL_RESILIENCE,
+    CircuitBreaker,
+    ResilienceConfig,
+    ResilienceEvents,
+    ResilientBackend,
+    RetryPolicy,
+    backoff_delays_ms,
+    degradation_ladder,
+    wrap_resilient,
+)
 from repro.serving.scheduler import ContinuousBatchScheduler, Rejection, Request, SchedulerConfig
 from repro.serving.stages import (
     AdmittedBatch,
@@ -21,6 +34,7 @@ from repro.serving.stages import (
     Execution,
     RetrievedBatch,
     RoutedBatch,
+    StageError,
     StagePipeline,
     assemble,
     decode,

@@ -232,7 +232,17 @@ class RAGEngine:
         ``backends`` defaults to every non-dense backend the catalog routes
         through; ``k`` defaults per backend to the deepest ``top_k`` among
         its bundles. Returns the mean measured recall per backend.
+
+        Degraded measurements never reach the store: a backend whose
+        decorator stack injects faults (``faults.FaultyBackend`` — its rows
+        may be fabricated empty/truncated sets) or whose resilient wrapper
+        reports it unavailable mid-calibration yields ``NaN`` with **zero**
+        ``observe_recall`` observations, so injected chaos cannot corrupt
+        the refined recall priors routing consumes.
         """
+        from repro.retrieval.faults import has_injected_faults
+        from repro.serving.resilience import BackendUnavailableError
+
         queries = list(queries)
         if not queries:
             raise ValueError("need at least one calibration query")
@@ -253,6 +263,9 @@ class RAGEngine:
         out: dict[str, float] = {}
         for name in targets:
             backend = self.backends[name]
+            if has_injected_faults(backend):
+                out[name] = float("nan")
+                continue
             kk = k
             if kk is None:
                 depths = [
@@ -266,9 +279,13 @@ class RAGEngine:
             if exact_ids is None:
                 _, exact_ids = dense.search_batch(queries, vec_mat, kk)
                 exact_by_k[kk] = exact_ids
-            _, ids = backend.search_batch(
-                queries, vec_mat if backend.requires_query_vecs else None, kk
-            )
+            try:
+                _, ids = backend.search_batch(
+                    queries, vec_mat if backend.requires_query_vecs else None, kk
+                )
+            except BackendUnavailableError:
+                out[name] = float("nan")
+                continue
             exact_np, ids_np = np.asarray(exact_ids), np.asarray(ids)
             recalls = []
             for i in range(len(queries)):

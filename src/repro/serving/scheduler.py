@@ -42,6 +42,14 @@ class Request:
     # intake/routing wait in wall time via RequestTiming instead — step
     # ticks only advance during decode, so they can't express it.)
     arrived_step: int | None = None
+    # Per-request deadline in wall milliseconds from arrival. The scheduler
+    # has no wall clock of its own (steps only advance during decode), so
+    # the caller stamps the request's observed age (``age_ms``) just before
+    # submit — the streaming engine does, from its run clock — and
+    # admission refuses requests already past their deadline with a typed
+    # ``deadline_exceeded`` rejection. ``None`` disables the check.
+    deadline_ms: float | None = None
+    age_ms: float | None = None
     # filled by the scheduler:
     admitted_step: int | None = None
     finished_step: int | None = None
@@ -67,7 +75,7 @@ class Rejection:
     request_id: int
     query: str
     bundle_name: str
-    reason: str  # "queue_full" | "oversized"
+    reason: str  # "queue_full" | "oversized" | "deadline_exceeded"
     queue_depth: int
     step: int
 
@@ -149,7 +157,15 @@ class ContinuousBatchScheduler:
         :class:`Rejection` saying why (and how deep the queue was) on refuse."""
         self._id_watermark = max(self._id_watermark, req.request_id + 1)
         depth = self.queue_depth()
-        if depth >= self.config.max_queue:
+        if (
+            req.deadline_ms is not None
+            and req.age_ms is not None
+            and req.age_ms > req.deadline_ms
+        ):
+            # already past its deadline at the admission gate: decoding it
+            # would burn slots/pages on an answer nobody is waiting for
+            reason = "deadline_exceeded"
+        elif depth >= self.config.max_queue:
             reason = "queue_full"
         elif self._pages_needed(req) > self.config.n_pages:
             # can never be admitted even on an empty pool: accepting it would

@@ -36,6 +36,7 @@ sequential loop at every (pipeline_depth, retrieval_workers) setting.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -47,9 +48,16 @@ import numpy as np
 
 from repro.core.telemetry import QueryRecord
 from repro.core.utility import realized_utility
+from repro.retrieval.faults import RetrievalFault
 from repro.retrieval.tokenizer import lexical_overlap
 from repro.serving.billing import TokenBill, bill_query
 from repro.serving.generator import build_prompt
+from repro.serving.resilience import (
+    BackendUnavailableError,
+    ResilienceEvents,
+    degradation_ladder,
+)
+from repro.training.fault_tolerance import HeartbeatMonitor
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (engine imports us)
     from repro.serving.engine import EngineResponse, RAGEngine
@@ -74,6 +82,10 @@ class Execution:
     bill: TokenBill
     latency_ms: float
     quality: float
+    # resilience outcome: True when this answer came off-plan via the
+    # degradation ladder (fallback_depth = rungs walked to reach it)
+    degraded: bool = False
+    fallback_depth: int = 0
 
 
 @dataclasses.dataclass
@@ -111,6 +123,14 @@ class RetrievedBatch:
     # per-backend cache hit/miss/eviction deltas incurred by this batch's
     # searches (CachedBackend-wrapped backends only; empty otherwise)
     cache_events: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
+    # degradation-ladder outcomes: position → bundle index actually served
+    # (only positions whose planned backend was unavailable) and the number
+    # of ladder rungs walked to get there
+    fallback_bundle: dict[int, int] = dataclasses.field(default_factory=dict)
+    fallback_depth: dict[int, int] = dataclasses.field(default_factory=dict)
+    # typed resilience counters for this batch's searches (retries, timeouts,
+    # breaker transitions, ladder outcomes — serving/resilience.py)
+    resilience: ResilienceEvents = dataclasses.field(default_factory=ResilienceEvents)
 
 
 @dataclasses.dataclass
@@ -142,6 +162,7 @@ class DecodedBatch:
     search_calls: int  # retrieve-stage calls; finalize adds replay searches
     search_calls_by_backend: dict[str, int] = dataclasses.field(default_factory=dict)
     cache_events: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
+    resilience: ResilienceEvents = dataclasses.field(default_factory=ResilienceEvents)
 
     @property
     def routed(self) -> RoutedBatch:
@@ -237,6 +258,8 @@ def make_record(
         retrieval_confidence=ex.confidence,
         complexity_score=complexity,
         index_embedding_tokens=engine.ledger.index_embedding_tokens if qid == 0 else 0,
+        degraded=ex.degraded,
+        fallback_depth=ex.fallback_depth,
     )
 
 
@@ -307,6 +330,132 @@ def route(
 # --------------------------------------------------------------------------- #
 # Stage 2: retrieve (pure)                                                     #
 # --------------------------------------------------------------------------- #
+def _search_group(
+    engine: "RAGEngine",
+    bname: str,
+    k: int,
+    idxs: list[int],
+    routed: RoutedBatch,
+    cache_events: dict[str, dict[str, int]],
+    events: ResilienceEvents,
+) -> tuple[np.ndarray, np.ndarray]:
+    """One batched search for positions ``idxs`` on backend ``bname``.
+
+    Prefers the backend's telemetry-bearing entry points —
+    ``search_batch_resilient`` (ResilientBackend: resilience events + inner
+    cache delta) over ``search_batch_stats`` (CachedBackend: cache delta)
+    over plain ``search_batch`` — and folds the deltas into the batch
+    accumulators. Raises the :class:`~repro.retrieval.faults.RetrievalFault`
+    family when the backend is unhealthy (events already merged).
+    """
+    backend = engine.backends[bname]
+    qtexts = [routed.queries[i] for i in idxs]
+    qmat = (
+        jnp.asarray(np.stack([routed.query_vecs[i] for i in idxs]))
+        if backend.requires_query_vecs
+        else None
+    )
+    res_fn = getattr(backend, "search_batch_resilient", None)
+    if res_fn is not None:
+        try:
+            scores, ids, ev, cdelta = res_fn(qtexts, qmat, k)
+        except BackendUnavailableError as err:
+            events.add(err.events)
+            raise
+        events.add(ev)
+        merge_cache_events(cache_events, cdelta)
+    else:
+        stats_fn = getattr(backend, "search_batch_stats", None)
+        if stats_fn is not None:
+            scores, ids, delta = stats_fn(qtexts, qmat, k)
+            merge_cache_events(cache_events, {bname: delta.as_dict()})
+        else:
+            scores, ids = backend.search_batch(qtexts, qmat, k)
+    return np.asarray(scores, np.float32), np.asarray(ids, np.int32)
+
+
+def _degrade_group(
+    engine: "RAGEngine",
+    routed: RoutedBatch,
+    idxs: list[int],
+    retrievals: dict[int, tuple[np.ndarray, np.ndarray]],
+    fallback_bundle: dict[int, int],
+    fallback_depth: dict[int, int],
+    cache_events: dict[str, dict[str, int]],
+    events: ResilienceEvents,
+    calls_by: dict[str, int],
+) -> int:
+    """Walk the degradation ladder for one failed (backend, k) group.
+
+    Positions are regrouped by their routed (guarded) bundle — groups can
+    merge bundles that share (backend, k) — and each sub-group walks
+    :func:`~repro.serving.resilience.degradation_ladder` until a rung
+    answers. Retrieval rungs re-enter the normal search path (so a wrapped
+    rung backend gets its own retry/breaker discipline, and its cache/
+    resilience deltas land in the same accumulators); the terminal
+    retrieval-free rung cannot fail, so every position resolves — tagged in
+    ``fallback_bundle``/``fallback_depth`` and counted as ``degraded``.
+
+    Ladder rungs never embed: ``route`` confined embedding to the
+    route/finalize threads, so a rung requiring query vectors is usable only
+    when the original plan already embedded these positions (always true
+    when the failed backend was itself a vector backend).
+
+    Returns the number of successful rung searches (the caller's
+    ``search_calls`` delta). Raises :class:`BackendUnavailableError` only if
+    the catalog has no viable rung at all — no retrieval-free bundle.
+    """
+    calls = 0
+    by_bundle: dict[int, list[int]] = {}
+    for i in idxs:
+        by_bundle.setdefault(routed.guarded[i], []).append(i)
+    for bidx, sub in by_bundle.items():
+        depth_reached = 0
+        resolved = False
+        for depth, cand_idx in enumerate(degradation_ladder(engine.catalog, bidx), start=1):
+            depth_reached = depth
+            cand = engine.catalog[cand_idx]
+            if cand.skip_retrieval:
+                for i in sub:
+                    fallback_bundle[i] = cand_idx
+                    fallback_depth[i] = depth
+                events.fallbacks += 1
+                resolved = True
+                break
+            cand_backend = engine.backends.get(cand.backend)
+            if cand_backend is None:
+                continue
+            if cand_backend.requires_query_vecs and any(
+                i not in routed.query_vecs for i in sub
+            ):
+                continue
+            events.fallbacks += 1
+            try:
+                scores_np, ids_np = _search_group(
+                    engine, cand.backend, cand.top_k, sub, routed, cache_events, events
+                )
+            except RetrievalFault:
+                continue
+            calls += 1
+            calls_by[cand.backend] = calls_by.get(cand.backend, 0) + 1
+            for r, i in enumerate(sub):
+                retrievals[i] = (scores_np[r], ids_np[r])
+                fallback_bundle[i] = cand_idx
+                fallback_depth[i] = depth
+            resolved = True
+            break
+        if not resolved:
+            raise BackendUnavailableError(
+                f"bundle {engine.catalog[bidx].name!r} has no viable degradation "
+                "rung (catalog lacks a retrieval-free bundle and every retrieval "
+                "rung is unavailable)",
+                events=events,
+            )
+        events.degraded += len(sub)
+        events.fallback_depth_total += depth_reached * len(sub)
+    return calls
+
+
 def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
     """Backend-grouped search: one batched ``search_batch`` call per
     (backend, k) group — the dense groups hit the compiled MIPS closures,
@@ -319,29 +468,45 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
     Cache-wrapped backends report their per-call hit/miss/eviction deltas
     through the artifact's ``cache_events`` (the counters the streaming
     summary surfaces as ``backend_cache``).
+
+    Fault tolerance: a group whose backend raises the
+    :class:`~repro.retrieval.faults.RetrievalFault` family (a
+    :class:`~repro.serving.resilience.ResilientBackend` that exhausted its
+    retries, an open circuit breaker, or a raw injected fault) does **not**
+    kill the micro-batch — its positions walk the catalog-derived
+    degradation ladder (:func:`_degrade_group`) and resolve to a cheaper
+    backend, a shallower depth, or the retrieval-free direct bundle, tagged
+    ``degraded`` in the artifact. Any *other* exception type is a
+    programming error and propagates (the pipeline wraps it in
+    :class:`StageError`).
     """
     retrievals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
     calls = 0
     calls_by: dict[str, int] = {}
     cache_events: dict[str, dict[str, int]] = {}
+    events = ResilienceEvents()
+    fallback_bundle: dict[int, int] = {}
+    fallback_depth: dict[int, int] = {}
     for (bname, k), idxs in routed.retrieval_plan.items():
-        backend = engine.backends[bname]
-        qtexts = [routed.queries[i] for i in idxs]
-        qmat = (
-            jnp.asarray(np.stack([routed.query_vecs[i] for i in idxs]))
-            if backend.requires_query_vecs
-            else None
-        )
-        stats_fn = getattr(backend, "search_batch_stats", None)
-        if stats_fn is not None:
-            scores, ids, delta = stats_fn(qtexts, qmat, k)
-            merge_cache_events(cache_events, {bname: delta.as_dict()})
-        else:
-            scores, ids = backend.search_batch(qtexts, qmat, k)
+        try:
+            scores_np, ids_np = _search_group(
+                engine, bname, k, idxs, routed, cache_events, events
+            )
+        except RetrievalFault:
+            calls += _degrade_group(
+                engine,
+                routed,
+                idxs,
+                retrievals,
+                fallback_bundle,
+                fallback_depth,
+                cache_events,
+                events,
+                calls_by,
+            )
+            continue
         calls += 1
         calls_by[bname] = calls_by.get(bname, 0) + 1
-        scores_np = np.asarray(scores, np.float32)
-        ids_np = np.asarray(ids, np.int32)
         for r, i in enumerate(idxs):
             retrievals[i] = (scores_np[r], ids_np[r])
     return RetrievedBatch(
@@ -350,6 +515,9 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
         search_calls=calls,
         search_calls_by_backend=calls_by,
         cache_events=cache_events,
+        fallback_bundle=fallback_bundle,
+        fallback_depth=fallback_depth,
+        resilience=events,
     )
 
 
@@ -358,7 +526,14 @@ def retrieve(engine: "RAGEngine", routed: RoutedBatch) -> RetrievedBatch:
 # --------------------------------------------------------------------------- #
 def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
     """Post-retrieval guardrails (low-confidence demotion), passage payload
-    fetch, and prompt construction. Pure given the artifact."""
+    fetch, and prompt construction. Pure given the artifact.
+
+    Positions the retrieve stage degraded assemble under their *fallback*
+    bundle (``retrieved.fallback_bundle``): passages come from the rung
+    backend that actually answered, and the confidence guardrail applies at
+    that bundle — a degraded answer still gets demoted to direct inference
+    when its fallback retrieval looks unconvincing.
+    """
     routed = retrieved.routed
     final_bundle: list[int] = []
     passages_all: list[list[str]] = []
@@ -366,7 +541,7 @@ def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
     prompts: list[str] = []
     embedded: list[bool] = []
     for i in range(routed.n):
-        bundle_idx = routed.guarded[i]
+        bundle_idx = retrieved.fallback_bundle.get(i, routed.guarded[i])
         bundle = engine.catalog[bundle_idx]
         passages: list[str] = []
         confidence = float("nan")
@@ -443,6 +618,8 @@ def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
             bill=bill,
             latency_ms=latency_ms,
             quality=quality,
+            degraded=i in admitted.retrieved.fallback_bundle,
+            fallback_depth=admitted.retrieved.fallback_depth.get(i, 0),
         )
         executions.append(ex)
         exec_cache[(i, routed.guarded[i])] = ex
@@ -453,6 +630,7 @@ def decode(engine: "RAGEngine", admitted: AdmittedBatch) -> DecodedBatch:
         search_calls=admitted.retrieved.search_calls,
         search_calls_by_backend=dict(admitted.retrieved.search_calls_by_backend),
         cache_events={k: dict(v) for k, v in admitted.retrieved.cache_events.items()},
+        resilience=dataclasses.replace(admitted.retrieved.resilience),
     )
 
 
@@ -509,6 +687,7 @@ def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse
                     for bname, cnt in sub.search_calls_by_backend.items():
                         by[bname] = by.get(bname, 0) + cnt
                     merge_cache_events(decoded.cache_events, sub.cache_events)
+                    decoded.resilience.add(sub.resilience)
                     decoded.exec_cache[(i, guarded)] = ex
                 executions[i] = ex
             sim.log(make_record(engine, qid0 + i, queries[i], executions[i], 0.0, 0.0))
@@ -559,6 +738,29 @@ def finalize(engine: "RAGEngine", decoded: DecodedBatch) -> "list[EngineResponse
 # --------------------------------------------------------------------------- #
 # Pipeline executor                                                            #
 # --------------------------------------------------------------------------- #
+class StageError(RuntimeError):
+    """A micro-batch died in the middle stages (retrieve/assemble/decode).
+
+    Typed propagation for worker-thread exceptions: instead of a raw
+    backend traceback surfacing from a ``Future`` (or worse, an
+    unidentifiable batch silently wedging a drain loop), the pipeline wraps
+    the failure with the offending micro-batch's identity — its submission
+    index and qid range — and chains the original exception as
+    ``__cause__``. Fault-family errors never get here on a catalog with a
+    direct bundle (the retrieve stage degrades them); StageError means a
+    bug, not weather.
+    """
+
+    def __init__(self, batch_index: int, qid0: int, n: int, cause: BaseException):
+        super().__init__(
+            f"pipeline micro-batch {batch_index} (qids {qid0}..{qid0 + n - 1}) "
+            f"failed in middle stages: {cause!r}"
+        )
+        self.batch_index = batch_index
+        self.qid0 = qid0
+        self.n = n
+
+
 class StagePipeline:
     """N-deep micro-batch executor over the five stages.
 
@@ -575,7 +777,15 @@ class StagePipeline:
     the finalized batch immediately (the old ``--no-overlap`` behavior).
     """
 
-    def __init__(self, engine: "RAGEngine", *, depth: int = 2, workers: int = 1):
+    def __init__(
+        self,
+        engine: "RAGEngine",
+        *,
+        depth: int = 2,
+        workers: int = 1,
+        worker_timeout_s: float = 60.0,
+        clock=time.monotonic,
+    ):
         self.engine = engine
         self.depth = max(1, int(depth))
         self.workers = max(1, int(workers)) if self.depth > 1 else 0
@@ -587,9 +797,32 @@ class StagePipeline:
         self.retrieve_calls_by_backend: dict[str, int] = {}
         # per-backend cache hit/miss/eviction totals (CachedBackend only)
         self.cache_events: dict[str, dict[str, int]] = {}
+        # typed resilience totals (retries/timeouts/breaker/ladder outcomes)
+        self.resilience = ResilienceEvents()
+        # per-micro-batch worker liveness: each worker beats at batch start
+        # and end, so a worker stuck *inside* a batch for > worker_timeout_s
+        # shows up in stalled_workers() (training/fault_tolerance reuse)
+        self.heartbeats = HeartbeatMonitor([], timeout_s=worker_timeout_s, clock=clock)
+        self._busy: dict[str, int] = {}  # worker id → batch index in hand
 
-    def _middle(self, routed: RoutedBatch) -> DecodedBatch:
-        return decode(self.engine, assemble(self.engine, retrieve(self.engine, routed)))
+    def _middle(self, routed: RoutedBatch, batch_index: int) -> DecodedBatch:
+        wid = f"worker-{threading.get_ident()}"
+        self.heartbeats.beat(wid)
+        self._busy[wid] = batch_index
+        try:
+            return decode(self.engine, assemble(self.engine, retrieve(self.engine, routed)))
+        except BaseException as err:
+            raise StageError(batch_index, routed.qid0, routed.n, err) from err
+        finally:
+            self._busy.pop(wid, None)
+            self.heartbeats.beat(wid)
+
+    def stalled_workers(self) -> list[str]:
+        """Workers holding a micro-batch whose last beat is older than
+        ``worker_timeout_s`` — the wedged-shard signal the streaming summary
+        surfaces. Idle workers never report (no batch in hand, no deadline)."""
+        dead = set(self.heartbeats.dead_workers())
+        return sorted(w for w in list(self._busy) if w in dead)
 
     @property
     def in_flight(self) -> int:
@@ -615,12 +848,13 @@ class StagePipeline:
                 f"(depth {self.depth}); poll() before submitting more"
             )
         routed = route(self.engine, queries, references)
+        batch_index = self.stage_batches
         self.stage_batches += 1
         work: Future | DecodedBatch
         if self._pool is not None:
-            work = self._pool.submit(self._middle, routed)
+            work = self._pool.submit(self._middle, routed, batch_index)
         else:
-            work = self._middle(routed)
+            work = self._middle(routed, batch_index)
         self._inflight.append((tag, work))
 
     def poll(self) -> "tuple[object, list[EngineResponse]] | None":
@@ -635,6 +869,10 @@ class StagePipeline:
         if isinstance(work, Future):
             if not work.done():
                 return None
+            # a worker exception re-raises here as the typed StageError the
+            # _middle wrapper attached (batch index + qid range + cause) —
+            # the head entry stays queued, so the failure is re-observable,
+            # never silently dropped
             decoded = work.result()
         else:
             decoded = work
@@ -646,6 +884,7 @@ class StagePipeline:
                 self.retrieve_calls_by_backend.get(bname, 0) + n
             )
         merge_cache_events(self.cache_events, decoded.cache_events)
+        self.resilience.add(decoded.resilience)
         return tag, responses
 
     def wait_head(self, timeout: float) -> None:

@@ -63,6 +63,14 @@ class StreamConfig:
     # depth 1 regardless of pipeline_depth, matching the old --no-overlap.
     overlap: bool = True
     idle_sleep_s: float = 0.0002  # nothing to decode, nothing due: yield
+    # Resilience knobs (serving/resilience.py). request_deadline_ms: every
+    # admitted request carries this wall-clock deadline from its arrival;
+    # requests already past it at admission are refused with a typed
+    # `deadline_exceeded` rejection. worker_timeout_s: a pipeline worker
+    # stuck inside one micro-batch longer than this surfaces in
+    # summary()["resilience"]["stalled_workers"].
+    request_deadline_ms: float | None = None
+    worker_timeout_s: float = 60.0
 
     @property
     def effective_depth(self) -> int:
@@ -108,6 +116,13 @@ class StreamResult:
     # serial runs, telemetry under concurrency (results never change, only
     # which micro-batch pays the miss)
     backend_cache: dict[str, dict[str, int]] = dataclasses.field(default_factory=dict)
+    # Resilience telemetry (serving/resilience.py): aggregated retry/timeout/
+    # breaker/fallback counters from every retrieve stage (incl. replay),
+    # breaker state per ResilientBackend-wrapped backend at run end, and any
+    # workers that exceeded StreamConfig.worker_timeout_s mid-micro-batch.
+    resilience: dict[str, int] = dataclasses.field(default_factory=dict)
+    breaker_states: dict[str, str] = dataclasses.field(default_factory=dict)
+    stalled_workers: list[str] = dataclasses.field(default_factory=list)
 
     @property
     def records(self) -> list:
@@ -154,6 +169,11 @@ class StreamResult:
             "backend_cache": {
                 b: dict(ev) for b, ev in sorted(self.backend_cache.items())
             },
+            "resilience": {
+                **self.resilience,
+                "breaker_state": dict(sorted(self.breaker_states.items())),
+                "stalled_workers": sorted(self.stalled_workers),
+            },
         }
 
 
@@ -194,13 +214,17 @@ class StreamingEngine:
         cfg = self.config
         sched = self.scheduler
         pipeline = StagePipeline(
-            self.engine, depth=cfg.effective_depth, workers=cfg.retrieval_workers
+            self.engine,
+            depth=cfg.effective_depth,
+            workers=cfg.retrieval_workers,
+            worker_timeout_s=cfg.worker_timeout_s,
         )
         intake: deque[Arrival] = deque()
         responses: list[EngineResponse] = []
         rejections: list[Rejection] = []
         timings: dict[int, RequestTiming] = {}
         step_history: list[dict] = []
+        stalled_seen: set[str] = set()
         ev = 0
         t0 = time.perf_counter()
 
@@ -235,6 +259,7 @@ class StreamingEngine:
 
                 # (2) harvest finished micro-batches → finalize + admission
                 harvest()
+                stalled_seen.update(pipeline.stalled_workers())
 
                 # (3) launch the next routing micro-batch if there's room
                 if intake and pipeline.can_submit():
@@ -284,6 +309,16 @@ class StreamingEngine:
         finally:
             pipeline.shutdown()
 
+        # Breaker state per resilient backend at run end — lazy imports keep
+        # the zero-resilience path free of the dependency at call time.
+        from repro.serving.resilience import ResilientBackend
+
+        breaker_states = {
+            name: b.breaker.state
+            for name, b in self.engine.backends.items()
+            if isinstance(b, ResilientBackend)
+        }
+
         return StreamResult(
             responses=responses,
             rejections=rejections,
@@ -297,6 +332,9 @@ class StreamingEngine:
             retrieve_calls=pipeline.retrieve_calls,
             retrieve_calls_by_backend=dict(pipeline.retrieve_calls_by_backend),
             backend_cache={k: dict(v) for k, v in pipeline.cache_events.items()},
+            resilience=pipeline.resilience.as_dict(),
+            breaker_states=breaker_states,
+            stalled_workers=sorted(stalled_seen),
         )
 
     # ------------------------------------------------------------------ #
@@ -313,8 +351,14 @@ class StreamingEngine:
         sched = self.scheduler
         reqs = sched.make_requests([r.record for r in stage_responses])
         responses.extend(stage_responses)
+        deadline_ms = self.config.request_deadline_ms
         for arrival, req in zip(batch, reqs):
             tm = RequestTiming(arrival_s=arrival.time_s, routed_s=now)
+            if deadline_ms is not None:
+                # the scheduler has no wall clock: stamp observed age (run
+                # clock minus arrival) so admission can refuse late requests
+                req.deadline_ms = deadline_ms
+                req.age_ms = max(0.0, (now - arrival.time_s) * 1e3)
             rej = sched.try_submit(req)
             if rej is not None:
                 rejections.append(rej)

@@ -19,7 +19,8 @@ SERVING_METRICS = GATED_METRICS["BENCH_serving.json"]
 STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 
-def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53):
+def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
+             res_completed=28, res_degraded=12, res_rejected=0, res_opens=1):
     return {
         "benchmark": "paper_28_queries",
         "batched_qps": 500.0,  # telemetry, ungated
@@ -30,6 +31,13 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53):
             "hits": cache_hits,
             "misses": cache_misses,
             "evictions": 21,  # telemetry, ungated
+        },
+        "resilience": {
+            "completed": res_completed,
+            "degraded": res_degraded,
+            "rejected": res_rejected,
+            "breaker_opens": res_opens,
+            "retries": 7,  # telemetry, ungated
         },
     }
 
@@ -104,6 +112,25 @@ def test_cache_counters_are_exact_both_directions():
     assert len(fails) == 1 and "cache.hits" in fails[0]
     # unchanged counters pass
     assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
+
+
+def test_resilience_counters_are_exact_both_directions():
+    """The chaos cell's counters are a deterministic seeded schedule:
+    any drift — a lost answer, a different degradation count, an extra
+    breaker trip, or a *rosier* run — means the fault schedule or the
+    recovery path structurally changed."""
+    # a lost answer under faults: the availability contract broke
+    fails = compare(_serving(), _serving(res_completed=27),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "resilience.completed" in fails[0]
+    # FEWER degradations also fails: the seeded schedule silently moved
+    fails = compare(_serving(), _serving(res_degraded=0, res_opens=0),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("exact" in f for f in fails)
+    # faults must degrade, never reject
+    fails = compare(_serving(), _serving(res_rejected=3),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "resilience.rejected" in fails[0]
 
 
 def test_gate_fails_on_counter_regressions(tmp_path):

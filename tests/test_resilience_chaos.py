@@ -1,0 +1,153 @@
+"""Seeded chaos scenarios: the canonical fault schedule end to end.
+
+Marked ``chaos`` — tier-1 stays fault-free; CI runs this suite in its own
+job (``pytest -m chaos``). Every scenario drives real wall-clock stalls and
+timeouts through the full serving path and asserts the availability
+contract: **100% of offered queries answered, zero unhandled exceptions**,
+degraded answers tagged and excluded from calibration.
+
+The canonical schedule (retrieval/faults.CANONICAL_FAULT_PROFILE +
+serving/resilience.CANONICAL_RESILIENCE) is the same one the
+``bench_resilience`` gate cell runs: 30% transient failures plus a
+deadline-busting stall every 6th dense call, against a 250ms timeout,
+2 seeded retries, and a 3-failure breaker whose cooldown outlasts the run.
+"""
+
+import pytest
+
+from repro.core.bundles import make_catalog
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import CANONICAL_FAULT_PROFILE, FaultProfile, FaultyBackend, wrap_faulty
+from repro.retrieval.cache import wrap_cached
+from repro.retrieval.sharded import ShardedBackend
+from repro.serving.engine import build_paper_engine
+from repro.serving.resilience import CANONICAL_RESILIENCE, wrap_resilient
+from repro.serving.streaming import StreamConfig, serve_stream
+
+pytestmark = pytest.mark.chaos
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+
+def _chaos_engine(catalog_preset: str = "paper", *, shards: int = 1, cache: int = 0):
+    """Paper engine with the canonical fault schedule on its dense backend,
+    resilience-wrapped — the bench_resilience cell's exact stack, optionally
+    sharded/cached underneath the faults."""
+    catalog = make_catalog(catalog_preset)
+    eng = build_paper_engine(make_policy("router_default", catalog=catalog))
+    if shards > 1:
+        eng.backends["dense"] = ShardedBackend.from_dense(eng.index, n_shards=shards)
+    eng.backends = wrap_faulty(eng.backends, {"dense": CANONICAL_FAULT_PROFILE})
+    if cache:
+        eng.backends = wrap_cached(eng.backends, capacity=cache)
+    eng.backends = wrap_resilient(eng.backends, CANONICAL_RESILIENCE)
+    return eng
+
+
+def test_canonical_schedule_serial_full_availability():
+    """The gate cell's scenario: deterministic counters, 100% completion."""
+    eng = _chaos_engine()
+    result = serve_stream(
+        eng, QUERIES, REFS, config=StreamConfig(pipeline_depth=1, overlap=False)
+    )
+    s = result.summary()
+    assert s["completed"] == len(QUERIES)  # availability contract
+    assert s["rejected"] == 0
+    res = s["resilience"]
+    # bit-stable under serial call order — the committed bench baseline
+    assert res["breaker_opens"] == 1
+    assert res["degraded"] == 12
+    degraded = [r for r in result.records if r.degraded]
+    assert len(degraded) == res["degraded"]
+    assert all(r.bundle == "direct_llm" for r in degraded)  # ladder terminal
+    assert all(r.fallback_depth >= 1 for r in degraded)
+    assert res["breaker_state"] == {"dense": "open"}  # cooldown outlasts run
+
+
+def test_canonical_schedule_counters_stable_across_runs():
+    outcomes = []
+    for _ in range(2):
+        eng = _chaos_engine()
+        result = serve_stream(
+            eng, QUERIES, REFS, config=StreamConfig(pipeline_depth=1, overlap=False)
+        )
+        res = result.summary()["resilience"]
+        outcomes.append(
+            (result.summary()["completed"], res["degraded"], res["breaker_opens"],
+             res["retries"], res["timeouts"], res["failures"], res["short_circuits"])
+        )
+    assert outcomes[0] == outcomes[1]
+
+
+@pytest.mark.parametrize("depth,workers", [(2, 1), (2, 2), (4, 2)])
+def test_canonical_schedule_concurrent_pipelines_complete(depth, workers):
+    """Under concurrency the fault *interleaving* is nondeterministic, but
+    the availability contract is not: every offered query must drain with
+    zero unhandled exceptions at every pipeline shape."""
+    eng = _chaos_engine()
+    result = serve_stream(
+        eng, QUERIES, REFS,
+        config=StreamConfig(pipeline_depth=depth, retrieval_workers=workers),
+    )
+    s = result.summary()
+    assert s["completed"] == len(QUERIES)
+    assert s["rejected"] == 0
+    assert len(result.records) == len(QUERIES)
+    degraded = [r for r in result.records if r.degraded]
+    assert all(r.bundle == "direct_llm" for r in degraded)
+
+
+def test_canonical_schedule_extended_catalog_ladders_sideways():
+    """On the extended catalog a dead dense backend degrades to *other*
+    backends (ivf/bm25) before direct inference — and healthy backends keep
+    serving their own bundles untouched."""
+    eng = _chaos_engine("extended")
+    result = serve_stream(
+        eng, QUERIES, REFS, config=StreamConfig(pipeline_depth=1, overlap=False)
+    )
+    s = result.summary()
+    assert s["completed"] == len(QUERIES)
+    assert s["rejected"] == 0
+    degraded = [r for r in result.records if r.degraded]
+    if degraded:  # dense bundles that failed must land on non-dense rungs
+        dense_bundles = {b.name for b in eng.catalog if b.backend == "dense" and not b.skip_retrieval}
+        assert all(r.bundle not in dense_bundles for r in degraded)
+
+
+def test_canonical_schedule_composes_with_cache_and_shards():
+    """Faults under a cache under resilience, over a sharded corpus: the
+    full decorator stack still answers everything."""
+    eng = _chaos_engine(shards=3, cache=64)
+    result = serve_stream(
+        eng, QUERIES, REFS, config=StreamConfig(pipeline_depth=1, overlap=False)
+    )
+    s = result.summary()
+    assert s["completed"] == len(QUERIES)
+    assert s["rejected"] == 0
+    # the cache observability channel survives the full stack
+    assert "dense" in s["backend_cache"]
+
+
+def test_total_blackout_all_backends_down_still_answers():
+    """Every retrieval backend dead: the ladder's terminal rung (direct
+    inference) carries the entire workload."""
+    eng = build_paper_engine(make_policy("router_default"))
+    eng.backends = wrap_faulty(
+        eng.backends,
+        {name: FaultProfile(failure_rate=1.0, seed=1) for name in eng.backends},
+    )
+    eng.backends = wrap_resilient(eng.backends, CANONICAL_RESILIENCE)
+    result = serve_stream(
+        eng, QUERIES, REFS, config=StreamConfig(pipeline_depth=1, overlap=False)
+    )
+    s = result.summary()
+    assert s["completed"] == len(QUERIES)
+    degraded = [r for r in result.records if r.degraded]
+    assert all(r.bundle == "direct_llm" for r in degraded)
+    # forced answers never refine the EMA priors
+    for rec in degraded:
+        assert eng.telemetry.stats[rec.strategy].count <= sum(
+            1 for r in result.records if not r.degraded and r.strategy == rec.strategy
+        )
