@@ -29,6 +29,12 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     keyed to the backend call index and the cell is single-threaded, so
     any drift means the retry/breaker state machine or the degradation
     ladder changed behaviour — docs/resilience.md).
+  - ``sharding_scaling.gate.{device_s4,threads_s4}.*`` — the scaling
+    sweep's deterministic work counters (per-shard search executions, top-k
+    merge invocations) and bit-identity booleans for the S=4 arms
+    (*exact*, band 0: the counters are pure functions of the batch shape
+    and shard count; the sweep's qps columns are telemetry only —
+    docs/retrieval.md#device-true-sharding).
 * ``BENCH_streaming.json`` (``gate`` section = the single-threaded
   burst-serial cell, whose counters are bit-stable run-to-run)
   - ``gate.completed`` — every request must still drain.
@@ -134,6 +140,47 @@ GATED_METRICS: dict[str, list[Metric]] = {
             "resilience.breaker_opens",
             "chaos-cell circuit-breaker opens",
             higher_is_better=False,
+            exact=True,
+        ),
+        # band 0 (exact): the scaling-sweep gate counters are pure functions
+        # of (n_queries, query-chunk width, S) — per-shard search executions
+        # and top-k merge invocations for one 32-query batch on the S=4
+        # arms. Any drift means the dispatch structure changed (extra
+        # chunks, a lost fusion, a second merge pass) — never noise. The
+        # sweep's qps columns stay ungated telemetry: they come from
+        # CPU-emulated devices and swing with the host.
+        Metric(
+            "sharding_scaling.gate.device_s4.shard_searches",
+            "device-mesh S=4 per-shard search executions (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "sharding_scaling.gate.device_s4.merges",
+            "device-mesh S=4 on-device top-k merges (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "sharding_scaling.gate.device_s4.identical",
+            "device-mesh S=4 bit-identity vs unsharded DenseIndex",
+            exact=True,
+        ),
+        Metric(
+            "sharding_scaling.gate.threads_s4.shard_searches",
+            "host-threads S=4 per-shard search calls (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "sharding_scaling.gate.threads_s4.merges",
+            "host-threads S=4 pairwise top-k merges (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "sharding_scaling.gate.threads_s4.identical",
+            "host-threads S=4 bit-identity vs unsharded DenseIndex",
             exact=True,
         ),
     ],

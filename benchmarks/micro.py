@@ -480,6 +480,90 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
     ]
 
 
+def bench_sharding_scaling(
+    artifact_path: str | None = None, *, million: bool = False
+) -> list[tuple[str, float, str]]:
+    """Docs × shards scaling sweep for ``BENCH_serving.json`` (subprocess).
+
+    Spawns ``benchmarks/sharding_sweep.py`` in its own interpreter with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+    ``execution="device"`` arms get a real 4-device mesh without polluting
+    this process (jax fixes its device count at first import). The sweep
+    compares unsharded :class:`DenseBackend` vs device- and threads-
+    execution ``ShardedBackend`` on seeded synthetic corpora.
+
+    Merged under ``sharding_scaling``: per-cell qps numbers are telemetry
+    (CPU-emulated devices), while ``gate.{device_s4,threads_s4}`` carries
+    the deterministic per-shard search / merge counters and bit-identity
+    booleans that benchmarks/check_regression.py exact-gates. ``million``
+    adds the 10^6-doc column (the full-harness configuration; the smoke
+    grid stops at 10^5 to keep CI fast) — at that scale the single fused
+    device dispatch beats the unsharded per-chunk path on wall clock too.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    from benchmarks.sharding_sweep import DEFAULT_DOCS
+
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = f"{flags} --xla_force_host_platform_device_count=4".strip()
+    # forced host devices only exist on the CPU platform; also keeps jax
+    # from stalling in TPU-backend probing on TPU-less containers
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    with tempfile.TemporaryDirectory() as tmp:
+        out_json = os.path.join(tmp, "sweep.json")
+        cmd = [
+            sys.executable, "-m", "benchmarks.sharding_sweep",
+            "--docs", DEFAULT_DOCS, "--json", out_json,
+        ]
+        if million:
+            cmd.append("--million")
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"sharding sweep failed ({proc.returncode}):\n{proc.stderr[-2000:]}"
+            )
+        with open(out_json) as f:
+            cell = json.load(f)
+
+    if artifact_path and os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            artifact = json.load(f)
+        artifact["sharding_scaling"] = cell
+        with open(artifact_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+
+    acc = cell.get("acceptance") or {}
+    rows = []
+    for docs, c in cell["cells"].items():
+        d4 = c["device"].get("4", {})
+        qps = d4.get("qps")
+        rows.append(
+            (
+                f"sharded_device4_{docs}docs",
+                1e6 * cell["n_queries"] / qps if qps else 0.0,
+                f"{qps or float('nan'):.0f} q/s "
+                f"({d4.get('speedup_vs_unsharded') or float('nan'):.2f}x unsharded, "
+                f"identical={d4.get('identical')})",
+            )
+        )
+    rows.append(
+        (
+            "sharded_scaling_acceptance",
+            0.0,
+            f"{acc.get('docs')}docs S={acc.get('shards')} device "
+            f"{(acc.get('speedup_vs_unsharded') or float('nan')):.2f}x unsharded",
+        )
+    )
+    return rows
+
+
 def bench_resilience(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
     """Seeded chaos cell for ``BENCH_serving.json`` (gated, band 0).
 
@@ -504,18 +588,23 @@ def bench_resilience(artifact_path: str | None = None) -> list[tuple[str, float,
 
     from repro.core.policies import make_policy
     from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
-    from repro.retrieval.faults import CANONICAL_FAULT_PROFILE, FaultyBackend
+    from repro.retrieval import BackendStackConfig
+    from repro.retrieval.faults import CANONICAL_FAULT_PROFILE
     from repro.serving.engine import build_paper_engine
-    from repro.serving.resilience import CANONICAL_RESILIENCE, wrap_resilient
+    from repro.serving.resilience import CANONICAL_RESILIENCE
     from repro.serving.streaming import StreamConfig, serve_stream
 
     queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
     n = len(queries)
 
-    eng = build_paper_engine(make_policy("router_default"))
-    faulty = FaultyBackend(eng.backends["dense"], CANONICAL_FAULT_PROFILE)
-    eng.backends["dense"] = faulty
-    eng.backends = wrap_resilient(eng.backends, CANONICAL_RESILIENCE)
+    eng = build_paper_engine(
+        make_policy("router_default"),
+        stack=BackendStackConfig(
+            fault_profiles={"dense": CANONICAL_FAULT_PROFILE},
+            resilience=CANONICAL_RESILIENCE,
+        ),
+    )
+    faulty = eng.backends["dense"].inner  # counters read below
 
     t0 = time.perf_counter()
     result = serve_stream(
@@ -600,6 +689,7 @@ def main() -> None:
          lambda: bench_catalog_comparison(serving_artifact),
          lambda: bench_cache_sharding(serving_artifact),
          lambda: bench_resilience(serving_artifact),
+         lambda: bench_sharding_scaling(serving_artifact),
          lambda: bench_streaming(streaming_artifact)]
         if args.smoke
         else [bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine,
@@ -607,6 +697,7 @@ def main() -> None:
               lambda: bench_catalog_comparison(serving_artifact),
               lambda: bench_cache_sharding(serving_artifact),
               lambda: bench_resilience(serving_artifact),
+              lambda: bench_sharding_scaling(serving_artifact, million=True),
               lambda: bench_streaming(streaming_artifact)]
     )
     for section in sections:

@@ -34,8 +34,10 @@ def main() -> None:
             bench_engine,
             bench_engine_batched,
             bench_kernel_oracles,
+            bench_resilience,
             bench_retrieval,
             bench_routing,
+            bench_sharding_scaling,
             bench_streaming,
         )
 
@@ -49,6 +51,8 @@ def main() -> None:
             lambda: bench_engine_batched(serving_artifact),
             lambda: bench_catalog_comparison(serving_artifact),
             lambda: bench_cache_sharding(serving_artifact),
+            lambda: bench_resilience(serving_artifact),
+            lambda: bench_sharding_scaling(serving_artifact, million=True),
             lambda: bench_streaming(streaming_artifact),
         )
         for section in sections:

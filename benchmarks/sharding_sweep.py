@@ -1,0 +1,219 @@
+"""Sharded-retrieval scaling sweep: docs × shards on a forced device mesh.
+
+Runs the device-true :class:`~repro.retrieval.sharded.DeviceShardedBackend`
+(one shard_map'd MIPS + on-device top-k merge per query chunk) against the
+unsharded :class:`~repro.retrieval.backend.DenseBackend` and the host
+thread fan-out, over a grid of synthetic corpus sizes and shard counts.
+
+This module is meant to run in its **own subprocess** (benchmarks/micro.py
+spawns it): device execution needs ``XLA_FLAGS=
+--xla_force_host_platform_device_count=S`` set *before* jax imports, and
+polluting the parent benchmark process with S emulated CPU devices would
+perturb every other cell. ``main()`` sets the flag itself when jax is not
+yet imported, so direct invocation also works:
+
+    PYTHONPATH=src python -m benchmarks.sharding_sweep --json /tmp/sweep.json
+
+Emitted JSON (merged into BENCH_serving.json under ``sharding_scaling``):
+
+* ``cells`` — per corpus size: unsharded qps plus per-(execution, S) qps,
+  speedup vs unsharded, and the bit-identity bit. Wall-clock numbers are
+  telemetry only (CPU-emulated devices; CI never gates on them).
+* ``gate`` — the deterministic :class:`~repro.retrieval.sharded.
+  ShardCounters` snapshot of the S=4 arms on the largest corpus (per-shard
+  search calls + merge invocations for one 32-query batch) and the
+  bit-identity booleans. These are exact-gated in
+  benchmarks/check_regression.py: the counters are pure functions of
+  (n_queries, chunking, S), so any drift means the dispatch structure
+  changed.
+* ``acceptance`` — the headline S=4 device-vs-unsharded speedup on the
+  largest (≥1e5-doc) synthetic corpus.
+
+The corpus is seeded and synthetic (`repro.retrieval.synthetic_dense_index`)
+— quality is meaningless here, systems behaviour is real. ``--million``
+adds a 10^6-doc column for the full-scale run; the default grid keeps CI
+under a minute of compute.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+DEFAULT_DOCS = "25000,100000"
+DEFAULT_SHARDS = "1,4"
+MILLION = 1_000_000
+
+
+def _ensure_devices(n: int) -> None:
+    """Force ``n`` emulated host devices — must run before jax imports."""
+    if "jax" in sys.modules:
+        return  # too late to change device count; sweep() will report what it has
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
+def _timed_qps(search, nq: int, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median queries/s of ``search()`` with results forced to host."""
+    import numpy as np
+
+    for _ in range(warmup):
+        scores, ids = search()
+        np.asarray(scores), np.asarray(ids)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        scores, ids = search()
+        np.asarray(scores), np.asarray(ids)
+        times.append(time.perf_counter() - t0)
+    wall = float(np.median(times))
+    return nq / wall if wall else float("inf")
+
+
+def sweep(
+    docs_grid: list[int],
+    shards_grid: list[int],
+    *,
+    dim: int = 64,
+    nq: int = 32,
+    k: int = 10,
+    seed: int = 0,
+    iters: int = 5,
+    q_block: int | None = None,
+) -> dict:
+    """Run the docs × shards grid; returns the artifact dict."""
+    import jax
+    import numpy as np
+
+    from repro.retrieval import ShardedBackend, synthetic_dense_index
+    from repro.retrieval.backend import DenseBackend
+    from repro.retrieval.index import l2_normalize
+
+    n_devices = jax.device_count()
+    rng = np.random.default_rng((seed, 1))  # distinct stream from the corpus
+    queries = np.asarray(
+        l2_normalize(rng.standard_normal((nq, dim)).astype(np.float32))
+    )
+
+    cells: dict[str, dict] = {}
+    gate: dict[str, object] = {"corpus_docs": max(docs_grid)}
+    acceptance: dict | None = None
+    for n_docs in sorted(docs_grid):
+        index = synthetic_dense_index(n_docs, dim, seed=seed, with_passages=False)
+        dense = DenseBackend(index)
+        ref_scores, ref_ids = dense.search_batch(None, queries, k)
+        ref_scores, ref_ids = np.asarray(ref_scores), np.asarray(ref_ids)
+        unsharded_qps = _timed_qps(
+            lambda: dense.search_batch(None, queries, k), nq, iters=iters
+        )
+        cell: dict[str, object] = {
+            "dim": dim,
+            "unsharded_qps": unsharded_qps,
+            "device": {},
+            "threads": {},
+        }
+        for execution in ("device", "threads"):
+            for s in sorted(shards_grid):
+                if execution == "threads" and s == 1:
+                    continue  # 1-shard threads is the unsharded arm
+                if execution == "device" and s > n_devices:
+                    cell[execution][str(s)] = {
+                        "skipped": f"needs {s} devices, have {n_devices}"
+                    }
+                    continue
+                backend = ShardedBackend.from_dense(
+                    index, n_shards=s, execution=execution,
+                    q_block=q_block if execution == "device" else None,
+                )
+                scores, ids = backend.search_batch(None, queries, k)
+                identical = bool(
+                    np.array_equal(np.asarray(scores), ref_scores)
+                    and np.array_equal(np.asarray(ids), ref_ids)
+                )
+                counters = backend.counters.as_dict()  # exactly one search so far
+                qps = _timed_qps(
+                    lambda: backend.search_batch(None, queries, k), nq, iters=iters
+                )
+                backend.shutdown()
+                arm = {
+                    "qps": qps,
+                    "speedup_vs_unsharded": qps / unsharded_qps if unsharded_qps else None,
+                    "identical": identical,
+                    "counters": counters,
+                }
+                cell[execution][str(s)] = arm
+                if n_docs == max(docs_grid) and s == max(shards_grid):
+                    gate[f"{execution}_s{s}"] = {**counters, "identical": identical}
+                    if execution == "device":
+                        acceptance = {
+                            "docs": n_docs,
+                            "shards": s,
+                            "device_qps": qps,
+                            "unsharded_qps": unsharded_qps,
+                            "speedup_vs_unsharded": arm["speedup_vs_unsharded"],
+                            "identical": identical,
+                        }
+        cells[str(n_docs)] = cell
+
+    return {
+        "benchmark": "sharding_scaling",
+        "n_devices": n_devices,
+        "n_queries": nq,
+        "k": k,
+        "seed": seed,
+        "q_block": q_block,
+        "cells": cells,
+        "gate": gate,
+        "acceptance": acceptance,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--docs", default=DEFAULT_DOCS,
+                    help="comma-separated synthetic corpus sizes")
+    ap.add_argument("--shards", default=DEFAULT_SHARDS,
+                    help="comma-separated shard counts")
+    ap.add_argument("--million", action="store_true",
+                    help=f"add a {MILLION}-doc column to the grid")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--nq", type=int, default=32, help="queries per batch")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--q-block", type=int, default=32, dest="q_block",
+                    help="device-execution query-chunk width (match --nq to "
+                    "dispatch each batch as one shard_map program; results "
+                    "are bit-identical at any width)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the artifact JSON here (default: stdout)")
+    args = ap.parse_args()
+
+    docs_grid = sorted({int(x) for x in args.docs.split(",") if x})
+    if args.million:
+        docs_grid = sorted(set(docs_grid) | {MILLION})
+    shards_grid = sorted({int(x) for x in args.shards.split(",") if x})
+    _ensure_devices(max(shards_grid))
+
+    result = sweep(
+        docs_grid, shards_grid,
+        dim=args.dim, nq=args.nq, k=args.k, seed=args.seed, iters=args.iters,
+        q_block=args.q_block,
+    )
+    payload = json.dumps(result, indent=2) + "\n"
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            f.write(payload)
+    else:
+        sys.stdout.write(payload)
+
+
+if __name__ == "__main__":
+    main()

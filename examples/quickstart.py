@@ -13,7 +13,7 @@ for the full pipeline map.
 import argparse
 
 from repro.core.policies import make_policy
-from repro.retrieval import cache_stats_view, scale_backends
+from repro.retrieval import BackendStackConfig, cache_stats_view
 from repro.serving.engine import build_paper_engine
 
 QUERIES = [
@@ -31,10 +31,10 @@ def main():
                     help="partition the dense corpus across S shards")
     args = ap.parse_args()
 
-    engine = build_paper_engine(make_policy("router_default"))
-    engine.backends = scale_backends(
-        engine.backends, engine.index,
-        cache_size=args.cache_size, shards=args.shards,
+    # the declarative stack: shard -> cache in the one valid order
+    engine = build_paper_engine(
+        make_policy("router_default"),
+        stack=BackendStackConfig(cache_size=args.cache_size, shards=args.shards),
     )
 
     # the serving fast path: one vectorized routing call, grouped retrieval

@@ -19,7 +19,7 @@ import math
 
 from repro.core.policies import make_policy
 from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
-from repro.retrieval import scale_backends
+from repro.retrieval import BackendStackConfig
 from repro.serving.engine import build_paper_engine
 from repro.serving.generator import TransformerSlotDecoder
 from repro.serving.streaming import StreamConfig, serve_stream
@@ -44,10 +44,9 @@ def main():
     queries = list(BENCHMARK_QUERIES)[: args.n_queries]
     refs = list(REFERENCE_ANSWERS)[: args.n_queries]
 
-    engine = build_paper_engine(make_policy("router_default"))
-    engine.backends = scale_backends(
-        engine.backends, engine.index,
-        cache_size=args.cache_size, shards=args.shards,
+    engine = build_paper_engine(
+        make_policy("router_default"),
+        stack=BackendStackConfig(cache_size=args.cache_size, shards=args.shards),
     )
 
     decoder = TransformerSlotDecoder.tiny(n_slots=8)  # match scheduler slots

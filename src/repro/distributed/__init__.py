@@ -1,7 +1,9 @@
 """Distribution utilities: mesh construction, partition specs, collectives."""
 from repro.distributed.mesh_utils import (
+    corpus_mesh,
     make_mesh,
     mesh_device_count,
     named_sharding,
     shard_map_compat,
 )
+from repro.distributed.partition import ShardingPolicy

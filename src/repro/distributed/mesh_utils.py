@@ -23,6 +23,33 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
 
 
+def corpus_mesh(n_shards: int, axis: str = "data") -> Mesh:
+    """1-axis mesh over the first ``n_shards`` devices for corpus-row
+    sharding (``ShardingPolicy.corpus_rows`` layout).
+
+    Unlike :func:`make_mesh` (which always spans every device), this takes a
+    device *subset* so an S-way sharded retrieval backend can coexist with
+    other work on the remaining devices — and so S < device_count is
+    expressible at all. Raises with the remediation (``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N`` for CPU hosts) when the host
+    has too few devices.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} > visible devices ({len(devices)}); on CPU "
+            "hosts set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} before importing jax, or use execution='threads'"
+        )
+    if AxisType is None:
+        return Mesh(np.asarray(devices[:n_shards]), (axis,))
+    return Mesh(np.asarray(devices[:n_shards]), (axis,), axis_types=(AxisType.Auto,))
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """``jax.shard_map`` across the rename: new jax exposes it top-level with
     ``check_vma``; 0.4.x has ``jax.experimental.shard_map`` with the

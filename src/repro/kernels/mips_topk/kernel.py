@@ -93,6 +93,40 @@ def _mips_kernel(q_ref, c_ref, v_out, i_out, bv_ref, bi_ref, *, k, bn, n_c, n_va
         i_out[...] = bi_ref[...]
 
 
+def _mips_kernel_masked(q_ref, c_ref, m_ref, v_out, i_out, bv_ref, bi_ref, *, k, bn, n_c):
+    """Variant taking a per-row validity mask as a traced input.
+
+    Needed for the shard_map'd sharded-retrieval path: each shard's residue
+    (how many of its rows are real vs zero-pad) depends on
+    ``lax.axis_index``, so it is a *traced* value — the static ``n_valid``
+    branch of :func:`_mips_kernel` cannot express it. The mask rides the
+    same grid as the corpus blocks ((1, bn) per step), so masking stays a
+    VPU ``where`` with no extra HBM traffic beyond one f32 row.
+    """
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        bv_ref[...] = jnp.full_like(bv_ref, NEG_INF)
+        bi_ref[...] = jnp.zeros_like(bi_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (bq, D)
+    c = c_ref[...].astype(jnp.float32)  # (bn, D)
+    scores = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bn)
+    mask = m_ref[...] > 0.0  # (1, bn), broadcasts over query rows
+    scores = jnp.where(mask, scores, NEG_INF)
+    bv, bi = _topk_merge(scores, ic * bn, bv_ref[...], bi_ref[...], k)
+    bv_ref[...] = bv
+    bi_ref[...] = bi
+
+    @pl.when(ic == n_c - 1)
+    def _store():
+        v_out[...] = bv_ref[...]
+        i_out[...] = bi_ref[...]
+
+
 def mips_topk_pallas(
     queries: jnp.ndarray,  # (Q, D)
     corpus: jnp.ndarray,  # (N, D)
@@ -101,18 +135,26 @@ def mips_topk_pallas(
     block_q: int = 8,
     block_n: int = 1024,
     n_valid: int | None = None,
+    valid_mask: jnp.ndarray | None = None,
     interpret: bool = False,
 ):
-    """Fused MIPS top-k. ``n_valid`` supports zero-padded corpora: rows at
-    index >= n_valid are masked to -inf so callers can pad N up to a block
-    multiple without polluting the candidate set (DenseIndex's auto-pad)."""
+    """Fused MIPS top-k over a (possibly zero-padded) corpus.
+
+    Two masking modes for padded rows, mutually exclusive:
+
+    * ``n_valid`` (static int) — rows at index >= n_valid are masked to
+      -inf; callers pad N up to a block multiple (DenseIndex's auto-pad).
+    * ``valid_mask`` (traced ``(N,)`` float array, >0 = real row) — same
+      masking as a kernel *input*, for callers whose residue is only known
+      at trace time: inside ``shard_map`` each shard's valid-row count
+      derives from ``lax.axis_index``, which a static int cannot capture.
+      With a traced mask the k-vs-corpus-size check is the caller's job
+      (the sharded path clamps k before building the closure).
+    """
     q_n, d = queries.shape
     n, _ = corpus.shape
-    n_valid = n if n_valid is None else n_valid
-    if not 0 < n_valid <= n:
-        raise ValueError(f"n_valid={n_valid} must be in (0, {n}]")
-    if k > n_valid:
-        raise ValueError(f"k={k} > corpus size {n_valid}")
+    if valid_mask is not None and n_valid is not None:
+        raise ValueError("pass n_valid (static) or valid_mask (traced), not both")
     bq = min(block_q, q_n)
     bn = min(block_n, n)
     if q_n % bq or n % bn:
@@ -121,14 +163,8 @@ def mips_topk_pallas(
         raise ValueError(f"k={k} must be <= block_n={bn}")
     n_q, n_c = q_n // bq, n // bn
 
-    kernel = functools.partial(_mips_kernel, k=k, bn=bn, n_c=n_c, n_valid=n_valid)
-    vals, idx = pl.pallas_call(
-        kernel,
+    common = dict(
         grid=(n_q, n_c),
-        in_specs=[
-            pl.BlockSpec((bq, d), lambda iq, ic: (iq, 0)),
-            pl.BlockSpec((bn, d), lambda iq, ic: (ic, 0)),
-        ],
         out_specs=[
             pl.BlockSpec((bq, k), lambda iq, ic: (iq, 0)),
             pl.BlockSpec((bq, k), lambda iq, ic: (iq, 0)),
@@ -146,5 +182,34 @@ def mips_topk_pallas(
         ),
         interpret=interpret,
         name="mips_topk",
+    )
+    if valid_mask is not None:
+        if valid_mask.shape != (n,):
+            raise ValueError(f"valid_mask must be ({n},), got {valid_mask.shape}")
+        kernel = functools.partial(_mips_kernel_masked, k=k, bn=bn, n_c=n_c)
+        vals, idx = pl.pallas_call(
+            kernel,
+            in_specs=[
+                pl.BlockSpec((bq, d), lambda iq, ic: (iq, 0)),
+                pl.BlockSpec((bn, d), lambda iq, ic: (ic, 0)),
+                pl.BlockSpec((1, bn), lambda iq, ic: (0, ic)),
+            ],
+            **common,
+        )(queries, corpus, valid_mask.astype(jnp.float32)[None, :])
+        return vals, idx
+
+    n_valid = n if n_valid is None else n_valid
+    if not 0 < n_valid <= n:
+        raise ValueError(f"n_valid={n_valid} must be in (0, {n}]")
+    if k > n_valid:
+        raise ValueError(f"k={k} > corpus size {n_valid}")
+    kernel = functools.partial(_mips_kernel, k=k, bn=bn, n_c=n_c, n_valid=n_valid)
+    vals, idx = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda iq, ic: (iq, 0)),
+            pl.BlockSpec((bn, d), lambda iq, ic: (ic, 0)),
+        ],
+        **common,
     )(queries, corpus)
     return vals, idx

@@ -42,8 +42,34 @@ def main() -> None:
     )
     ap.add_argument(
         "--shards", type=int, default=1, metavar="S",
-        help="partition the dense corpus across S shards (fan-out + fused "
-        "top-k merge; bit-identical to unsharded). 1 = single index",
+        help="partition the dense corpus across S shards (bit-identical to "
+        "unsharded). 1 = single index",
+    )
+    ap.add_argument(
+        "--shard-execution", default="threads", choices=("threads", "device"),
+        help="how sharded search runs: 'threads' fans per-shard searches out "
+        "on the host; 'device' lowers search + top-k merge onto the jax "
+        "device mesh as one shard_map program (requires >= S devices; on "
+        "CPU hosts set XLA_FLAGS=--xla_force_host_platform_device_count=S). "
+        "Both are bit-identical to unsharded retrieval (docs/retrieval.md)",
+    )
+    ap.add_argument(
+        "--synthetic-docs", type=int, default=0, metavar="N",
+        help="replace the corpus with N seeded synthetic documents (random "
+        "unit embeddings + placeholder passages) — the retrieval-scaling "
+        "configuration: quality is meaningless, systems behaviour "
+        "(sharding, caching, latency) is real. Mutually exclusive with "
+        "--docs; 0 = use the real corpus",
+    )
+    ap.add_argument(
+        "--synthetic-dim", type=int, default=64, metavar="D",
+        help="embedding dimension for --synthetic-docs (default 64; a "
+        "million-doc corpus at D=64 is ~256 MB of float32)",
+    )
+    ap.add_argument(
+        "--synthetic-seed", type=int, default=0,
+        help="RNG seed for the --synthetic-docs corpus (same seed = "
+        "bit-identical corpus)",
     )
     ap.add_argument(
         "--fault-profile", action="append", default=[], metavar="NAME:K=V,...",
@@ -83,8 +109,6 @@ def main() -> None:
     ap.add_argument("--retrieval-workers", type=int, default=1,
                     help="worker threads draining the retrieve/assemble/decode "
                     "stages (--stream only; ignored at depth 1)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="deprecated alias for --pipeline-depth 1")
     ap.add_argument("--tokens-per-s", type=float, default=None,
                     help="pace the slot decoder's step clock (--stream only; "
                     "default: free-running)")
@@ -109,22 +133,29 @@ def main() -> None:
         queries = list(BENCHMARK_QUERIES)
         references = list(REFERENCE_ANSWERS)
 
-    doc = open(args.docs).read() if args.docs else corpus_document()
-
     catalog = make_catalog(args.catalog)
     router = make_policy(args.policy, catalog=catalog, config=RouterConfig(epsilon=args.epsilon))
-    embedder = HashedNGramEmbedder(dim=256)
-    passages = line_passages(doc)
-    index, index_tokens = DenseIndex.build(passages, embedder)
+    if args.synthetic_docs > 0:
+        if args.docs:
+            raise SystemExit("--synthetic-docs and --docs are mutually exclusive")
+        from repro.retrieval import synthetic_dense_index
+
+        embedder = HashedNGramEmbedder(dim=args.synthetic_dim)
+        index = synthetic_dense_index(
+            args.synthetic_docs, args.synthetic_dim, seed=args.synthetic_seed
+        )
+        passages = index.passages
+        index_tokens = 0  # nothing was embedded: the corpus is fabricated
+    else:
+        doc = open(args.docs).read() if args.docs else corpus_document()
+        embedder = HashedNGramEmbedder(dim=256)
+        passages = line_passages(doc)
+        index, index_tokens = DenseIndex.build(passages, embedder)
     backends = make_backends(
         index, passages, embedder, names=("dense", *catalog.backends_used())
     )
-    from repro.retrieval import FaultProfile, scale_backends, wrap_cached, wrap_faulty
+    from repro.retrieval import BackendStackConfig, FaultProfile, build_backend_stack
 
-    # Decorator stack, innermost first: shard (corpus layer) → faults (the
-    # flaky service itself) → cache (client-side; hits short-circuit faults)
-    # → resilience (timeout/retry/breaker/ladder around everything).
-    backends = scale_backends(backends, index, shards=args.shards)
     fault_profiles: dict[str, FaultProfile] = {}
     for spec in args.fault_profile:
         try:
@@ -137,28 +168,34 @@ def main() -> None:
                 f"(this catalog serves {sorted(backends)})"
             )
         fault_profiles[name] = profile
-    if fault_profiles:
-        backends = wrap_faulty(backends, fault_profiles)
-    if args.cache_size > 0:
-        backends = wrap_cached(backends, capacity=args.cache_size)
+    resilience: object = None
     if (
         args.retrieve_timeout_ms is not None
         or args.max_retries is not None
         or fault_profiles
     ):
-        from repro.serving.resilience import (
-            ResilienceConfig,
-            RetryPolicy,
-            wrap_resilient,
-        )
+        from repro.serving.resilience import ResilienceConfig, RetryPolicy
 
-        retry = RetryPolicy(
-            max_retries=args.max_retries if args.max_retries is not None else 2
+        resilience = ResilienceConfig(
+            timeout_ms=args.retrieve_timeout_ms,
+            retry=RetryPolicy(
+                max_retries=args.max_retries if args.max_retries is not None else 2
+            ),
         )
-        backends = wrap_resilient(
-            backends,
-            ResilienceConfig(timeout_ms=args.retrieve_timeout_ms, retry=retry),
-        )
+    # One declarative recipe for the whole decorator stack — ordering
+    # (shard → faults → cache → resilience) lives in build_backend_stack,
+    # not here.
+    backends = build_backend_stack(
+        backends,
+        BackendStackConfig(
+            shards=args.shards,
+            shard_execution=args.shard_execution,
+            cache_size=args.cache_size,
+            fault_profiles=fault_profiles,
+            resilience=resilience,
+        ),
+        index=index,
+    )
 
     per_backend_conf: dict[str, float] = {}
     for item in args.min_confidence_backend:
@@ -203,9 +240,6 @@ def main() -> None:
         from repro.serving.streaming import StreamConfig, serve_stream
 
         depth = args.pipeline_depth
-        if args.no_overlap:
-            print("note: --no-overlap is deprecated; use --pipeline-depth 1")
-            depth = 1
         decoder = TransformerSlotDecoder.tiny(n_slots=8, tokens_per_s=args.tokens_per_s)
         decoder.warmup()  # decode-step compile must not bill to the first batch's TTFT
         result = serve_stream(

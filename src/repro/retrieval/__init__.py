@@ -35,16 +35,32 @@ from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, Stack
 from repro.retrieval.hybrid import HybridRetriever, rrf_fuse, weighted_fuse
 from repro.retrieval.index import DenseIndex, SearchResult, l2_normalize
 from repro.retrieval.ivf import IVFIndex, kmeans
-from repro.retrieval.sharded import ShardedBackend, shard_bounds
+from repro.retrieval.sharded import (
+    EXECUTIONS,
+    DeviceShardedBackend,
+    ShardCounters,
+    ShardedBackend,
+    mesh_layout,
+    shard_bounds,
+)
+from repro.retrieval.stack import BackendStackConfig, build_backend_stack
+from repro.retrieval.synthetic import synthetic_dense_index
 from repro.retrieval.tokenizer import count_tokens, lexical_overlap, terms, words
 from repro.retrieval.topk import blocked_topk, distributed_topk, merge_topk
+
+# The public sharding surface re-exports the mesh-policy side too, so one
+# import site (`repro.retrieval`) covers everything a sharded deployment
+# configures: the backend, its mesh layout, and the partitioning policy.
+from repro.distributed.partition import ShardingPolicy
 
 __all__ = [
     "BM25Backend", "BackendCost", "DEFAULT_BACKEND_COSTS", "DenseBackend",
     "HybridBackend", "IVFBackend", "RetrievalBackend", "backend_cost",
     "make_backends",
+    "BackendStackConfig", "build_backend_stack",
     "CachedBackend", "CacheStats", "cache_stats_view", "scale_backends", "wrap_cached",
-    "ShardedBackend", "shard_bounds",
+    "DeviceShardedBackend", "EXECUTIONS", "ShardCounters", "ShardedBackend",
+    "ShardingPolicy", "mesh_layout", "shard_bounds", "synthetic_dense_index",
     "CANONICAL_FAULT_PROFILE", "FaultProfile", "FaultyBackend", "RetrievalFault",
     "TransientBackendError", "has_injected_faults", "wrap_faulty",
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",

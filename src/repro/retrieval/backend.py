@@ -124,11 +124,28 @@ class RetrievalBackend(Protocol):
     ) -> tuple[np.ndarray, np.ndarray]:
         """(scores (n, k'), ids (n, k')), descending per row.
 
-        ``k' = min(k, corpus size)`` for the exact backends; an approximate
-        backend may narrow further when its candidate pool is smaller (IVF:
-        ``k' = min(k, n_probe × bucket_capacity)``). Rows never contain
-        out-of-corpus ids, and consumers (the serving ``assemble`` stage)
-        handle any row width."""
+        Signature/dtype contract (asserted for every backend — wrapped or
+        bare — by the shared conformance test in
+        tests/test_backend_contract.py):
+
+        * ``scores`` are ``float32`` and ``ids`` are ``int32`` (as numpy
+          arrays or jnp arrays that convert losslessly via ``np.asarray``);
+          both are ``(n, k')`` with one row per input query, in input order.
+        * Each row is sorted by score **descending**; ties resolve to the
+          lowest passage id (the total order every top-k primitive in the
+          repo — ``lax.top_k``, ``blocked_topk``, ``merge_topk``,
+          ``distributed_topk`` — implements, which is what makes sharded/
+          cached/resilient wrappers bit-identical to the bare backend).
+        * ``k' = min(k, corpus size)`` for the exact backends; an
+          approximate backend may narrow further when its candidate pool is
+          smaller (IVF: ``k' = min(k, n_probe × bucket_capacity)``). Rows
+          never contain out-of-corpus ids, and consumers (the serving
+          ``assemble`` stage) handle any row width.
+        * One sanctioned exception to the descending clause: a backend may
+          set ``scores_are_ranking = False`` (hybrid RRF does — rows are
+          ranked by fused reciprocal rank but report the dense cosine per
+          id so confidences stay comparable across backends). Row *order*
+          is then the contract; reported scores need only be finite."""
         ...
 
     def get_passages(self, ids: Sequence[int]) -> list[Passage]:
@@ -218,12 +235,14 @@ class IVFBackend:
         scores = np.asarray(scores, np.float32)
         ids = np.asarray(ids, np.int32)
         # Degenerate probes (fewer valid candidates than k) pad with -inf
-        # rows in the IVF kernel; clamp them onto the row's best hit so ids
-        # never index out of the corpus and confidence stays finite.
+        # in the IVF kernel. Rows narrow to the widest all-finite prefix
+        # instead of repeating the best hit: duplicated ids and a re-rising
+        # score tail would break the protocol's descending/unique-ids
+        # contract (k' <= k is first-class for approximate backends).
         bad = ~np.isfinite(scores)
         if bad.any():
-            ids = np.where(bad, ids[:, :1], ids)
-            scores = np.where(bad, scores[:, :1], scores)
+            width = int((~bad).sum(axis=1).min())
+            scores, ids = scores[:, :width], ids[:, :width]
         return scores, ids
 
     def get_passages(self, ids) -> list[Passage]:
@@ -276,6 +295,11 @@ class HybridBackend:
 
     def __init__(self, hybrid: HybridRetriever):
         self.hybrid = hybrid
+        # RRF rows are ranked by fused reciprocal rank but *report* the dense
+        # cosine of each id (confidence comparability across backends), so
+        # the reported score vector is not monotone — the one sanctioned
+        # exception to the protocol's descending-scores clause.
+        self.scores_are_ranking = hybrid.fusion != "rrf"
         dim = hybrid.dense.dim
         self.cost = BackendCost(
             latency_scale=1.35, recall_prior=1.0, flops_per_item=2.0 * dim + 8.0

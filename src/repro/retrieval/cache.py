@@ -249,8 +249,14 @@ def wrap_cached(
     backends: Mapping[str, RetrievalBackend], *, capacity: int
 ) -> dict[str, RetrievalBackend]:
     """Wrap every backend of an engine's backend map in a
-    :class:`CachedBackend` of the given capacity — the ``--cache-size``
-    CLI path. Already-cached backends are left as-is."""
+    :class:`CachedBackend` of the given capacity. Already-cached backends
+    are left as-is.
+
+    .. deprecated:: Prefer :func:`repro.retrieval.build_backend_stack` with
+       ``BackendStackConfig(cache_size=...)`` — the one construction path
+       that also gets the shard/fault/resilience ordering right. This shim
+       stays for direct single-layer wrapping.
+    """
     return {
         name: b if isinstance(b, CachedBackend) else CachedBackend(b, capacity=capacity)
         for name, b in backends.items()
@@ -264,22 +270,20 @@ def scale_backends(
     cache_size: int = 0,
     shards: int = 1,
 ) -> dict[str, RetrievalBackend]:
-    """Apply the retrieval scaling layer to a backend map — the one
-    composition the CLI (``--shards`` / ``--cache-size``) and the examples
-    share: shard the dense backend over ``index`` first (outermost layer
-    closest to the corpus), then cache everything (hits must short-circuit
-    the shard fan-out). No-ops at the defaults.
-    """
-    out = dict(backends)
-    if shards > 1:
-        from repro.retrieval.sharded import ShardedBackend  # lazy: no import cycle
+    """Shard the dense backend, then cache everything — now a thin shim.
 
-        if index is None:
-            raise ValueError("shards > 1 requires the dense index to partition")
-        out["dense"] = ShardedBackend.from_dense(index, n_shards=shards)
-    if cache_size > 0:
-        out = wrap_cached(out, capacity=cache_size)
-    return out
+    .. deprecated:: Prefer :func:`repro.retrieval.build_backend_stack`,
+       which this delegates to (so ordering can never drift between the two
+       paths) and which also covers fault injection, resilience, and the
+       device-sharding knobs this signature predates.
+    """
+    from repro.retrieval.stack import BackendStackConfig, build_backend_stack
+
+    return build_backend_stack(
+        backends,
+        BackendStackConfig(shards=shards, cache_size=cache_size),
+        index=index,
+    )
 
 
 def cache_stats_view(backends: Mapping[str, RetrievalBackend]) -> dict[str, dict[str, int]]:

@@ -269,6 +269,12 @@ def wrap_faulty(
     ``profiles`` maps backend name → profile; unnamed backends pass through
     untouched. Unknown names raise — a chaos scenario that silently faults
     nothing is a green test lying about coverage.
+
+    .. deprecated:: Prefer :func:`repro.retrieval.build_backend_stack` with
+       ``BackendStackConfig(fault_profiles=...)`` — it applies this layer in
+       the one valid position (innermost wrapper, under cache and
+       resilience). This shim stays for direct single-layer wrapping; the
+       stack builder calls it internally.
     """
     unknown = [n for n in profiles if n not in backends]
     if unknown:

@@ -68,6 +68,16 @@ def l2_normalize(x: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
 
 
+def _pallas_block_width(n_rows: int, k: int) -> int:
+    """Corpus block width for the pallas scorer: lane-aligned, >= k, capped
+    for VMEM. Shared by the single-device path and the per-shard sharded
+    path so both pad corpora identically."""
+    bn = 128 if n_rows <= 2048 else 1024
+    while bn < k:
+        bn *= 2
+    return bn
+
+
 class DenseIndex:
     """Exact MIPS index over passage embeddings."""
 
@@ -118,10 +128,7 @@ class DenseIndex:
     # -- single-device search ---------------------------------------------------
     def _pallas_block_n(self, k: int) -> int:
         """Corpus block width: lane-aligned, >= k, capped for VMEM."""
-        bn = 128 if self.size <= 2048 else 1024
-        while bn < k:
-            bn *= 2
-        return bn
+        return _pallas_block_width(self.size, k)
 
     def _pallas_corpus(self, bn: int) -> jnp.ndarray:
         corpus = self._padded_corpus.get(bn)
@@ -236,29 +243,73 @@ class DenseIndex:
         return [self.passages[int(i)] for i in ids]
 
     # -- distributed search -------------------------------------------------------
-    def sharded_search_fn(self, mesh: jax.sharding.Mesh, k: int, shard_axes: tuple[str, ...]):
+    def sharded_search_fn(
+        self,
+        mesh: jax.sharding.Mesh,
+        k: int,
+        shard_axes: tuple[str, ...],
+        *,
+        scorer: str = "blocked",
+        interpret: bool = False,
+        n_valid: int | None = None,
+        block_n: int | None = None,
+    ):
         """Build a shard_map'd exact search over corpus rows.
 
         Corpus rows are sharded over ``shard_axes`` (e.g. ``("data","model")``
-        → 256-way row sharding); queries are replicated; each shard computes
-        a local blocked top-k and the k-candidate lists merge with one
-        all-gather per axis. Returns ``fn(corpus, queries) -> (scores, ids)``
-        with global ids.
+        → 256-way row sharding); queries are replicated; each shard scores
+        its rows (``scorer="blocked"`` matmul + running top-k, or
+        ``"pallas"`` for the fused ``mips_topk`` kernel per shard), computes
+        a local top-k, and the k-candidate lists merge with one all-gather
+        per axis — the whole search is a single device program with no host
+        round-trip between shards. Returns ``fn(corpus, queries) ->
+        (scores, ids)`` with global ids, plus the shard count.
+
+        Non-divisible corpora: pass a corpus zero-padded so rows divide the
+        shard count and set ``n_valid`` to the real row count — each shard
+        masks its own residue columns (a *traced* quantity: it depends on
+        ``lax.axis_index``) before the local top-k, so padded rows can never
+        enter the candidate set. Requires ``k <= n_valid`` (callers clamp,
+        exactly as :meth:`search_batch` clamps k to the corpus size). For
+        ``scorer="pallas"``, per-shard rows must additionally divide
+        ``block_n`` (defaults to the same heuristic as the single-device
+        pallas path).
         """
         from jax.sharding import PartitionSpec as P
 
+        if scorer not in SCORERS:
+            raise ValueError(f"unknown scorer {scorer!r}; expected one of {SCORERS}")
         n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
         corpus_spec = P(shard_axes, None)
         out_spec = P(None, None)
+        if scorer == "pallas":
+            from repro.kernels.mips_topk.kernel import mips_topk_pallas
 
         def local_search(corpus_shard: jnp.ndarray, queries: jnp.ndarray):
             # global row offset of this shard
             idx = jax.lax.axis_index(shard_axes)
             rows = corpus_shard.shape[0]
+            start = idx * rows
             queries = l2_normalize(queries)  # cosine, matching search_batch
-            scores = queries @ corpus_shard.T  # (nq, rows_local)
-            v, i = blocked_topk(scores, min(k, rows))
-            i = i + idx * rows  # globalize
+            kk = min(k, rows)
+            if scorer == "pallas":
+                bn = block_n if block_n is not None else _pallas_block_width(rows, kk)
+                mask = None
+                if n_valid is not None:
+                    # traced per-shard residue mask: real global row < n_valid
+                    mask = ((start + jnp.arange(rows)) < n_valid).astype(jnp.float32)
+                v, i = mips_topk_pallas(
+                    queries, corpus_shard, kk,
+                    block_q=queries.shape[0], block_n=bn,
+                    valid_mask=mask, interpret=interpret,
+                )
+            else:
+                scores = queries @ corpus_shard.T  # (nq, rows_local)
+                if n_valid is not None:
+                    col = start + jnp.arange(rows)[None, :]
+                    scores = jnp.where(col < n_valid, scores, -jnp.inf)
+                v, i = blocked_topk(scores, kk)
+            i = i + start  # globalize
             for ax in shard_axes:
                 v, i = distributed_topk(v, i, k, ax)
             return v, i

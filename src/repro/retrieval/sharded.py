@@ -5,12 +5,28 @@ The scaling seam the ROADMAP's heavy-traffic north star needs: RAGO
 dominant systems lever for RAG serving, and "Towards Understanding Systems
 Trade-offs in RAG" (2024) shows retrieval cost dominates exactly the
 heavy-bundle regime the router prices. :class:`ShardedBackend` partitions
-the corpus into S contiguous row ranges, fans ``search_batch`` out across
-per-shard inner backends (optionally on threads), globalizes the returned
-ids, and merges the per-shard top-k candidate lists with the repo's
-existing fused top-k primitive (:func:`repro.retrieval.topk.merge_topk`).
+the corpus into S contiguous row ranges and runs the per-shard searches
+under one of two executions, selected by ``from_dense(...,
+execution=...)``:
 
-Exactness — the property every test here pins:
+* ``"threads"`` — per-shard inner backends fanned out on the host
+  (optionally on a thread pool), ids globalized, per-shard top-k candidate
+  lists merged with the repo's fused top-k primitive
+  (:func:`repro.retrieval.topk.merge_topk`). Runs anywhere, but every
+  query pays S Python dispatches plus S-1 host-side merges.
+* ``"device"`` — the whole search lowers onto a jax device mesh as a
+  single ``shard_map``'d program (:class:`DeviceShardedBackend`): corpus
+  rows are row-partitioned across the mesh per
+  :meth:`~repro.distributed.partition.ShardingPolicy.corpus_rows`, queries
+  replicate per :func:`mesh_layout`, each shard scores its rows in place
+  (blocked matmul or the fused pallas ``mips_topk`` kernel), and the
+  per-shard→global top-k merge happens **on device** via
+  :func:`~repro.retrieval.topk.distributed_topk` — one all-gather of S·k
+  candidates, no host round-trip. This is the production path; the threads
+  path remains the portable fallback and differential-testing oracle.
+
+Exactness — the property every test here pins, identical for both
+executions:
 
 * Merging per-shard top-k lists of length k loses nothing for a global
   top-k (any global top-k element is a local top-k element of its shard —
@@ -18,40 +34,45 @@ Exactness — the property every test here pins:
 * Per-shard dense scoring is **bit-identical** to unsharded scoring: a
   ``(Q_BLOCK, d) @ (d, n_shard)`` matmul reduces over ``d`` exactly like
   the full-corpus matmul (the reduction axis is unchanged; only output
-  columns are partitioned), and shard indexes are built over *slices of the
-  already-normalized* embeddings (``DenseIndex(assume_normalized=True)``)
-  so no value is ever re-normalized.
+  columns are partitioned). The threads path slices the *already-
+  normalized* embeddings (``DenseIndex(assume_normalized=True)``); the
+  device path partitions the same normalized rows across the mesh — no
+  value is ever re-normalized either way.
 * Tie-breaking matches too: within a shard ``top_k`` prefers the lowest
-  local id, and the left-to-right merge prefers the lowest shard, so equal
-  scores resolve to the lowest *global* id — exactly what the unsharded
-  path does.
+  local id, and both merges — the host's left-to-right ``merge_topk`` and
+  the device's shard-major all-gather — prefer the lowest shard, so equal
+  scores resolve to the lowest *global* id, exactly like the unsharded
+  path.
+* Non-divisible corpora: the threads path gives the first ``n % S`` shards
+  one extra row (``shard_bounds``); the device path zero-pads rows up to a
+  shard multiple and each shard masks its own residue columns before the
+  local top-k (a *traced* mask — the residue depends on
+  ``lax.axis_index``), so pad rows can never enter the candidate set.
 
 Together these make a sharded dense backend a drop-in for ``"dense"``:
 drained serving runs are bit-identical to the unsharded engine at every
-pipeline setting (tests/test_cache_sharded.py sweeps this).
-
-Device mapping: the same partitioning is ``shard_map``-ready. Corpus rows
-shard over the mesh's data axes (:meth:`repro.distributed.partition.
-ShardingPolicy.corpus_rows`), queries replicate, and the per-shard local
-top-k + all-gather merge is already implemented as
-``DenseIndex.sharded_search_fn`` — :func:`mesh_layout` returns the spec
-triple so a TPU deployment partitions the corpus exactly like this
-host-level backend does.
+pipeline setting (tests/test_cache_sharded.py and
+tests/test_sharded_device.py sweep this).
 """
 
 from __future__ import annotations
 
 import bisect
+import dataclasses
+import math
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.retrieval.backend import BackendCost, DenseBackend, RetrievalBackend
 from repro.retrieval.chunking import Passage
-from repro.retrieval.index import DenseIndex
+from repro.retrieval.index import Q_BLOCK, DenseIndex, _pallas_block_width
 from repro.retrieval.topk import merge_topk
+
+EXECUTIONS = ("threads", "device")
 
 
 def shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
@@ -79,8 +100,9 @@ def mesh_layout(policy=None):
     partitioning on a device mesh.
 
     Corpus rows shard over the data axes, queries and merged outputs
-    replicate — the layout ``DenseIndex.sharded_search_fn`` executes. Takes
-    a :class:`~repro.distributed.partition.ShardingPolicy` (default
+    replicate — the layout ``DenseIndex.sharded_search_fn`` executes and
+    ``execution="device"`` places its corpus with. Takes a
+    :class:`~repro.distributed.partition.ShardingPolicy` (default
     constructed) so multi-pod meshes reuse their axis-name bundle.
     """
     from jax.sharding import PartitionSpec as P
@@ -91,14 +113,46 @@ def mesh_layout(policy=None):
     return policy.corpus_rows(), P(None, None), P(None, None)
 
 
+@dataclasses.dataclass
+class ShardCounters:
+    """Deterministic work counters for a sharded backend — what the CI
+    gate's scaling-sweep cell pins (qps is telemetry; these are exact).
+
+    ``searches`` counts ``search_batch`` calls; ``shard_searches`` counts
+    per-shard local search executions (threads: S per call; device: S per
+    dispatched query chunk — the device path redispatches its fixed-shape
+    program per ``q_block``-wide chunk, the same discipline as
+    ``DenseIndex``);
+    ``merges`` counts top-k merge operations (threads: S-1 pairwise
+    ``merge_topk`` per call; device: one collective merge per chunk per
+    mesh axis).
+    """
+
+    searches: int = 0
+    shard_searches: int = 0
+    merges: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return {
+            "searches": self.searches,
+            "shard_searches": self.shard_searches,
+            "merges": self.merges,
+        }
+
+
 class ShardedBackend:
     """S-way partitioned retrieval behind the one-backend protocol.
 
-    ``shards`` are inner backends over contiguous corpus partitions and
-    ``offsets`` their global row offsets. ``workers > 1`` fans the per-shard
-    searches out on a thread pool (results are combined in shard order, so
-    threading never changes the answer).
+    This class *is* the ``execution="threads"`` path: ``shards`` are inner
+    backends over contiguous corpus partitions and ``offsets`` their global
+    row offsets. ``workers > 1`` fans the per-shard searches out on a
+    thread pool (results are combined in shard order, so threading never
+    changes the answer). Use :meth:`from_dense` with
+    ``execution="device"`` for the ``shard_map``-lowered variant
+    (:class:`DeviceShardedBackend`).
     """
+
+    execution = "threads"
 
     def __init__(
         self,
@@ -122,6 +176,7 @@ class ShardedBackend:
         self.requires_query_vecs = any(s.requires_query_vecs for s in self.shards)
         self.workers = max(0, int(workers))
         self._pool = ThreadPoolExecutor(max_workers=self.workers) if self.workers > 1 else None
+        self.counters = ShardCounters()
 
     @classmethod
     def from_dense(
@@ -132,15 +187,37 @@ class ShardedBackend:
         workers: int = 0,
         scorer: str = "blocked",
         interpret: bool = False,
+        execution: str = "threads",
+        mesh: jax.sharding.Mesh | None = None,
+        q_block: int | None = None,
     ) -> "ShardedBackend":
-        """Partition a built :class:`DenseIndex` into S per-shard dense
-        backends — the ``--shards`` CLI path.
+        """Partition a built :class:`DenseIndex` into an S-way sharded dense
+        backend — the ``--shards`` CLI path.
 
-        Slices the index's *normalized* embeddings (and passage payloads)
-        into contiguous ranges; each shard is a ``DenseIndex(...,
-        assume_normalized=True)`` so per-row values are bit-identical to the
-        unsharded index's.
+        ``execution="threads"`` slices the index's *normalized* embeddings
+        (and passage payloads) into contiguous per-shard
+        ``DenseIndex(..., assume_normalized=True)`` backends searched from
+        the host. ``execution="device"`` returns a
+        :class:`DeviceShardedBackend` that row-partitions the same
+        embeddings across a device mesh (``mesh`` defaults to a 1-axis
+        ``"data"`` mesh over the first ``n_shards`` visible devices) and
+        runs search + merge as one ``shard_map``'d program. Both are
+        bit-identical to the unsharded index.
         """
+        if execution not in EXECUTIONS:
+            raise ValueError(f"unknown execution {execution!r}; expected one of {EXECUTIONS}")
+        if execution == "device":
+            if workers:
+                raise ValueError("workers is a threads-execution knob; device execution ignores the host pool")
+            return DeviceShardedBackend(
+                index, n_shards=n_shards, mesh=mesh, scorer=scorer,
+                interpret=interpret, q_block=q_block,
+            )
+        if q_block is not None:
+            raise ValueError(
+                "q_block is a device-execution knob; the threads path has no "
+                "fixed-shape chunking to tune"
+            )
         bounds = shard_bounds(index.size, n_shards)
         shards: list[RetrievalBackend] = []
         for start, stop in bounds:
@@ -205,9 +282,14 @@ class ShardedBackend:
             ]
         vals = jnp.asarray(parts[0][0])
         ids = jnp.asarray(parts[0][1])
+        n_merges = 0
         for sv, si in parts[1:]:
             width = min(k, vals.shape[-1] + sv.shape[-1])
             vals, ids = merge_topk(vals, ids, jnp.asarray(sv), jnp.asarray(si), width)
+            n_merges += 1
+        self.counters.searches += 1
+        self.counters.shard_searches += self.n_shards
+        self.counters.merges += n_merges
         return np.asarray(vals, np.float32), np.asarray(ids, np.int32)
 
     # -- payloads -------------------------------------------------------------
@@ -224,3 +306,194 @@ class ShardedBackend:
         """Stop the fan-out thread pool (no-op when running serially)."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+
+
+class DeviceShardedBackend(ShardedBackend):
+    """``execution="device"``: S-way sharded MIPS as one ``shard_map``'d
+    device program per fixed-width query chunk.
+
+    The corpus (zero-padded to an S-divisible row count) is placed **once**
+    across the mesh with the :func:`mesh_layout` corpus spec and stays
+    device-resident; every search dispatches the cached jit'd
+    ``shard_map`` closure built by ``DenseIndex.sharded_search_fn`` —
+    per-shard scoring (blocked matmul or the pallas ``mips_topk`` kernel
+    with a traced residue mask), local top-k, id globalization by
+    ``axis_index * rows_per_shard``, and the cross-shard
+    :func:`~repro.retrieval.topk.distributed_topk` merge all execute on
+    device. The host only chunks queries into fixed ``(q_block, d)`` blocks
+    (default ``Q_BLOCK`` — the same discipline that makes ``DenseIndex``
+    batches bit-identical to single queries; benchmarks widen it to
+    amortize dispatch overhead) and reassembles rows.
+
+    Compared to the threads path, a search costs one XLA dispatch per query
+    chunk instead of S Python dispatches plus S-1 host merges per batch —
+    the difference the BENCH_serving.json ``sharding_scaling`` cell
+    measures.
+    """
+
+    execution = "device"
+
+    def __init__(
+        self,
+        index: DenseIndex,
+        *,
+        n_shards: int,
+        mesh: jax.sharding.Mesh | None = None,
+        scorer: str = "blocked",
+        interpret: bool = False,
+        name: str | None = None,
+        cost: BackendCost | None = None,
+        q_block: int | None = None,
+    ):
+        # shard_bounds is the one validator of (n, S) combinations; calling
+        # it here keeps device-path errors identical to the threads path.
+        shard_bounds(index.size, n_shards)
+        if q_block is not None and q_block < 1:
+            raise ValueError(f"q_block must be >= 1, got {q_block}")
+        if mesh is None:
+            from repro.distributed.mesh_utils import corpus_mesh
+
+            mesh = corpus_mesh(n_shards)
+        self.mesh = mesh
+        self.shard_axes = tuple(mesh.axis_names)
+        mesh_size = int(np.prod([mesh.shape[a] for a in self.shard_axes]))
+        if mesh_size != n_shards:
+            raise ValueError(f"mesh has {mesh_size} devices but n_shards={n_shards}")
+        self.index = index
+        self.scorer = scorer
+        self.interpret = interpret
+        # protocol surface mirrors the threads path's per-shard DenseBackend
+        proto = DenseBackend(index, scorer=scorer, interpret=interpret)
+        self.name = name if name is not None else proto.name
+        self.cost = cost if cost is not None else proto.cost
+        self.requires_query_vecs = True
+        self.workers = 0
+        self._pool = None
+        self._n_shards = int(n_shards)
+        # Query-chunk width of the fixed-shape dispatch. Q_BLOCK matches the
+        # unsharded index's discipline; benchmarks widen it to amortize
+        # per-dispatch shard_map overhead over bigger batches (results are
+        # bit-identical either way — chunking only tiles the query axis).
+        self.q_block = int(q_block) if q_block is not None else Q_BLOCK
+        self.counters = ShardCounters()
+        # k → compiled shard_map closure; rows_per → placed padded corpus
+        self._fn_cache: dict[int, object] = {}
+        self._corpus_cache: dict[int, jnp.ndarray] = {}
+
+    @property
+    def n_shards(self) -> int:
+        return self._n_shards
+
+    @property
+    def size(self) -> int:
+        return self.index.size
+
+    @property
+    def shards(self):  # pragma: no cover - guard against threads-path use
+        raise AttributeError(
+            "DeviceShardedBackend has no host-side shard backends; the "
+            "partitions live on the device mesh"
+        )
+
+    @shards.setter
+    def shards(self, _value):  # dataclass-free __init__ never sets this
+        raise AttributeError("device shards are mesh-resident")
+
+    # -- device program construction ------------------------------------------
+    def _rows_per_shard(self, k: int) -> int:
+        rows = math.ceil(self.size / self._n_shards)
+        if self.scorer == "pallas":
+            bn = _pallas_block_width(rows, k)
+            rows = math.ceil(rows / bn) * bn
+        return rows
+
+    def _placed_corpus(self, rows_per: int) -> jnp.ndarray:
+        corpus = self._corpus_cache.get(rows_per)
+        if corpus is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.distributed.partition import ShardingPolicy
+
+            # the mesh_layout() corpus spec, parameterized by this mesh's
+            # actual axis names (a custom mesh may not call its axis "data")
+            corpus_spec, _, _ = mesh_layout(ShardingPolicy(data_axes=self.shard_axes))
+            padded = rows_per * self._n_shards
+            emb = self.index.embeddings
+            if padded != self.size:
+                emb = jnp.concatenate(
+                    [emb, jnp.zeros((padded - self.size, self.index.dim), jnp.float32)]
+                )
+            corpus = jax.device_put(emb, NamedSharding(self.mesh, corpus_spec))
+            self._corpus_cache[rows_per] = corpus
+        return corpus
+
+    def _search_fn(self, k: int):
+        """Cached ``(corpus, (Q_BLOCK, d)) → ((Q_BLOCK, k), (Q_BLOCK, k))``
+        shard_map closure + its placed corpus, compiled once per k."""
+        entry = self._fn_cache.get(k)
+        if entry is not None:
+            return entry
+        rows_per = self._rows_per_shard(k)
+        padded = rows_per * self._n_shards
+        block_n = _pallas_block_width(rows_per, k) if self.scorer == "pallas" else None
+        fn, _ = self.index.sharded_search_fn(
+            self.mesh,
+            k,
+            self.shard_axes,
+            scorer=self.scorer,
+            interpret=self.interpret,
+            n_valid=self.size if padded != self.size else None,
+            block_n=block_n,
+        )
+        entry = (fn, self._placed_corpus(rows_per))
+        self._fn_cache[k] = entry
+        return entry
+
+    # -- search ---------------------------------------------------------------
+    def search_batch(
+        self,
+        queries: Sequence[str],
+        query_vecs: jnp.ndarray | None,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched sharded search, bit-identical to the unsharded index.
+
+        Queries are chunked into fixed ``(q_block, d)`` blocks (zero-padded)
+        and every chunk dispatches the same compiled shard_map program; all
+        chunks are dispatched before any result is read back, so device work
+        pipelines across chunks instead of syncing per block.
+        """
+        if query_vecs is None:
+            raise ValueError(f"backend {self.name!r} requires query_vecs")
+        k = min(k, self.size)
+        q = np.asarray(query_vecs, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"query_vecs must be (nq, d), got {q.shape}")
+        nq = q.shape[0]
+        if nq == 0:
+            return np.zeros((0, k), np.float32), np.zeros((0, k), np.int32)
+        fn, corpus = self._search_fn(k)
+        qb = self.q_block
+        pad = (-nq) % qb
+        if pad:
+            q = np.concatenate([q, np.zeros((pad, q.shape[1]), np.float32)], axis=0)
+        outs = [
+            fn(corpus, jnp.asarray(q[s : s + qb]))
+            for s in range(0, q.shape[0], qb)
+        ]
+        n_chunks = len(outs)
+        vals = np.concatenate([np.asarray(v, np.float32) for v, _ in outs])[:nq]
+        ids = np.concatenate([np.asarray(i, np.int32) for _, i in outs])[:nq]
+        self.counters.searches += 1
+        self.counters.shard_searches += self._n_shards * n_chunks
+        self.counters.merges += n_chunks * len(self.shard_axes)
+        return vals, ids
+
+    # -- payloads -------------------------------------------------------------
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Global ids resolve directly against the unsharded payloads — the
+        device path never re-homes passages."""
+        return self.index.get_passages(ids)
+
+    def shutdown(self) -> None:
+        """Nothing to stop: there is no host pool on the device path."""

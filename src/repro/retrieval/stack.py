@@ -1,0 +1,193 @@
+"""Declarative backend-stack construction — one ordered path for every caller.
+
+Five PRs of decorators left the repo with four ways to dress a backend map
+(shard, fault-inject, cache, make resilient) and a hand-rolled
+``resilient(cached(faulty(sharded(...))))`` composition repeated — with
+subtle ordering differences waiting to happen — across the CLI, the
+benchmarks, the examples, and the chaos tests. This module replaces that
+with a single validated recipe:
+
+    from repro.retrieval import BackendStackConfig, build_backend_stack
+
+    backends = build_backend_stack(
+        make_backends(index, passages, embedder, names=names),
+        BackendStackConfig(shards=4, shard_execution="device", cache_size=512),
+        index=index,
+    )
+
+Layer order is fixed and load-bearing (innermost → outermost):
+
+1. **shard** — corpus-level construction, not a wrapper: the dense backend
+   is *replaced* by an S-way :class:`~repro.retrieval.sharded.
+   ShardedBackend` over the index (threads or device execution).
+2. **faults** — :class:`~repro.retrieval.faults.FaultyBackend` around the
+   raw service: the thing that fails in production is the index service,
+   not your client-side cache.
+3. **cache** — :class:`~repro.retrieval.cache.CachedBackend`: hits must
+   short-circuit both the fault schedule and the shard fan-out.
+4. **resilience** — :class:`~repro.serving.resilience.ResilientBackend`
+   outermost: timeouts/retries/breakers must observe cache misses and
+   injected faults alike.
+
+``wrap_cached`` / ``wrap_faulty`` / ``scale_backends`` remain as thin
+deprecated shims for existing call sites; new code should build stacks
+here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Callable, Mapping
+
+from repro.retrieval.backend import RetrievalBackend
+from repro.retrieval.faults import FaultProfile, wrap_faulty
+from repro.retrieval.index import SCORERS, DenseIndex
+from repro.retrieval.sharded import EXECUTIONS, ShardedBackend
+
+if TYPE_CHECKING:  # import cycle: serving.resilience imports repro.retrieval
+    from repro.serving.resilience import ResilienceConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendStackConfig:
+    """Everything :func:`build_backend_stack` needs, validated up front.
+
+    Defaults are the identity stack (no sharding, no faults, no cache, no
+    resilience) — ``build_backend_stack(backends)`` returns an equivalent
+    map, so callers can thread one config through unconditionally.
+
+    * ``shards`` / ``shard_execution`` / ``shard_workers`` /
+      ``shard_scorer`` / ``shard_interpret`` — S-way dense-corpus
+      partitioning (``shards=1`` disables). ``shard_execution="device"``
+      lowers search + merge onto the jax device mesh
+      (:class:`~repro.retrieval.sharded.DeviceShardedBackend`);
+      ``"threads"`` is the host fan-out. ``shard_workers`` only applies to
+      threads execution.
+    * ``cache_size`` — exact query-result LRU capacity (0 disables).
+    * ``fault_profiles`` — backend name → seeded
+      :class:`~repro.retrieval.faults.FaultProfile` (empty disables).
+    * ``resilience`` — ``None`` disables; ``True`` enables with default
+      :class:`~repro.serving.resilience.ResilienceConfig`; or pass a config
+      instance. (Typed loosely to keep this module importable without the
+      serving layer.)
+    """
+
+    shards: int = 1
+    shard_execution: str = "threads"
+    shard_workers: int = 0
+    shard_scorer: str = "blocked"
+    shard_interpret: bool = False
+    cache_size: int = 0
+    fault_profiles: Mapping[str, FaultProfile] = dataclasses.field(default_factory=dict)
+    resilience: "ResilienceConfig | bool | None" = None
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shard_execution not in EXECUTIONS:
+            raise ValueError(
+                f"unknown shard_execution {self.shard_execution!r}; "
+                f"expected one of {EXECUTIONS}"
+            )
+        if self.shard_scorer not in SCORERS:
+            raise ValueError(
+                f"unknown shard_scorer {self.shard_scorer!r}; expected one of {SCORERS}"
+            )
+        if self.shard_workers < 0:
+            raise ValueError(f"shard_workers must be >= 0, got {self.shard_workers}")
+        if self.cache_size < 0:
+            raise ValueError(f"cache_size must be >= 0, got {self.cache_size}")
+        for name, profile in self.fault_profiles.items():
+            if not isinstance(profile, FaultProfile):
+                raise TypeError(
+                    f"fault_profiles[{name!r}] must be a FaultProfile, "
+                    f"got {type(profile).__name__}"
+                )
+
+    @property
+    def wants_sharding(self) -> bool:
+        """True when the dense backend gets replaced by a sharded one.
+
+        ``shards=1`` with device execution still builds (a 1-shard device
+        backend is not a no-op: the corpus becomes mesh-resident and search
+        dispatches the shard_map program — the S=1 column of the scaling
+        sweep).
+        """
+        return self.shards > 1 or self.shard_execution == "device"
+
+    @property
+    def is_identity(self) -> bool:
+        """True when building with this config returns an equivalent map."""
+        return (
+            not self.wants_sharding
+            and self.cache_size == 0
+            and not self.fault_profiles
+            and self.resolved_resilience() is None
+        )
+
+    def resolved_resilience(self):
+        """The effective :class:`ResilienceConfig`, or ``None`` when off."""
+        if self.resilience is None or self.resilience is False:
+            return None
+        if self.resilience is True:
+            from repro.serving.resilience import ResilienceConfig
+
+            return ResilienceConfig()
+        return self.resilience
+
+
+def build_backend_stack(
+    backends: Mapping[str, RetrievalBackend],
+    config: BackendStackConfig = BackendStackConfig(),
+    *,
+    index: DenseIndex | None = None,
+    clock: Callable[[], float] | None = None,
+    sleep: Callable[[float], None] | None = None,
+) -> dict[str, RetrievalBackend]:
+    """Build the decorator stack over a backend map in the one valid order.
+
+    ``index`` is the dense index to partition (required iff ``shards >
+    1``). ``clock`` / ``sleep`` are the injectable time sources the fault
+    and resilience layers accept — tests pass fakes to observe schedules
+    without wall-clock waits; production callers omit them.
+
+    Returns a new map; the input is never mutated. See the module docstring
+    for why the order (shard → faults → cache → resilience) is fixed.
+    """
+    out = dict(backends)
+    if config.wants_sharding:
+        if index is None:
+            raise ValueError("sharding requires the dense index to partition")
+        if "dense" not in out:
+            raise ValueError(
+                f"sharding partitions the 'dense' backend, which this map "
+                f"lacks (have {sorted(out)})"
+            )
+        out["dense"] = ShardedBackend.from_dense(
+            index,
+            n_shards=config.shards,
+            workers=config.shard_workers,
+            scorer=config.shard_scorer,
+            interpret=config.shard_interpret,
+            execution=config.shard_execution,
+        )
+    if config.fault_profiles:
+        out = wrap_faulty(
+            out, dict(config.fault_profiles), sleep=sleep if sleep is not None else time.sleep
+        )
+    if config.cache_size > 0:
+        from repro.retrieval.cache import wrap_cached
+
+        out = wrap_cached(out, capacity=config.cache_size)
+    resilience = config.resolved_resilience()
+    if resilience is not None:
+        from repro.serving.resilience import wrap_resilient
+
+        kwargs = {}
+        if clock is not None:
+            kwargs["clock"] = clock
+        if sleep is not None:
+            kwargs["sleep"] = sleep
+        out = wrap_resilient(out, resilience, **kwargs)
+    return out

@@ -77,6 +77,16 @@ def distributed_topk(
 
     all-gathers the k-candidate lists over ``axis_name`` (k × world bytes,
     tiny vs the corpus) and reduces. Indices must already be global.
+
+    This is the device-resident merge the ``execution="device"`` sharded
+    backend fuses into its search program. Tie order is part of the
+    contract: ``all_gather(tiled=True)`` concatenates candidates in
+    shard-major order and ``lax.top_k`` keeps the *first* of equal values,
+    so ties resolve to the lowest shard — and, since in-shard lists are
+    already lowest-id-first, to the lowest global id. That is exactly the
+    host-side ``merge_topk`` left-to-right order and the unsharded
+    ``top_k`` order, which is why sharded results are bit-identical to
+    unsharded ones even under tie-heavy score distributions.
     """
     gv = jax.lax.all_gather(local_vals, axis_name, axis=-1, tiled=True)
     gi = jax.lax.all_gather(local_idx, axis_name, axis=-1, tiled=True)

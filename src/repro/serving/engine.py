@@ -396,13 +396,19 @@ def build_paper_engine(
     *,
     embed_dim: int = 256,
     config: EngineConfig = EngineConfig(),
+    stack: "BackendStackConfig | None" = None,
 ) -> RAGEngine:
     """Engine wired to the paper's benchmark corpus (Appendix E).
 
     Builds every retrieval backend the router's catalog routes through
     (``catalog.backends_used()``) over the shared corpus — the paper
     catalog needs only the dense index; the extended catalog adds BM25 /
-    IVF / hybrid adapters deterministically (seeded IVF k-means)."""
+    IVF / hybrid adapters deterministically (seeded IVF k-means).
+
+    ``stack`` optionally dresses the backend map through
+    :func:`repro.retrieval.build_backend_stack` (shard → faults → cache →
+    resilience) — the declarative equivalent of hand-wrapping
+    ``engine.backends`` after construction."""
     from repro.data.benchmark import corpus_document
 
     embedder = HashedNGramEmbedder(dim=embed_dim)
@@ -412,6 +418,10 @@ def build_paper_engine(
     backends = make_backends(
         index, passages, embedder, names=("dense", *catalog.backends_used())
     )
+    if stack is not None:
+        from repro.retrieval import build_backend_stack
+
+        backends = build_backend_stack(backends, stack, index=index)
     return RAGEngine(
         policy_router,
         index,

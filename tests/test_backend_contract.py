@@ -1,0 +1,143 @@
+"""Shared ``search_batch`` conformance test over every retrieval backend.
+
+The :class:`~repro.retrieval.backend.RetrievalBackend` protocol documents a
+dtype/shape/order contract — float32 scores, int32 ids, ``(nq, k')`` rows
+sorted descending with ties resolving to the lowest passage id, ids in
+``[0, size)`` — and this module asserts it **once, parameterized over all
+backends** (raw, sharded in both executions, and every decorator), so a new
+backend or wrapper cannot drift from the contract without failing here.
+
+Exact backends (dense and its sharded/cached/faulty/resilient dressings)
+additionally pin ``k' == min(k, size)`` and bitwise equality with the plain
+dense backend — the decorator-transparency half of the contract.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.retrieval import (
+    CachedBackend,
+    DenseIndex,
+    FaultProfile,
+    HashedNGramEmbedder,
+    ShardedBackend,
+    line_passages,
+    make_backends,
+)
+from repro.retrieval.faults import FaultyBackend
+from repro.serving.resilience import ResilientBackend
+
+DIM = 32
+N_DOCS = 23
+
+_DOC = "\n".join(
+    f"passage {i} about topic {i % 5} with shared words and tokens" for i in range(N_DOCS)
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    embedder = HashedNGramEmbedder(dim=DIM)
+    passages = line_passages(_DOC)
+    index, _ = DenseIndex.build(passages, embedder)
+    backends = make_backends(
+        index, passages, embedder, names=("dense", "bm25", "ivf", "hybrid")
+    )
+    queries = [f"topic {i} shared words" for i in range(4)]
+    query_vecs = embedder.embed(queries)
+    return index, backends, queries, query_vecs
+
+
+def _all_backends(index, backends):
+    """Every backend the repo can serve, one construction path each."""
+    dense = backends["dense"]
+    zero_fault = FaultyBackend(dense, FaultProfile())  # parity profile
+    return {
+        "dense": dense,
+        "bm25": backends["bm25"],
+        "ivf": backends["ivf"],
+        "hybrid": backends["hybrid"],
+        "sharded_threads_s3": ShardedBackend.from_dense(index, n_shards=3),
+        "sharded_device_s1": ShardedBackend.from_dense(
+            index, n_shards=1, execution="device"
+        ),
+        "cached": CachedBackend(dense, capacity=8),
+        "faulty_zero": zero_fault,
+        "resilient": ResilientBackend(dense),
+    }
+
+
+EXACT = {
+    "dense", "sharded_threads_s3", "sharded_device_s1",
+    "cached", "faulty_zero", "resilient",
+}
+NAMES = [
+    "dense", "bm25", "ivf", "hybrid", "sharded_threads_s3",
+    "sharded_device_s1", "cached", "faulty_zero", "resilient",
+]
+
+
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("k", [1, 5, 40])
+def test_search_batch_contract(corpus, name, k):
+    index, backends, queries, query_vecs = corpus
+    backend = _all_backends(index, backends)[name]
+
+    scores, ids = backend.search_batch(queries, query_vecs, k)
+    scores, ids = np.asarray(scores), np.asarray(ids)
+
+    # dtypes: float32 scores, int32 ids — documented on the protocol
+    assert scores.dtype == np.float32, f"{name}: scores dtype {scores.dtype}"
+    assert ids.dtype == np.int32, f"{name}: ids dtype {ids.dtype}"
+
+    # shapes: one row per query in input order, k' <= min(k, size) columns
+    nq = len(queries)
+    assert scores.shape[0] == nq and ids.shape == scores.shape
+    assert scores.shape[1] <= min(k, backend.size)
+    if name in EXACT:
+        assert scores.shape[1] == min(k, backend.size), (
+            f"{name}: exact backends must return full min(k, size) width"
+        )
+
+    # ids are valid passage ids, unique per row
+    assert ids.min() >= 0 and ids.max() < backend.size
+    for row in ids:
+        assert len(set(row.tolist())) == len(row), f"{name}: duplicate ids in a row"
+
+    # descending scores; ties resolve to the lowest passage id. The one
+    # sanctioned exception: a backend may set ``scores_are_ranking = False``
+    # (hybrid RRF — rows are ranked by fused reciprocal rank but *report*
+    # the dense cosine per id for confidence comparability), in which case
+    # row order is the contract and scores need only be finite.
+    if getattr(backend, "scores_are_ranking", True):
+        for srow, irow in zip(scores, ids):
+            assert np.all(srow[:-1] >= srow[1:]), f"{name}: scores not descending"
+            tie = srow[:-1] == srow[1:]
+            if tie.any():
+                assert np.all(irow[:-1][tie] < irow[1:][tie]), (
+                    f"{name}: tied scores must order by ascending passage id"
+                )
+    else:
+        assert np.isfinite(scores).all(), f"{name}: non-finite reported scores"
+
+
+@pytest.mark.parametrize("name", sorted(EXACT - {"dense"}))
+def test_exact_backends_bitwise_equal_dense(corpus, name):
+    """Every exact dressing of the dense backend is invisible in results."""
+    index, backends, queries, query_vecs = corpus
+    all_b = _all_backends(index, backends)
+    ref_s, ref_i = all_b["dense"].search_batch(queries, query_vecs, 7)
+    s, i = all_b[name].search_batch(queries, query_vecs, 7)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s, np.float32))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i, np.int32))
+
+
+def test_contract_holds_for_single_and_empty_batches(corpus):
+    index, backends, queries, query_vecs = corpus
+    dense = backends["dense"]
+    s, i = dense.search_batch(queries[:1], query_vecs[:1], 3)
+    assert np.asarray(s).shape == (1, 3) and np.asarray(i).dtype == np.int32
+    s0, i0 = dense.search_batch([], jnp.zeros((0, DIM), jnp.float32), 3)
+    assert np.asarray(s0).shape == (0, 3) and np.asarray(i0).shape == (0, 3)

@@ -1,0 +1,168 @@
+"""The declarative backend stack: one ordered construction path.
+
+``build_backend_stack`` replaced the hand-rolled
+``resilient(cached(faulty(sharded(...))))`` composition; these tests pin
+what made that replacement safe: the layer order is fixed (resilience →
+cache → faults → shard, outermost-in), the identity config is a true
+no-op, every config knob is validated at construction, and the deprecated
+``scale_backends`` shim delegates here bit-identically.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.retrieval import (
+    BackendStackConfig,
+    CachedBackend,
+    DenseBackend,
+    DenseIndex,
+    DeviceShardedBackend,
+    FaultProfile,
+    ShardedBackend,
+    build_backend_stack,
+)
+from repro.retrieval.cache import scale_backends
+from repro.retrieval.chunking import Passage
+from repro.retrieval.faults import FaultyBackend
+from repro.serving.resilience import ResilienceConfig, ResilientBackend
+
+
+def _corpus(n: int = 29, d: int = 16, seed: int = 0) -> DenseIndex:
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    passages = [Passage(i, f"passage {i}") for i in range(n)]
+    return DenseIndex(jnp.asarray(emb), passages)
+
+
+def _queries(nq: int = 5, d: int = 16, seed: int = 1) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
+
+
+@pytest.fixture()
+def dense_map():
+    index = _corpus()
+    return index, {"dense": DenseBackend(index)}
+
+
+def test_full_stack_layer_order(dense_map):
+    """Outermost-in: resilient → cached → faulty → sharded."""
+    index, backends = dense_map
+    out = build_backend_stack(
+        backends,
+        BackendStackConfig(
+            shards=3,
+            cache_size=8,
+            fault_profiles={"dense": FaultProfile()},
+            resilience=True,
+        ),
+        index=index,
+    )
+    b = out["dense"]
+    assert isinstance(b, ResilientBackend)
+    assert isinstance(b.inner, CachedBackend)
+    assert isinstance(b.inner.inner, FaultyBackend)
+    assert isinstance(b.inner.inner.inner, ShardedBackend)
+    # the full dressing with a parity fault profile is result-invisible
+    q = _queries()
+    ref_s, ref_i = DenseBackend(index).search_batch(None, q, 7)
+    s, i = b.search_batch(None, q, 7)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
+def test_identity_config_is_a_no_op(dense_map):
+    index, backends = dense_map
+    cfg = BackendStackConfig()
+    assert cfg.is_identity and not cfg.wants_sharding
+    out = build_backend_stack(backends, cfg, index=index)
+    assert out is not backends  # new map, never mutates the input
+    assert out["dense"] is backends["dense"]  # same objects, zero wrapping
+
+
+def test_device_execution_shards_even_at_s1(dense_map):
+    """shards=1 + device is NOT identity: the S=1 mesh-resident column."""
+    index, backends = dense_map
+    cfg = BackendStackConfig(shards=1, shard_execution="device")
+    assert cfg.wants_sharding and not cfg.is_identity
+    out = build_backend_stack(backends, cfg, index=index)
+    assert isinstance(out["dense"], DeviceShardedBackend)
+    q = _queries()
+    ref_s, ref_i = backends["dense"].search_batch(None, q, 5)
+    s, i = out["dense"].search_batch(None, q, 5)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
+@pytest.mark.parametrize(
+    "kwargs, match",
+    [
+        (dict(shards=0), "shards"),
+        (dict(shard_execution="gpu"), "shard_execution"),
+        (dict(shard_scorer="fastest"), "shard_scorer"),
+        (dict(shard_workers=-1), "shard_workers"),
+        (dict(cache_size=-8), "cache_size"),
+    ],
+)
+def test_config_validation(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        BackendStackConfig(**kwargs)
+
+
+def test_fault_profiles_must_be_fault_profiles():
+    with pytest.raises(TypeError, match="FaultProfile"):
+        BackendStackConfig(fault_profiles={"dense": {"failure_rate": 0.5}})
+
+
+def test_sharding_requires_index_and_dense_entry(dense_map):
+    index, backends = dense_map
+    cfg = BackendStackConfig(shards=2)
+    with pytest.raises(ValueError, match="dense index"):
+        build_backend_stack(backends, cfg)
+    with pytest.raises(ValueError, match="'dense'"):
+        build_backend_stack({"other": backends["dense"]}, cfg, index=index)
+
+
+def test_resolved_resilience_forms():
+    assert BackendStackConfig().resolved_resilience() is None
+    assert BackendStackConfig(resilience=False).resolved_resilience() is None
+    assert isinstance(
+        BackendStackConfig(resilience=True).resolved_resilience(), ResilienceConfig
+    )
+    cfg = ResilienceConfig(timeout_ms=50.0)
+    assert BackendStackConfig(resilience=cfg).resolved_resilience() is cfg
+
+
+def test_scale_backends_shim_delegates(dense_map):
+    """The deprecated shim and the stack builder cannot drift: same layers,
+    bit-identical results."""
+    index, backends = dense_map
+    via_shim = scale_backends(backends, index, cache_size=8, shards=3)
+    via_stack = build_backend_stack(
+        backends, BackendStackConfig(shards=3, cache_size=8), index=index
+    )
+    for out in (via_shim, via_stack):
+        assert isinstance(out["dense"], CachedBackend)
+        assert isinstance(out["dense"].inner, ShardedBackend)
+    q = _queries()
+    s1, i1 = via_shim["dense"].search_batch(None, q, 6)
+    s2, i2 = via_stack["dense"].search_batch(None, q, 6)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_engine_accepts_stack_config():
+    """build_paper_engine(stack=...) dresses its backend map declaratively."""
+    from repro.core.policies import make_policy
+    from repro.serving.engine import build_paper_engine
+
+    eng = build_paper_engine(
+        make_policy("router_default"), stack=BackendStackConfig(cache_size=8)
+    )
+    assert isinstance(eng.backends["dense"], CachedBackend)
+    ref = build_paper_engine(make_policy("router_default"))
+    got = eng.answer_batch(["What factors drive retrieval depth tradeoffs?"])
+    want = ref.answer_batch(["What factors drive retrieval depth tradeoffs?"])
+    assert [r.answer for r in got] == [r.answer for r in want]

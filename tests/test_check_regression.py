@@ -20,7 +20,8 @@ STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 
 def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
-             res_completed=28, res_degraded=12, res_rejected=0, res_opens=1):
+             res_completed=28, res_degraded=12, res_rejected=0, res_opens=1,
+             shard_searches=4, shard_merges=1, identical=True):
     return {
         "benchmark": "paper_28_queries",
         "batched_qps": 500.0,  # telemetry, ungated
@@ -38,6 +39,21 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
             "rejected": res_rejected,
             "breaker_opens": res_opens,
             "retries": 7,  # telemetry, ungated
+        },
+        "sharding_scaling": {
+            "gate": {
+                "corpus_docs": 1_000_000,  # telemetry, ungated
+                "device_s4": {
+                    "shard_searches": shard_searches,
+                    "merges": shard_merges,
+                    "identical": identical,
+                },
+                "threads_s4": {
+                    "shard_searches": 4,
+                    "merges": 3,
+                    "identical": identical,
+                },
+            },
         },
     }
 
@@ -131,6 +147,21 @@ def test_resilience_counters_are_exact_both_directions():
     fails = compare(_serving(), _serving(res_rejected=3),
                     SERVING_METRICS, threshold=0.2)
     assert len(fails) == 1 and "resilience.rejected" in fails[0]
+
+
+def test_sharding_scaling_counters_are_exact():
+    """The scaling sweep's S=4 counters are pure functions of the batch
+    shape, the q_block chunk width, and S; the identical bit is the
+    device-vs-unsharded bitwise contract. Any drift — extra dispatches,
+    a changed merge topology, or a lost exactness bit — is structural."""
+    # more per-shard dispatches: the chunking or fan-out changed
+    fails = compare(_serving(), _serving(shard_searches=8, shard_merges=2),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("exact" in f for f in fails)
+    # the device path stopped matching unsharded bit-for-bit: hard fail
+    fails = compare(_serving(), _serving(identical=False),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("identical" in f for f in fails)
 
 
 def test_gate_fails_on_counter_regressions(tmp_path):

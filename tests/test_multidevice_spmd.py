@@ -17,7 +17,11 @@ import pytest
 # from the default run (pytest.ini), opt in with `-m slow`.
 pytestmark = pytest.mark.slow
 
+# JAX_PLATFORMS=cpu matters: without it jax probes for a TPU backend first
+# and a TPU-less container burns ~8 minutes in metadata-fetch retries per
+# subprocess before falling back to the (forced 8-device) CPU platform.
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu",
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
 
 

@@ -450,13 +450,18 @@ def test_ladder_extended_catalog_ends_direct_and_never_deepens():
 # --------------------------------------------------------------------------- #
 def _resilient_stack(eng, *, shards: int = 1, cache: int = 0):
     """The full CLI decorator stack with a zero fault profile everywhere."""
-    eng.backends = scale_backends(eng.backends, eng.index, shards=shards)
-    eng.backends = wrap_faulty(
-        eng.backends, {name: FaultProfile() for name in eng.backends}
+    from repro.retrieval import BackendStackConfig, build_backend_stack
+
+    eng.backends = build_backend_stack(
+        eng.backends,
+        BackendStackConfig(
+            shards=shards,
+            cache_size=cache,
+            fault_profiles={name: FaultProfile() for name in eng.backends},
+            resilience=ResilienceConfig(),
+        ),
+        index=eng.index,
     )
-    if cache:
-        eng.backends = wrap_cached(eng.backends, capacity=cache)
-    eng.backends = wrap_resilient(eng.backends, ResilienceConfig())
     return eng
 
 
