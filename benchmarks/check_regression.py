@@ -29,6 +29,12 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     keyed to the backend call index and the cell is single-threaded, so
     any drift means the retry/breaker state machine or the degradation
     ladder changed behaviour — docs/resilience.md).
+  - ``backends.gate.*`` — the per-backend micro cell's structure counters
+    (*exact*, band 0): returned row widths, non-sentinel hit counts, S=3
+    sparse-sharding bit-identity booleans, BM25 posting mass + compiled-
+    closure count, IVF bag width + closure count. Pure functions of the
+    seeded corpus and the 28 paper queries; the cell's per-backend qps is
+    telemetry only (docs/retrieval.md).
   - ``sharding_scaling.gate.{device_s4,threads_s4}.*`` — the scaling
     sweep's deterministic work counters (per-shard search executions, top-k
     merge invocations) and bit-identity booleans for the S=4 arms
@@ -181,6 +187,61 @@ GATED_METRICS: dict[str, list[Metric]] = {
         Metric(
             "sharding_scaling.gate.threads_s4.identical",
             "host-threads S=4 bit-identity vs unsharded DenseIndex",
+            exact=True,
+        ),
+        # band 0 (exact): the per-backend cell's counters are pure functions
+        # of the seeded corpus + the 28 paper queries — returned row widths,
+        # non-sentinel hit counts, sparse-sharding bit-identity, and the
+        # device-path structure counters (posting mass, compiled-closure
+        # counts, IVF bag width). Any drift means tokenization, the sentinel
+        # contract, the pow2 bucketing, or the replicated-stats sharding
+        # changed — never noise. Per-backend qps in the same cell stays
+        # ungated telemetry (docs/retrieval.md).
+        *[
+            Metric(
+                f"backends.gate.row_width.{b}",
+                f"{b} backend returned row width k' (deterministic)",
+                exact=True,
+            )
+            for b in ("dense", "bm25", "ivf", "hybrid")
+        ],
+        *[
+            Metric(
+                f"backends.gate.real_hits.{b}",
+                f"{b} backend non-sentinel hits over the paper batch",
+                exact=True,
+            )
+            for b in ("dense", "bm25", "ivf", "hybrid")
+        ],
+        *[
+            Metric(
+                f"backends.gate.sharded_identical.{b}",
+                f"S=3 sharded {b} bit-identity vs unsharded",
+                exact=True,
+            )
+            for b in ("dense", "bm25", "ivf")
+        ],
+        Metric(
+            "backends.gate.bm25_postings",
+            "BM25 posting-list mass (deterministic)",
+            exact=True,
+        ),
+        Metric(
+            "backends.gate.bm25_closures",
+            "BM25 compiled (k, edge-bucket) closures for the paper batch",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "backends.gate.ivf_bag_width",
+            "IVF embedding-bag static candidate width (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "backends.gate.ivf_closures",
+            "IVF compiled (k, n_probe) closures for the paper batch",
+            higher_is_better=False,
             exact=True,
         ),
     ],

@@ -382,6 +382,131 @@ def bench_catalog_comparison(artifact_path: str | None = None) -> list[tuple[str
     return out
 
 
+def bench_backends(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
+    """Per-backend retrieval micro cell for ``BENCH_serving.json``.
+
+    Serves the 28 paper queries through each retrieval backend of the
+    extended catalog (dense / bm25 / ivf / hybrid) at a fixed ``k`` and
+    reports warm per-backend throughput. Wall-clock qps is hardware-bound
+    telemetry; the ``gate`` section carries the deterministic structure
+    counters benchmarks/check_regression.py exact-gates (band 0):
+
+    * ``row_width.<name>`` — the returned ``k'``: dense/bm25/hybrid pad or
+      clamp to ``min(k, size)``; IVF's width is the widest all-finite
+      prefix of the probed candidates, so a drift means the probe set or
+      the truncation contract changed.
+    * ``real_hits.<name>`` — non-sentinel ids over the 28-row result. BM25
+      rows end in ``(id=-1, score=0.0)`` sentinels wherever fewer than k
+      passages share a term with the query; any drift means tokenization,
+      the posting layout, or the sentinel contract moved.
+    * ``sharded_identical.{dense,bm25,ivf}`` — 3-way
+      :class:`~repro.retrieval.sharded.ShardedBackend` results are bitwise
+      equal to the unsharded backend (the replicated-global-stats
+      contract, docs/retrieval.md#sharding-sparse-backends---shard-backends).
+    * ``bm25_postings`` / ``bm25_closures`` — total posting-list mass and
+      the number of compiled ``(k, edge-bucket)`` closures after serving
+      the batch: extra closures mean the pow2 edge-bucketing regressed
+      into per-shape recompiles.
+    * ``ivf_bag_width`` / ``ivf_closures`` — the static candidate width of
+      the embedding-bag gather (pow2 bucket over the ``n_probe`` largest
+      posting lists) and the compiled-closure count; a wider bag means the
+      cluster balance or bucketing changed.
+    """
+    import json
+    import os
+
+    from repro.data.benchmark import BENCHMARK_QUERIES, corpus_document
+    from repro.retrieval import (
+        DenseIndex,
+        HashedNGramEmbedder,
+        ShardedBackend,
+        line_passages,
+        make_backends,
+    )
+
+    queries = list(BENCHMARK_QUERIES)
+    n, k = len(queries), 8
+    embedder = HashedNGramEmbedder(dim=256)
+    passages = line_passages(corpus_document())
+    index, _ = DenseIndex.build(passages, embedder)
+    backends = make_backends(
+        index, passages, embedder, names=("dense", "bm25", "ivf", "hybrid")
+    )
+    qvecs = embedder.embed(queries)
+
+    out, cells = [], {}
+    row_width, real_hits = {}, {}
+    for name, backend in backends.items():
+        backend.search_batch(queries, qvecs, k)  # warm: builds + jit closures
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            scores, ids = backend.search_batch(queries, qvecs, k)
+            walls.append(time.perf_counter() - t0)
+        wall = float(np.median(walls))
+        ids_np = np.asarray(ids)
+        row_width[name] = int(ids_np.shape[1])
+        real_hits[name] = int((ids_np >= 0).sum())
+        qps = n / wall if wall else None
+        cells[name] = {"qps": qps, "row_width": row_width[name], "real_hits": real_hits[name]}
+        out.append(
+            (
+                f"backend_{name}_k{k}",
+                wall / n * 1e6,
+                f"{qps or float('nan'):.0f} q/s width={row_width[name]} "
+                f"hits={real_hits[name]}/{n * row_width[name]}",
+            )
+        )
+
+    # 3-way sharded vs unsharded bit-identity, one arm per shardable method.
+    # Dense is re-checked here at S=3 (the scaling sweep gates S=4) so all
+    # three arms ride the same corpus; bm25/ivf are the new sparse contract.
+    sharded_identical = {}
+    sharded = {
+        "dense": ShardedBackend.from_dense(index, n_shards=3),
+        "bm25": ShardedBackend.from_bm25(backends["bm25"], n_shards=3),
+        "ivf": ShardedBackend.from_ivf(backends["ivf"], n_shards=3),
+    }
+    for name, sb in sharded.items():
+        ref_s, ref_i = backends[name].search_batch(queries, qvecs, k)
+        s, i = sb.search_batch(queries, qvecs, k)
+        sharded_identical[name] = bool(
+            np.array_equal(np.asarray(s), np.asarray(ref_s, np.float32))
+            and np.array_equal(np.asarray(i), np.asarray(ref_i, np.int32))
+        )
+
+    bm, iv = backends["bm25"].bm25, backends["ivf"].ivf
+    gate = {
+        "k": k,
+        "n_queries": n,
+        "row_width": row_width,
+        "real_hits": real_hits,
+        "sharded_identical": sharded_identical,
+        "bm25_postings": int(bm._post_doc_np.size),
+        "bm25_closures": len(bm._fn_cache),
+        "ivf_bag_width": int(iv._bag_width(backends["ivf"].n_probe)),
+        "ivf_closures": len(getattr(iv, "_fn_cache", {})),
+    }
+    cell = {"cell": "backends_paper28", "per_backend": cells, "gate": gate}
+
+    if artifact_path and os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            artifact = json.load(f)
+        artifact["backends"] = cell
+        with open(artifact_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+
+    out.append(
+        (
+            "backend_sharded_identity_s3",
+            0.0,
+            " ".join(f"{m}={sharded_identical[m]}" for m in ("dense", "bm25", "ivf")),
+        )
+    )
+    return out
+
+
 def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
     """Cached + sharded retrieval cells for ``BENCH_serving.json``.
 
@@ -687,6 +812,7 @@ def main() -> None:
         [bench_routing,
          lambda: bench_engine_batched(serving_artifact, iters=3),
          lambda: bench_catalog_comparison(serving_artifact),
+         lambda: bench_backends(serving_artifact),
          lambda: bench_cache_sharding(serving_artifact),
          lambda: bench_resilience(serving_artifact),
          lambda: bench_sharding_scaling(serving_artifact),
@@ -695,6 +821,7 @@ def main() -> None:
         else [bench_routing, bench_retrieval, bench_kernel_oracles, bench_engine,
               lambda: bench_engine_batched(serving_artifact),
               lambda: bench_catalog_comparison(serving_artifact),
+              lambda: bench_backends(serving_artifact),
               lambda: bench_cache_sharding(serving_artifact),
               lambda: bench_resilience(serving_artifact),
               lambda: bench_sharding_scaling(serving_artifact, million=True),

@@ -29,6 +29,7 @@ def main() -> None:
         import os
 
         from benchmarks.micro import (
+            bench_backends,
             bench_cache_sharding,
             bench_catalog_comparison,
             bench_engine,
@@ -50,6 +51,7 @@ def main() -> None:
             bench_engine,
             lambda: bench_engine_batched(serving_artifact),
             lambda: bench_catalog_comparison(serving_artifact),
+            lambda: bench_backends(serving_artifact),
             lambda: bench_cache_sharding(serving_artifact),
             lambda: bench_resilience(serving_artifact),
             lambda: bench_sharding_scaling(serving_artifact, million=True),

@@ -46,6 +46,14 @@ def main() -> None:
         "unsharded). 1 = single index",
     )
     ap.add_argument(
+        "--shard-backends", default="dense", metavar="NAMES",
+        help="comma-separated backend names --shards partitions (default "
+        "'dense'). Adding bm25/ivf shards those too — replicated global "
+        "idf/avgdl and centroid stats keep results bit-identical; sparse "
+        "methods always shard on the threads path (--shard-execution "
+        "governs dense only)",
+    )
+    ap.add_argument(
         "--shard-execution", default="threads", choices=("threads", "device"),
         help="how sharded search runs: 'threads' fans per-shard searches out "
         "on the host; 'device' lowers search + top-k merge onto the jax "
@@ -190,6 +198,9 @@ def main() -> None:
         BackendStackConfig(
             shards=args.shards,
             shard_execution=args.shard_execution,
+            shard_backends=tuple(
+                n.strip() for n in args.shard_backends.split(",") if n.strip()
+            ),
             cache_size=args.cache_size,
             fault_profiles=fault_profiles,
             resilience=resilience,

@@ -145,7 +145,18 @@ class RetrievalBackend(Protocol):
           set ``scores_are_ranking = False`` (hybrid RRF does — rows are
           ranked by fused reciprocal rank but report the dense cosine per
           id so confidences stay comparable across backends). Row *order*
-          is then the contract; reported scores need only be finite."""
+          is then the contract; reported scores need only be finite.
+        * **Empty-slot sentinels**: a backend whose candidate pool can run
+          dry mid-row (BM25 — a query may lexically match fewer than ``k``
+          passages, or none) fills the unmatched tail with the sentinel
+          pair ``(id=-1, score=0.0)`` instead of fabricating passage ids.
+          Sentinels always form a contiguous row *suffix* (real hits
+          first), their score is exactly ``0.0``, and the descending /
+          unique-ids clauses apply to the real-hit prefix only. Consumers
+          must treat ``id == -1`` as "no passage" — the serving
+          ``assemble`` stage drops sentinel slots before resolving
+          payloads, and ``ShardedBackend`` merges them last and never
+          offsets them into real ids."""
         ...
 
     def get_passages(self, ids: Sequence[int]) -> list[Passage]:
@@ -201,12 +212,25 @@ class IVFBackend:
     name = "ivf"
     requires_query_vecs = True
 
-    def __init__(self, ivf: IVFIndex, passages: Sequence[Passage] | None = None, *, n_probe: int = 4):
+    def __init__(
+        self,
+        ivf: IVFIndex,
+        passages: Sequence[Passage] | None = None,
+        *,
+        n_probe: int = 4,
+        truncate_nonfinite: bool = True,
+    ):
         if n_probe < 1:
             raise ValueError(f"n_probe must be >= 1, got {n_probe}")
         self.ivf = ivf
         self.n_probe = min(n_probe, ivf.n_clusters)
         self.passages = list(passages) if passages is not None else None
+        # ShardedBackend.from_ivf sets truncate_nonfinite=False on its
+        # per-shard adapters: truncating each shard's row to its own finite
+        # prefix before the merge would discard real candidates another
+        # shard can't supply — the sharded wrapper truncates once, globally,
+        # after the merge instead.
+        self.truncate_nonfinite = bool(truncate_nonfinite)
         frac = self.n_probe / ivf.n_clusters
         dim = int(ivf.embeddings.shape[1])
         self.cost = BackendCost(
@@ -239,10 +263,11 @@ class IVFBackend:
         # instead of repeating the best hit: duplicated ids and a re-rising
         # score tail would break the protocol's descending/unique-ids
         # contract (k' <= k is first-class for approximate backends).
-        bad = ~np.isfinite(scores)
-        if bad.any():
-            width = int((~bad).sum(axis=1).min())
-            scores, ids = scores[:, :width], ids[:, :width]
+        if self.truncate_nonfinite:
+            bad = ~np.isfinite(scores)
+            if bad.any():
+                width = int((~bad).sum(axis=1).min())
+                scores, ids = scores[:, :width], ids[:, :width]
         return scores, ids
 
     def get_passages(self, ids) -> list[Passage]:

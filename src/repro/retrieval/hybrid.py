@@ -10,6 +10,24 @@ Two standard fusions over (dense MIPS, BM25) candidate lists:
 The fused retriever exposes the same (scores, ids) contract as DenseIndex so
 a hybrid bundle drops into the catalog without touching the routing API
 (paper §VIII.F).
+
+Two implementations of each fusion:
+
+* the scalar :func:`rrf_fuse` / :func:`weighted_fuse` — the reference
+  per-row semantics (and the differential-testing oracle);
+* the batched ``_rrf_fuse_rows`` / ``_weighted_fuse_rows`` —
+  **one vectorized numpy pass for the whole batch** (duplicate merge via a
+  row-banded flattened binary search, selection via one ``lexsort`` on
+  ``(-fused score, id)``), bitwise identical per row to the scalar path on
+  sentinel-free inputs. :class:`HybridRetriever.search_batch` runs the
+  batched path, so fusing a batch costs two candidate searches plus O(n·m)
+  vector work — no per-row Python dict loops on the serving path.
+
+Sparse candidate rows may carry the BM25 empty-slot sentinel
+``(id=-1, score=0.0)``; the batched fusions exclude sentinel slots from
+aggregation (and from weighted min-max normalization). The dense list
+always supplies ``m >= k`` real candidates, so fused rows are always full
+width — hybrid rows never contain sentinels.
 """
 
 from __future__ import annotations
@@ -25,7 +43,8 @@ from repro.retrieval.index import DenseIndex, SearchResult
 def rrf_fuse(
     lists: list[tuple[np.ndarray, np.ndarray]], k: int, *, rrf_k: float = 60.0
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Fuse ranked (scores, ids) lists by reciprocal rank."""
+    """Fuse ranked (scores, ids) lists by reciprocal rank (reference/oracle
+    implementation; assumes sentinel-free candidate lists)."""
     agg: dict[int, float] = {}
     for _, ids in lists:
         for rank, pid in enumerate(np.asarray(ids).tolist()):
@@ -43,6 +62,9 @@ def weighted_fuse(
     *,
     w_dense: float = 0.5,
 ) -> tuple[np.ndarray, np.ndarray]:
+    """Min-max-normalized weighted-sum fusion (reference/oracle
+    implementation; assumes sentinel-free candidate lists)."""
+
     def _norm(scores: np.ndarray) -> np.ndarray:
         s = np.asarray(scores, np.float64)
         span = s.max() - s.min() if s.size else 0.0
@@ -57,6 +79,135 @@ def weighted_fuse(
         np.array([s for _, s in order], np.float32),
         np.array([pid for pid, _ in order], np.int32),
     )
+
+
+# --------------------------------------------------------------------------- #
+# Batched fusion internals                                                     #
+# --------------------------------------------------------------------------- #
+def _match_sparse(
+    d_ids: np.ndarray, s_ids: np.ndarray, size: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-row duplicate detection between dense and sparse candidate rows.
+
+    Returns ``(match (n, m) bool, s_rank (n, m) int, matched_sparse
+    (n, ms) bool)``: for each dense candidate, whether the same passage id
+    appears in that row's sparse list and at which sparse rank; and for
+    each sparse slot, whether a dense candidate claimed it. Vectorized
+    across rows by banding ids into disjoint per-row integer ranges
+    (``row * (size + 1) + id``) so one flat ``searchsorted`` serves the
+    whole batch. Sentinel slots (id −1) never match (dense ids are >= 0).
+    """
+    n, m = d_ids.shape
+    ms = s_ids.shape[1]
+    base = size + 1
+    order = np.argsort(s_ids, axis=1, kind="stable")
+    s_sorted = np.take_along_axis(s_ids, order, axis=1)
+    rowoff = (np.arange(n, dtype=np.int64) * base)[:, None]
+    # each row's band is ascending and bands are disjoint (sentinel −1 of
+    # row r lands at r*base − 1, still above row r−1's reals), so the
+    # flattened array is globally sorted
+    flat = (s_sorted.astype(np.int64) + rowoff).ravel()
+    targets = (d_ids.astype(np.int64) + rowoff).ravel()
+    pos = np.searchsorted(flat, targets)
+    hit = (pos < flat.size) & (flat[np.minimum(pos, flat.size - 1)] == targets)
+    match = hit.reshape(n, m)
+    local = (pos - np.repeat(np.arange(n, dtype=np.int64) * ms, m)).reshape(n, m)
+    local = np.clip(local, 0, ms - 1)
+    s_rank = np.take_along_axis(order, local, axis=1)  # original sparse column
+    matched_sparse = np.zeros((n, ms), bool)
+    rows_rep = np.repeat(np.arange(n), m).reshape(n, m)
+    matched_sparse[rows_rep[match], s_rank[match]] = True
+    return match, s_rank, matched_sparse
+
+
+def _select_topk(
+    fused: np.ndarray, ids_cat: np.ndarray, report: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row top-k by (fused score desc, id asc) over the candidate
+    union; returns ``(report scores (n, k) float32, ids (n, k) int32)``."""
+    order = np.lexsort((ids_cat, -fused), axis=-1)[:, :k]
+    return (
+        np.take_along_axis(report, order, axis=-1).astype(np.float32),
+        np.take_along_axis(ids_cat, order, axis=-1).astype(np.int32),
+    )
+
+
+def _rrf_fuse_rows(
+    d_scores: np.ndarray,
+    d_ids: np.ndarray,
+    s_ids: np.ndarray,
+    k: int,
+    size: int,
+    *,
+    rrf_k: float = 60.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched RRF over (dense, sparse) candidate rows.
+
+    Fused order matches the scalar :func:`rrf_fuse` per row bitwise (same
+    float64 rank-weight sums, dense contribution added first); reported
+    scores are the *dense cosine* of each fused id (0.0 for sparse-only
+    ids) — the confidence-comparability convention ``HybridBackend``
+    documents.
+    """
+    n, m = d_ids.shape
+    ms = s_ids.shape[1]
+    w_d = 1.0 / (rrf_k + np.arange(m, dtype=np.float64) + 1.0)
+    w_s = 1.0 / (rrf_k + np.arange(ms, dtype=np.float64) + 1.0)
+    match, s_rank, matched_sparse = _match_sparse(d_ids, s_ids, size)
+    fused_dense = np.broadcast_to(w_d, (n, m)) + np.where(match, w_s[s_rank], 0.0)
+    drop = matched_sparse | (s_ids < 0)  # claimed by dense, or sentinel
+    fused_sparse = np.where(drop, -np.inf, np.broadcast_to(w_s, (n, ms)))
+    fused = np.concatenate([fused_dense, fused_sparse], axis=1)
+    ids_cat = np.concatenate([d_ids, s_ids], axis=1)
+    report = np.concatenate(
+        [d_scores.astype(np.float64), np.zeros((n, ms))], axis=1
+    )
+    return _select_topk(fused, ids_cat, report, k)
+
+
+def _weighted_fuse_rows(
+    d_scores: np.ndarray,
+    d_ids: np.ndarray,
+    s_scores: np.ndarray,
+    s_ids: np.ndarray,
+    k: int,
+    size: int,
+    *,
+    w_dense: float = 0.5,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched weighted-sum fusion over (dense, sparse) candidate rows.
+
+    Row-wise min-max normalization in float64 then
+    ``w_dense * dense + (1 − w_dense) * sparse``, matching the scalar
+    :func:`weighted_fuse` bitwise per row on sentinel-free inputs.
+    Sentinel slots are excluded from both the normalization statistics and
+    the candidate union. Reported scores are the fused values.
+    """
+    n, m = d_ids.shape
+    ms = s_ids.shape[1]
+
+    def _norm(scores: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        s = scores.astype(np.float64)
+        masked = np.where(valid, s, np.nan)
+        lo = np.nanmin(np.where(valid.any(axis=1, keepdims=True), masked, 0.0), axis=1, keepdims=True)
+        hi = np.nanmax(np.where(valid.any(axis=1, keepdims=True), masked, 0.0), axis=1, keepdims=True)
+        span = hi - lo
+        out = np.where(span > 0, (s - lo) / np.where(span > 0, span, 1.0), 0.0)
+        return np.where(valid, out, 0.0)
+
+    d_valid = np.ones((n, m), bool)
+    s_valid = s_ids >= 0
+    norm_d = _norm(d_scores, d_valid)
+    norm_s = _norm(s_scores, s_valid)
+    match, s_rank, matched_sparse = _match_sparse(d_ids, s_ids, size)
+    v_d = w_dense * norm_d
+    v_s = (1.0 - w_dense) * norm_s
+    fused_dense = v_d + np.where(match, np.take_along_axis(v_s, s_rank, axis=1), 0.0)
+    drop = matched_sparse | ~s_valid
+    fused_sparse = np.where(drop, -np.inf, v_s)
+    fused = np.concatenate([fused_dense, fused_sparse], axis=1)
+    ids_cat = np.concatenate([d_ids, s_ids], axis=1)
+    return _select_topk(fused, ids_cat, fused, k)
 
 
 class HybridRetriever:
@@ -94,13 +245,15 @@ class HybridRetriever:
     ) -> tuple[np.ndarray, np.ndarray]:
         """Batched fusion: (n,) queries → (scores (n, k), ids (n, k)).
 
-        One batched dense MIPS call and one batched BM25 call feed a
-        per-row fusion; each row is identical to a single-query
-        :meth:`search` (fusion is per-query, so batch shape can't leak into
-        a row). ``query_vecs`` reuses already-embedded vectors (the serving
-        engine's query cache); when omitted the queries are embedded here.
-        ``k`` clamps to the corpus, and because both candidate lists carry
-        ``m >= k`` entries the fused union always fills all k slots.
+        One batched dense MIPS call and one batched BM25 call feed **one
+        vectorized fusion over the whole batch** (module docstring); each
+        row is identical to a single-query :meth:`search` (fusion is
+        per-query, so batch shape can't leak into a row). ``query_vecs``
+        reuses already-embedded vectors (the serving engine's query cache);
+        when omitted the queries are embedded here. ``k`` clamps to the
+        corpus, and because the dense candidate list always carries
+        ``m >= k`` real entries the fused union always fills all k slots —
+        sparse sentinel slots are excluded from fusion.
 
         Scores: RRF fusion reports the *dense cosine* of each fused id
         (0.0 for ids only BM25 surfaced) so retrieval confidence stays
@@ -117,18 +270,10 @@ class HybridRetriever:
         d_scores = np.asarray(d_scores, np.float32)
         d_ids = np.asarray(d_ids, np.int32)
         s_scores, s_ids = self.sparse.search_batch(queries, m)
-        out_scores = np.zeros((n, k), np.float32)
-        out_ids = np.zeros((n, k), np.int32)
-        for r in range(n):
-            dense_r = (d_scores[r], d_ids[r])
-            sparse_r = (s_scores[r], s_ids[r])
-            if self.fusion == "rrf":
-                _, ids = rrf_fuse([dense_r, sparse_r], k)
-                # Confidence stays cosine-based (comparable across retrievers).
-                dense_by_id = {int(i): float(s) for s, i in zip(d_scores[r], d_ids[r])}
-                scores = np.array([dense_by_id.get(int(i), 0.0) for i in ids], np.float32)
-            else:
-                scores, ids = weighted_fuse(dense_r, sparse_r, k, w_dense=self.w_dense)
-            out_scores[r, : len(ids)] = scores
-            out_ids[r, : len(ids)] = ids
-        return out_scores, out_ids
+        s_scores = np.asarray(s_scores, np.float32)
+        s_ids = np.asarray(s_ids, np.int32)
+        if self.fusion == "rrf":
+            return _rrf_fuse_rows(d_scores, d_ids, s_ids, k, self.dense.size)
+        return _weighted_fuse_rows(
+            d_scores, d_ids, s_scores, s_ids, k, self.dense.size, w_dense=self.w_dense
+        )

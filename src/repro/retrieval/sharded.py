@@ -67,7 +67,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.retrieval.backend import BackendCost, DenseBackend, RetrievalBackend
+from repro.retrieval.backend import (
+    BackendCost,
+    BM25Backend,
+    DenseBackend,
+    IVFBackend,
+    RetrievalBackend,
+)
 from repro.retrieval.chunking import Passage
 from repro.retrieval.index import Q_BLOCK, DenseIndex, _pallas_block_width
 from repro.retrieval.topk import merge_topk
@@ -228,6 +234,71 @@ class ShardedBackend:
             shards.append(DenseBackend(sub, scorer=scorer, interpret=interpret))
         return cls(shards, [b[0] for b in bounds], workers=workers)
 
+    @classmethod
+    def from_bm25(
+        cls,
+        backend: BM25Backend,
+        *,
+        n_shards: int,
+        workers: int = 0,
+    ) -> "ShardedBackend":
+        """Partition a built :class:`BM25Backend` into S contiguous-range
+        lexical shards — sparse sharding's ``bm25`` entry point.
+
+        Each shard wraps a :meth:`BM25Index.shard` view, which replicates
+        the corpus-*global* per-posting idf/avgdl statistics (in fact the
+        exact precomputed contribution floats), so per-(query, passage)
+        scores — and therefore the merged top-k — are bit-identical to the
+        unsharded backend. Sentinel slots (score 0.0) sort after every real
+        lexical hit (strictly positive) in the merge, so the sentinel-suffix
+        contract survives sharding. Threads execution only: postings are a
+        host-built ragged structure with no mesh placement (dense
+        ``execution="device"`` is a dense-matmul-shaped program).
+        """
+        bounds = shard_bounds(backend.bm25.n_passages, n_shards)
+        views = backend.bm25.shard(n_shards)
+        shards = [
+            BM25Backend(v, backend.passages[start:stop])
+            for v, (start, stop) in zip(views, bounds)
+        ]
+        return cls(shards, [b[0] for b in bounds], workers=workers)
+
+    @classmethod
+    def from_ivf(
+        cls,
+        backend: IVFBackend,
+        *,
+        n_shards: int,
+        workers: int = 0,
+    ) -> "ShardedBackend":
+        """Partition a built :class:`IVFBackend` into S contiguous-range
+        probed shards — sparse sharding's ``ivf`` entry point.
+
+        Each shard wraps an :meth:`IVFIndex.shard` view, which replicates
+        the *global* k-means centroids (every shard probes exactly the
+        clusters the unsharded index probes) and keeps only its row range's
+        inverted-list members. The per-shard candidate set is the unsharded
+        candidate set intersected with the shard, so the lowest-shard-wins
+        merge reconstructs the unsharded canonical row order exactly.
+        Per-shard adapters are built with ``truncate_nonfinite=False``:
+        degenerate-probe ``-inf`` padding must survive to the *global*
+        post-merge truncation in :meth:`search_batch`, or shards with few
+        probed candidates would silently narrow every row. Threads
+        execution only (see :meth:`from_bm25`).
+        """
+        bounds = shard_bounds(backend.size, n_shards)
+        views = backend.ivf.shard(n_shards)
+        shards = [
+            IVFBackend(
+                v,
+                backend.passages[start:stop] if backend.passages is not None else None,
+                n_probe=backend.n_probe,
+                truncate_nonfinite=False,
+            )
+            for v, (start, stop) in zip(views, bounds)
+        ]
+        return cls(shards, [b[0] for b in bounds], workers=workers)
+
     @property
     def n_shards(self) -> int:
         """Number of corpus partitions."""
@@ -250,7 +321,11 @@ class ShardedBackend:
         shard = self.shards[shard_idx]
         scores, ids = shard.search_batch(queries, query_vecs, k)
         scores = np.asarray(scores, np.float32)
-        ids = np.asarray(ids, np.int32) + np.int32(self.offsets[shard_idx])
+        ids = np.asarray(ids, np.int32)
+        # empty-slot sentinels (id=-1 — BM25's no-match marker, IVF's
+        # degenerate-probe padding) are positionless and must never be
+        # offset into a neighboring shard's real id range
+        ids = np.where(ids >= 0, ids + np.int32(self.offsets[shard_idx]), ids)
         return scores, ids
 
     def search_batch(
@@ -290,7 +365,18 @@ class ShardedBackend:
         self.counters.searches += 1
         self.counters.shard_searches += self.n_shards
         self.counters.merges += n_merges
-        return np.asarray(vals, np.float32), np.asarray(ids, np.int32)
+        vals_np = np.asarray(vals, np.float32)
+        ids_np = np.asarray(ids, np.int32)
+        # IVF shards keep their -inf degenerate-probe padding through the
+        # merge (per-shard truncation would discard candidates another shard
+        # can't supply); narrow once, globally, to the widest all-finite
+        # prefix — exactly what the unsharded IVFBackend does. Dense and
+        # BM25 rows are always finite, so this is a no-op for them.
+        bad = ~np.isfinite(vals_np)
+        if bad.any():
+            w = int((~bad).sum(axis=1).min())
+            vals_np, ids_np = vals_np[:, :w], ids_np[:, :w]
+        return vals_np, ids_np
 
     # -- payloads -------------------------------------------------------------
     def get_passages(self, ids: Sequence[int]) -> list[Passage]:

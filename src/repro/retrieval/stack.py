@@ -64,6 +64,14 @@ class BackendStackConfig:
       (:class:`~repro.retrieval.sharded.DeviceShardedBackend`);
       ``"threads"`` is the host fan-out. ``shard_workers`` only applies to
       threads execution.
+    * ``shard_backends`` — which backend names sharding replaces (default
+      ``("dense",)``). Adding ``"bm25"`` / ``"ivf"`` partitions those too
+      (replicated global idf/avgdl and centroid stats keep results
+      bit-identical — :meth:`ShardedBackend.from_bm25` /
+      :meth:`~ShardedBackend.from_ivf`). Sparse methods shard on the
+      threads path regardless of ``shard_execution``, which governs the
+      dense backend only (postings/inverted lists are host-built ragged
+      structures with no mesh placement).
     * ``cache_size`` — exact query-result LRU capacity (0 disables).
     * ``fault_profiles`` — backend name → seeded
       :class:`~repro.retrieval.faults.FaultProfile` (empty disables).
@@ -78,6 +86,7 @@ class BackendStackConfig:
     shard_workers: int = 0
     shard_scorer: str = "blocked"
     shard_interpret: bool = False
+    shard_backends: tuple = ("dense",)
     cache_size: int = 0
     fault_profiles: Mapping[str, FaultProfile] = dataclasses.field(default_factory=dict)
     resilience: "ResilienceConfig | bool | None" = None
@@ -96,6 +105,20 @@ class BackendStackConfig:
             )
         if self.shard_workers < 0:
             raise ValueError(f"shard_workers must be >= 0, got {self.shard_workers}")
+        shardable = ("dense", "bm25", "ivf")
+        for name in self.shard_backends:
+            if name not in shardable:
+                raise ValueError(
+                    f"unshardable backend {name!r} in shard_backends; "
+                    f"expected a subset of {shardable} (hybrid fuses two "
+                    "backends — shard its dense/bm25 components instead)"
+                )
+        if "dense" not in self.shard_backends and self.shard_execution == "device":
+            raise ValueError(
+                "shard_execution='device' governs the dense backend, which "
+                "shard_backends excludes; use execution='threads' for "
+                "sparse-only sharding"
+            )
         if self.cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {self.cache_size}")
         for name, profile in self.fault_profiles.items():
@@ -157,21 +180,33 @@ def build_backend_stack(
     """
     out = dict(backends)
     if config.wants_sharding:
-        if index is None:
-            raise ValueError("sharding requires the dense index to partition")
-        if "dense" not in out:
-            raise ValueError(
-                f"sharding partitions the 'dense' backend, which this map "
-                f"lacks (have {sorted(out)})"
-            )
-        out["dense"] = ShardedBackend.from_dense(
-            index,
-            n_shards=config.shards,
-            workers=config.shard_workers,
-            scorer=config.shard_scorer,
-            interpret=config.shard_interpret,
-            execution=config.shard_execution,
-        )
+        for name in dict.fromkeys(config.shard_backends):  # unique, ordered
+            if name not in out:
+                raise ValueError(
+                    f"sharding partitions the {name!r} backend, which this "
+                    f"map lacks (have {sorted(out)})"
+                )
+            if name == "dense":
+                if index is None:
+                    raise ValueError("sharding requires the dense index to partition")
+                out["dense"] = ShardedBackend.from_dense(
+                    index,
+                    n_shards=config.shards,
+                    workers=config.shard_workers,
+                    scorer=config.shard_scorer,
+                    interpret=config.shard_interpret,
+                    execution=config.shard_execution,
+                )
+            elif name == "bm25":
+                # sparse methods shard on the threads path regardless of
+                # shard_execution (host-built ragged postings, no mesh form)
+                out["bm25"] = ShardedBackend.from_bm25(
+                    out["bm25"], n_shards=config.shards, workers=config.shard_workers
+                )
+            else:  # "ivf" — post_init validated the membership
+                out["ivf"] = ShardedBackend.from_ivf(
+                    out["ivf"], n_shards=config.shards, workers=config.shard_workers
+                )
     if config.fault_profiles:
         out = wrap_faulty(
             out, dict(config.fault_profiles), sleep=sleep if sleep is not None else time.sleep

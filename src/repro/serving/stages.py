@@ -557,7 +557,11 @@ def assemble(engine: "RAGEngine", retrieved: RetrievedBatch) -> AdmittedBatch:
                 passages = []
             else:
                 backend = engine.backends[bundle.backend]
-                passages = [p.text for p in backend.get_passages(ids)]
+                # drop empty-slot sentinels (id=-1, the backend contract's
+                # "no lexical match" marker) before resolving payloads — a
+                # sentinel would otherwise wrap to the last passage
+                real_ids = ids[ids >= 0] if len(ids) else ids
+                passages = [p.text for p in backend.get_passages(real_ids)]
         final_bundle.append(bundle_idx)
         passages_all.append(passages)
         confidences.append(confidence)

@@ -90,12 +90,20 @@ def test_all_adapters_satisfy_protocol():
         scores, ids = b.search_batch(QUERIES[:3], qv, 4)
         scores, ids = np.asarray(scores), np.asarray(ids)
         assert scores.shape == ids.shape == (3, 4)
-        assert ((ids >= 0) & (ids < len(passages))).all()
+        # ids are valid passage ids, or the explicit empty-slot sentinel
+        # (id=-1, score=0.0) forming a row suffix (the backend contract)
+        assert ((ids >= -1) & (ids < len(passages))).all()
+        sent = ids < 0
+        assert (scores[sent] == 0.0).all()
+        for row in sent:
+            first = int(np.argmax(row)) if row.any() else len(row)
+            assert not row[:first].any() and row[first:].all()
         if name != "hybrid":
             # rows descend by the reported score (hybrid's RRF rows rank by
             # fused reciprocal rank but report dense-cosine confidence)
             assert (np.diff(scores, axis=-1) <= 1e-6).all()
-        assert len(b.get_passages(ids[0])) == 4
+        real0 = ids[0][ids[0] >= 0]
+        assert len(b.get_passages(real0)) == len(real0)
     assert not backends["bm25"].requires_query_vecs
     with pytest.raises(ValueError):
         make_backends(index, passages, EMB, names=("warp_drive",))
@@ -140,10 +148,18 @@ def test_bm25_search_batch_k_clamps_and_empty_terms():
     bm = BM25Index(passages)
     scores, ids = bm.search_batch(["FAISS index", ""], k=100)  # k > corpus
     assert scores.shape == (2, len(passages))
-    assert sorted(ids[0].tolist()) == list(range(len(passages)))
-    # no matching terms: zero scores everywhere, stable id order
+    # row 0: the matching passages lead (descending, strictly positive),
+    # then the explicit empty-slot sentinel (-1, 0.0) fills the tail —
+    # "no lexical hit" is now distinguishable from "passage 0 scored 0"
+    n_hits = int((scores[0] > 0).sum())
+    assert 0 < n_hits < len(passages)
+    hit_ids = ids[0][:n_hits]
+    assert len(set(hit_ids.tolist())) == n_hits and (hit_ids >= 0).all()
+    np.testing.assert_array_equal(ids[0][n_hits:], -1)
+    np.testing.assert_array_equal(scores[0][n_hits:], 0.0)
+    # no matching terms: a full sentinel row
     assert scores[1].max() == 0.0
-    np.testing.assert_array_equal(ids[1], np.arange(len(passages)))
+    np.testing.assert_array_equal(ids[1], np.full(len(passages), -1))
 
 
 def test_bm25_row_independent_of_batch_shape():

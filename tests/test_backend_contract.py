@@ -2,10 +2,12 @@
 
 The :class:`~repro.retrieval.backend.RetrievalBackend` protocol documents a
 dtype/shape/order contract — float32 scores, int32 ids, ``(nq, k')`` rows
-sorted descending with ties resolving to the lowest passage id, ids in
-``[0, size)`` — and this module asserts it **once, parameterized over all
-backends** (raw, sharded in both executions, and every decorator), so a new
-backend or wrapper cannot drift from the contract without failing here.
+sorted descending with ties resolving to the lowest passage id, real ids in
+``[0, size)`` with the empty-slot sentinel ``(id=-1, score=0.0)`` allowed
+only as a contiguous row suffix — and this module asserts it **once,
+parameterized over all backends** (raw, sharded in both executions and all
+three shardable methods, and every decorator), so a new backend or wrapper
+cannot drift from the contract without failing here.
 
 Exact backends (dense and its sharded/cached/faulty/resilient dressings)
 additionally pin ``k' == min(k, size)`` and bitwise equality with the plain
@@ -63,6 +65,8 @@ def _all_backends(index, backends):
         "sharded_device_s1": ShardedBackend.from_dense(
             index, n_shards=1, execution="device"
         ),
+        "sharded_bm25_s3": ShardedBackend.from_bm25(backends["bm25"], n_shards=3),
+        "sharded_ivf_s3": ShardedBackend.from_ivf(backends["ivf"], n_shards=3),
         "cached": CachedBackend(dense, capacity=8),
         "faulty_zero": zero_fault,
         "resilient": ResilientBackend(dense),
@@ -75,7 +79,8 @@ EXACT = {
 }
 NAMES = [
     "dense", "bm25", "ivf", "hybrid", "sharded_threads_s3",
-    "sharded_device_s1", "cached", "faulty_zero", "resilient",
+    "sharded_device_s1", "sharded_bm25_s3", "sharded_ivf_s3",
+    "cached", "faulty_zero", "resilient",
 ]
 
 
@@ -101,22 +106,36 @@ def test_search_batch_contract(corpus, name, k):
             f"{name}: exact backends must return full min(k, size) width"
         )
 
-    # ids are valid passage ids, unique per row
-    assert ids.min() >= 0 and ids.max() < backend.size
-    for row in ids:
-        assert len(set(row.tolist())) == len(row), f"{name}: duplicate ids in a row"
+    # ids are valid passage ids or the empty-slot sentinel -1; real ids are
+    # unique per row, and sentinels (score exactly 0.0) form a contiguous
+    # row suffix — real hits always lead
+    assert ids.min() >= -1 and ids.max() < backend.size
+    for srow, irow in zip(scores, ids):
+        sent = irow == -1
+        real = irow[~sent]
+        assert len(set(real.tolist())) == len(real), f"{name}: duplicate ids in a row"
+        if sent.any():
+            first = int(np.argmax(sent))
+            assert not sent[:first].any() and sent[first:].all(), (
+                f"{name}: sentinels must form a contiguous row suffix"
+            )
+            assert np.all(srow[sent] == 0.0), f"{name}: sentinel scores must be 0.0"
 
-    # descending scores; ties resolve to the lowest passage id. The one
-    # sanctioned exception: a backend may set ``scores_are_ranking = False``
-    # (hybrid RRF — rows are ranked by fused reciprocal rank but *report*
-    # the dense cosine per id for confidence comparability), in which case
-    # row order is the contract and scores need only be finite.
+    # descending scores; ties among real hits resolve to the lowest passage
+    # id (sentinel slots are all (-1, 0.0), so the tie clause applies to the
+    # real prefix only). The one sanctioned exception: a backend may set
+    # ``scores_are_ranking = False`` (hybrid RRF — rows are ranked by fused
+    # reciprocal rank but *report* the dense cosine per id for confidence
+    # comparability), in which case row order is the contract and scores
+    # need only be finite.
     if getattr(backend, "scores_are_ranking", True):
         for srow, irow in zip(scores, ids):
             assert np.all(srow[:-1] >= srow[1:]), f"{name}: scores not descending"
-            tie = srow[:-1] == srow[1:]
+            n_real = int((irow >= 0).sum())
+            s_real, i_real = srow[:n_real], irow[:n_real]
+            tie = s_real[:-1] == s_real[1:]
             if tie.any():
-                assert np.all(irow[:-1][tie] < irow[1:][tie]), (
+                assert np.all(i_real[:-1][tie] < i_real[1:][tie]), (
                     f"{name}: tied scores must order by ascending passage id"
                 )
     else:
@@ -132,6 +151,33 @@ def test_exact_backends_bitwise_equal_dense(corpus, name):
     s, i = all_b[name].search_batch(queries, query_vecs, 7)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s, np.float32))
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i, np.int32))
+
+
+@pytest.mark.parametrize("base", ["bm25", "ivf"])
+def test_sharded_sparse_bitwise_equal_unsharded(corpus, base):
+    """Sparse sharding with replicated global stats is invisible in results:
+    3-way sharded bm25/ivf rows equal the unsharded backend bit for bit
+    (scores, ids, and row widths — including BM25 sentinel tails)."""
+    index, backends, queries, query_vecs = corpus
+    all_b = _all_backends(index, backends)
+    for k in (1, 5, 40):
+        ref_s, ref_i = backends[base].search_batch(queries, query_vecs, k)
+        s, i = all_b[f"sharded_{base}_s3"].search_batch(queries, query_vecs, k)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s, np.float32))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i, np.int32))
+
+
+def test_bm25_zero_match_rows_are_full_sentinel(corpus):
+    """A query with no lexical overlap gets a *fully* sentinel row — not the
+    old fabricated ids 0..k-1 — and sharding preserves it (sentinels are
+    never offset into a shard's real id range)."""
+    index, backends, queries, query_vecs = corpus
+    no_match = ["xyzzy quux"]
+    for b in (backends["bm25"], ShardedBackend.from_bm25(backends["bm25"], n_shards=3)):
+        scores, ids = b.search_batch(no_match, None, 5)
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        np.testing.assert_array_equal(ids, np.full_like(ids, -1))
+        np.testing.assert_array_equal(scores, np.zeros_like(scores))
 
 
 def test_contract_holds_for_single_and_empty_batches(corpus):

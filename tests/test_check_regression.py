@@ -21,7 +21,8 @@ STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
              res_completed=28, res_degraded=12, res_rejected=0, res_opens=1,
-             shard_searches=4, shard_merges=1, identical=True):
+             shard_searches=4, shard_merges=1, identical=True,
+             bm25_hits=147, sparse_identical=True, bm25_closures=2):
     return {
         "benchmark": "paper_28_queries",
         "batched_qps": 500.0,  # telemetry, ungated
@@ -53,6 +54,26 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
                     "merges": 3,
                     "identical": identical,
                 },
+            },
+        },
+        "backends": {
+            "per_backend": {"dense": {"qps": 30000.0}},  # telemetry, ungated
+            "gate": {
+                "k": 8,  # telemetry, ungated
+                "n_queries": 28,  # telemetry, ungated
+                "row_width": {"dense": 8, "bm25": 8, "ivf": 5, "hybrid": 8},
+                "real_hits": {
+                    "dense": 224, "bm25": bm25_hits, "ivf": 140, "hybrid": 224,
+                },
+                "sharded_identical": {
+                    "dense": True,
+                    "bm25": sparse_identical,
+                    "ivf": sparse_identical,
+                },
+                "bm25_postings": 166,
+                "bm25_closures": bm25_closures,
+                "ivf_bag_width": 16,
+                "ivf_closures": 1,
             },
         },
     }
@@ -162,6 +183,27 @@ def test_sharding_scaling_counters_are_exact():
     fails = compare(_serving(), _serving(identical=False),
                     SERVING_METRICS, threshold=0.2)
     assert len(fails) == 2 and all("identical" in f for f in fails)
+
+
+def test_backend_cell_counters_are_exact():
+    """The per-backend cell's structure counters are pure functions of the
+    seeded corpus + paper queries: drifting hit counts (sentinel contract /
+    tokenization), a lost sparse-sharding identity bit, or extra compiled
+    closures (pow2 bucketing regressed into per-shape recompiles) must all
+    fail exactly — in either direction."""
+    # a moved BM25 hit count: the sentinel/posting structure changed
+    fails = compare(_serving(), _serving(bm25_hits=150), SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "backends.gate.real_hits.bm25" in fails[0]
+    assert "exact" in fails[0]
+    # sparse sharding stopped matching unsharded bit-for-bit: hard fail
+    fails = compare(_serving(), _serving(sparse_identical=False),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("sharded_identical" in f for f in fails)
+    # extra compiled closures — FEWER would also fail (exact, both ways)
+    fails = compare(_serving(), _serving(bm25_closures=5), SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "backends.gate.bm25_closures" in fails[0]
+    # unchanged cell passes
+    assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
 
 
 def test_gate_fails_on_counter_regressions(tmp_path):
