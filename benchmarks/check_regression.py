@@ -23,6 +23,12 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     counters over two deterministic epochs (*exact*, band 0: hit/miss
     totals are bit-stable, so any drift is a structural change to cache
     keying, eviction, or upstream routing — never noise).
+  - ``cache_zipf.hits`` / ``cache_zipf.misses`` — the seeded Zipf repeat
+    stream through the same cache (*exact*, band 0).
+  - ``sharding.<arm>.records_identical`` — bitwise telemetry parity vs the
+    unsharded engine for every host execution of the 4-way shard fan-out
+    (inline / pooled threads / spawned processes; *exact*, band 0 — the
+    cells' qps stays ungated telemetry).
   - ``resilience.completed`` / ``resilience.degraded`` /
     ``resilience.rejected`` / ``resilience.breaker_opens`` — the seeded
     chaos cell's outcome counters (*exact*, band 0: the fault schedule is
@@ -57,6 +63,11 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     the dense-only paper catalog, so every search must stay on the dense
     backend — a drop means searches migrated to another backend, not an
     improvement.
+  - ``process_gate.*`` — the process-executor cell's structure counters
+    (completed/rejected/stage_batches/retrieve_calls, worker accounting)
+    and its ``records_identical`` bit-identity vs ``answer_batch``
+    (*exact*, band 0; decode_steps is deliberately ungated there — depth-2
+    decode/admission interleaving is timing-dependent).
 
 A missing *current* artifact fails (the benchmark didn't run). A metric
 missing from the *baseline* warns and passes (it predates the gate —
@@ -119,6 +130,34 @@ GATED_METRICS: dict[str, list[Metric]] = {
             higher_is_better=False,
             exact=True,
         ),
+        # band 0 (exact): the zipf cache cell draws its repeat stream from
+        # zipfian_indices(28, 84, s=1.1, seed=0) and serves it single-
+        # threaded, so hits/misses are bit-stable. Drift means the draw, the
+        # cache keying, or the LRU/eviction discipline changed — never noise.
+        Metric(
+            "cache_zipf.hits",
+            "zipf-stream cached-backend hits (seeded, deterministic)",
+            exact=True,
+        ),
+        Metric(
+            "cache_zipf.misses",
+            "zipf-stream cached-backend misses (seeded, deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        # band 0 (exact): every host execution of the 4-way shard fan-out
+        # (serial inline, pooled threads, spawned processes) must keep the
+        # full 2-epoch telemetry stream bitwise equal to the unsharded
+        # engine's — the exactness contract that makes executor choice a
+        # pure perf knob. The same cells' qps stays ungated telemetry.
+        *[
+            Metric(
+                f"sharding.{arm}.records_identical",
+                f"{arm} sharded serving bitwise parity vs unsharded engine",
+                exact=True,
+            )
+            for arm in ("unsharded", "inline_4", "threads_4", "process_4")
+        ],
         # band 0 (exact): the chaos cell's fault schedule is keyed to the
         # backend call index and runs single-threaded, so every outcome
         # counter is bit-stable. completed must stay 28 (the degradation
@@ -279,6 +318,48 @@ GATED_METRICS: dict[str, list[Metric]] = {
             "gate.backend_search_calls.dense",
             "burst-serial dense-backend searches (deterministic)",
             higher_is_better=False,
+            exact=True,
+        ),
+        # band 0 (exact): the process-executor cell's structure counters.
+        # The burst admits the same micro-batches whatever the timing, so
+        # completed/rejected/stage_batches/retrieve_calls and the worker
+        # accounting (one spawned worker draining every batch) are
+        # deterministic; decode_steps is deliberately NOT gated here — with
+        # pipeline depth 2 the decode/admission interleaving is timing-
+        # dependent. records_identical pins the repo invariant: a drained
+        # process-executor run is bit-identical to answer_batch.
+        Metric("process_gate.completed", "process-executor drained completions", exact=True),
+        Metric(
+            "process_gate.rejected",
+            "process-executor rejections",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "process_gate.stage_batches",
+            "process-executor routed micro-batches (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "process_gate.retrieve_calls",
+            "process-executor grouped index searches (deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "process_gate.n_workers",
+            "process-executor worker processes that served batches",
+            exact=True,
+        ),
+        Metric(
+            "process_gate.worker_batches",
+            "micro-batches drained across process workers",
+            exact=True,
+        ),
+        Metric(
+            "process_gate.records_identical",
+            "process-executor streaming bitwise parity vs answer_batch",
             exact=True,
         ),
     ],

@@ -202,10 +202,12 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
     BENCH_streaming.json: one entry per (load, pipeline shape) cell —
     including a depth-sweep over the N-deep multi-worker StagePipeline as
     ungated telemetry — the raw ``streaming_qps`` of the burst-serial cell
-    as a telemetry trend line, and a ``gate`` section with that cell's
+    as a telemetry trend line, a ``gate`` section with that cell's
     deterministic counters (completed/rejected/decode_steps plus the
     per-stage ``stage_batches``/``retrieve_calls`` and the per-backend
-    ``backend_search_calls``) — the hardware-independent signals
+    ``backend_search_calls``), and a ``process_gate`` section with the
+    process-executor cell's structure counters and its bit-identity vs
+    ``answer_batch`` — the hardware-independent signals
     benchmarks/check_regression.py compares in CI.
     """
     import json
@@ -282,6 +284,61 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
              f"{fmt(s['throughput_qps'])} q/s p95_ttft={fmt(s['p95_ttft_ms'], '.0f')}ms")
         )
 
+    # Process-executor cell (gated structure counters): the middle stages
+    # drain through one spawned worker process that rebuilds the paper
+    # engine from EngineSpec. completed/rejected/stage_batches/
+    # retrieve_calls and the worker accounting are deterministic (the burst
+    # admits the same micro-batches regardless of timing) and gated band 0;
+    # decode_steps is NOT gated here — with depth 2 the decode/admission
+    # interleaving is timing-dependent. records_identical pins the
+    # repo-wide invariant: the drained process-executor run is bit-identical
+    # to answer_batch on the parent engine.
+    from repro.serving.procpool import EngineSpec, ProcessStageExecutor
+
+    proc = ProcessStageExecutor(EngineSpec(), max_workers=1)
+    proc.warm()  # spawn + worker engine build happens before the timed drain
+    ref = build_paper_engine(make_policy("router_default"))
+    ref.answer_batch(queries, refs)
+    ref.answer_batch(queries, refs)
+    ref_csv = ref.telemetry.to_csv()
+    eng = build_paper_engine(make_policy("router_default"))
+    eng.answer_batch(queries, refs)  # warm epoch, mirrored in ref_csv
+    decoder.reset()
+    sched = ContinuousBatchScheduler(
+        SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16),
+        catalog=eng.catalog,
+    )
+    t0 = time.perf_counter()
+    result = serve_stream(
+        eng, queries, refs, rate_qps=math.inf, decode_fn=decoder,
+        scheduler=sched,
+        config=StreamConfig(pipeline_depth=2, retrieval_workers=1,
+                            executor="process", microbatch_max=8),
+        process_executor=proc,
+    )
+    proc_wall = time.perf_counter() - t0
+    proc.shutdown()
+    s = result.summary()
+    s["offered_qps"] = None
+    runs.append(s)
+    pw = s.get("process_workers") or {}
+    process_gate = {
+        "cell": "burst_process_d2w1",
+        "completed": s["completed"],
+        "rejected": s["rejected"],
+        "stage_batches": s["stage_batches"],
+        "retrieve_calls": s["retrieve_calls"],
+        "n_workers": pw.get("n_workers"),
+        "worker_batches": sum(pw.get("batches_per_worker") or []),
+        "records_identical": eng.telemetry.to_csv() == ref_csv,
+    }
+    out.append(
+        ("stream_burst_process_d2w1", proc_wall / n * 1e6,
+         f"{fmt(s['throughput_qps'])} q/s {process_gate['worker_batches']} batches "
+         f"on {process_gate['n_workers']} worker(s), "
+         f"parity={process_gate['records_identical']}")
+    )
+
     if artifact_path:
         os.makedirs(os.path.dirname(artifact_path) or ".", exist_ok=True)
         s = gate_summary
@@ -305,6 +362,7 @@ def bench_streaming(artifact_path: str | None = None) -> list[tuple[str, float, 
                         # count) means routing escaped the paper regime
                         "backend_search_calls": s["backend_search_calls"],
                     },
+                    "process_gate": process_gate,
                     "runs": runs,
                 },
                 f,
@@ -519,12 +577,24 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
     the LRU discipline, or upstream routing changed). ``records_identical``
     double-checks the cache never changed an answer.
 
-    **Sharding cell (ungated telemetry).** The same workload on a 1-shard vs
-    4-shard dense backend: wall-clock qps per arm plus ``records_identical``
-    (the bit-exactness contract). Wall time is host-dependent — telemetry
-    only, never a pass/fail bar; on this tiny corpus sharding mostly *costs*
-    (4 small searches + merge vs 1), the cell exists to track the overhead
-    and pin the exactness as corpora grow.
+    **Zipf cache cell (gated, band 0).** The same cached engine serving a
+    :func:`~repro.serving.workload.zipfian_indices` repeat stream (84
+    arrivals over the 28 queries, s=1.1, seed 0) through a 16-entry cache —
+    the realistic workload where hit rate is a function of (skew, length,
+    capacity) instead of the degenerate every-query-repeats-once replay.
+    Single-threaded and seeded, so hits/misses are bit-stable and gated
+    exact alongside the uniform cell's.
+
+    **Sharding cells (executor-labeled).** The same workload on a dense
+    backend under each host execution of the 4-way shard fan-out —
+    ``unsharded`` / ``inline_4`` (serial host fan-out, ``workers=0``) /
+    ``threads_4`` (the pooled fan-out: 4 GIL-sharing threads, the measured
+    S=4 collapse arm kept as a regression tripwire) / ``process_4``
+    (persistent spawned shard workers, GIL-free). Wall-clock qps per arm is
+    host-dependent telemetry — on a 1-core container the process arm only
+    pays spawn cost, on a >=4-core host it is the recovery the executor
+    redesign exists for — but every arm's ``records_identical`` (bitwise
+    telemetry parity vs the unsharded reference engine) is gated exact.
     """
     import json
     import os
@@ -533,6 +603,7 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
     from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
     from repro.retrieval import CachedBackend, ShardedBackend
     from repro.serving.engine import build_paper_engine
+    from repro.serving.workload import zipfian_indices
 
     queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
     n = len(queries)
@@ -561,35 +632,69 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
         "records_identical": cache_eng.telemetry.to_csv() == ref_csv,
     }
 
-    # -- sharding cell (wall-clock telemetry + exactness) --------------------
+    # -- zipf cache cell (deterministic counters; gated) ---------------------
+    zipf_len, zipf_s, zipf_cap = 3 * n, 1.1, 16
+    idx = zipfian_indices(n, zipf_len, s=zipf_s, seed=0)
+    zipf_queries = [queries[i] for i in idx]
+    zipf_refs = [refs[i] for i in idx]
+    zipf_eng = build_paper_engine(make_policy("router_default"))
+    zipf_cached = CachedBackend(zipf_eng.backends["dense"], capacity=zipf_cap)
+    zipf_eng.backends["dense"] = zipf_cached
+    t0 = time.perf_counter()
+    zipf_eng.answer_batch(zipf_queries, zipf_refs)
+    zipf_wall = time.perf_counter() - t0
+    zstats = zipf_cached.stats()
+    zipf_cell = {
+        "capacity": zipf_cap,
+        "length": zipf_len,
+        "s": zipf_s,
+        "seed": 0,
+        "hits": zstats.hits,
+        "misses": zstats.misses,
+        "evictions": zstats.evictions,
+        "hit_rate": zstats.hits / max(zstats.hits + zstats.misses, 1),
+    }
+
+    # -- sharding cells (executor-labeled; parity gated, qps telemetry) ------
+    def shard_backend_for(arm: str, eng):
+        if arm == "unsharded":
+            return None
+        if arm == "inline_4":  # serial host fan-out, no pool
+            return ShardedBackend.from_dense(eng.index, n_shards=4)
+        if arm == "threads_4":  # the pooled GIL-sharing collapse arm
+            return ShardedBackend.from_dense(eng.index, n_shards=4, workers=4)
+        return ShardedBackend.from_dense(eng.index, n_shards=4, execution="process")
+
     shard_cells = {}
-    for n_shards in (1, 4):
+    for arm in ("unsharded", "inline_4", "threads_4", "process_4"):
         eng = build_paper_engine(make_policy("router_default"))
-        if n_shards > 1:
-            eng.backends["dense"] = ShardedBackend.from_dense(
-                eng.index, n_shards=n_shards
-            )
-        eng.answer_batch(queries, refs)  # warm: compiles per shard shape
+        backend = shard_backend_for(arm, eng)
+        if backend is not None:
+            eng.backends["dense"] = backend
+        eng.answer_batch(queries, refs)  # warm: compiles/spawns per shard shape
         t0 = time.perf_counter()
         eng.answer_batch(queries, refs)
         wall = time.perf_counter() - t0
-        shard_cells[str(n_shards)] = {
+        shard_cells[arm] = {
             "qps": n / wall if wall else None,
             "records_identical": eng.telemetry.to_csv() == ref_csv,
         }
+        if backend is not None:
+            backend.shutdown()  # process arm: release 4 shard workers now
 
     if artifact_path and os.path.exists(artifact_path):
         with open(artifact_path) as f:
             artifact = json.load(f)
         artifact["cache"] = cache_cell
+        artifact["cache_zipf"] = zipf_cell
         artifact["sharding"] = shard_cells
         with open(artifact_path, "w") as f:
             json.dump(artifact, f, indent=2)
             f.write("\n")
 
     hit_rate = stats.hits / max(stats.hits + stats.misses, 1)
-    qps1, qps4 = shard_cells["1"]["qps"], shard_cells["4"]["qps"]
-    return [
+    qps1 = shard_cells["unsharded"]["qps"]
+    rows = [
         (
             "rag_cached_2epochs",
             cache_wall / (n * epochs) * 1e6,
@@ -597,12 +702,23 @@ def bench_cache_sharding(artifact_path: str | None = None) -> list[tuple[str, fl
             f"({hit_rate:.0%} hit rate, parity={cache_cell['records_identical']})",
         ),
         (
-            "rag_sharded_4",
-            1e6 / qps4 if qps4 else 0.0,  # degenerate-timer cells report, not crash
-            f"{qps4 or float('nan'):.0f} q/s vs {qps1 or float('nan'):.0f} "
-            f"unsharded (parity={shard_cells['4']['records_identical']})",
+            "rag_cached_zipf",
+            zipf_wall / zipf_len * 1e6,
+            f"{zstats.hits}h/{zstats.misses}m/{zstats.evictions}e "
+            f"({zipf_cell['hit_rate']:.0%} hit rate, s={zipf_s}, cap={zipf_cap})",
         ),
     ]
+    for arm in ("inline_4", "threads_4", "process_4"):
+        qps = shard_cells[arm]["qps"]
+        rows.append(
+            (
+                f"rag_sharded_{arm}",
+                1e6 / qps if qps else 0.0,  # degenerate-timer cells report, not crash
+                f"{qps or float('nan'):.0f} q/s vs {qps1 or float('nan'):.0f} "
+                f"unsharded (parity={shard_cells[arm]['records_identical']})",
+            )
+        )
+    return rows
 
 
 def bench_sharding_scaling(

@@ -12,6 +12,158 @@ from __future__ import annotations
 import argparse
 
 
+def build_engine_from_opts(opts: dict) -> "object":
+    """Build the serving engine from a plain-dict option bag.
+
+    Module-level, driven purely by picklable primitives (paths, numbers,
+    ``NAME=VAL`` strings), so ``functools.partial(build_engine_from_opts,
+    opts)`` is a spawn-safe engine factory: ``--executor process`` workers
+    rebuild the exact engine — corpus, backend stack, fault schedules,
+    guardrails — the parent serves, which is what keeps worker-computed
+    middle stages bit-identical to the parent's replay.
+
+    Raises ``SystemExit`` with a CLI-shaped message on invalid options
+    (the parent always validates first, so workers never see these).
+    """
+    from repro.core.bundles import make_catalog
+    from repro.core.guardrails import GuardrailConfig
+    from repro.core.policies import make_policy
+    from repro.core.router import RouterConfig
+    from repro.data.benchmark import corpus_document
+    from repro.retrieval import (
+        BackendStackConfig,
+        DenseIndex,
+        FaultProfile,
+        HashedNGramEmbedder,
+        build_backend_stack,
+        line_passages,
+        make_backends,
+    )
+    from repro.serving.engine import EngineConfig, RAGEngine
+
+    catalog = make_catalog(opts["catalog"])
+    router = make_policy(
+        opts["policy"], catalog=catalog, config=RouterConfig(epsilon=opts["epsilon"])
+    )
+    if opts["synthetic_docs"] > 0:
+        if opts["docs"]:
+            raise SystemExit("--synthetic-docs and --docs are mutually exclusive")
+        from repro.retrieval import synthetic_dense_index
+
+        embedder = HashedNGramEmbedder(dim=opts["synthetic_dim"])
+        index = synthetic_dense_index(
+            opts["synthetic_docs"], opts["synthetic_dim"], seed=opts["synthetic_seed"]
+        )
+        passages = index.passages
+        index_tokens = 0  # nothing was embedded: the corpus is fabricated
+    else:
+        doc = open(opts["docs"]).read() if opts["docs"] else corpus_document()
+        embedder = HashedNGramEmbedder(dim=256)
+        passages = line_passages(doc)
+        index, index_tokens = DenseIndex.build(passages, embedder)
+    backends = make_backends(
+        index, passages, embedder, names=("dense", *catalog.backends_used())
+    )
+
+    fault_profiles: dict[str, FaultProfile] = {}
+    for spec in opts["fault_profile"]:
+        try:
+            name, profile = FaultProfile.parse(spec)
+        except ValueError as err:
+            raise SystemExit(f"--fault-profile: {err}")
+        if name not in backends:
+            raise SystemExit(
+                f"--fault-profile: unknown backend {name!r} "
+                f"(this catalog serves {sorted(backends)})"
+            )
+        fault_profiles[name] = profile
+    remote_backends: dict[str, str] = {}
+    for item in opts["remote_backend"]:
+        name, sep, addr = item.partition("=")
+        if not sep or not name or not addr:
+            raise SystemExit(
+                f"--remote-backend expects NAME=HOST:PORT, got {item!r}"
+            )
+        remote_backends[name] = addr
+    resilience: object = None
+    if (
+        opts["retrieve_timeout_ms"] is not None
+        or opts["max_retries"] is not None
+        or fault_profiles
+    ):
+        from repro.serving.resilience import ResilienceConfig, RetryPolicy
+
+        resilience = ResilienceConfig(
+            timeout_ms=opts["retrieve_timeout_ms"],
+            retry=RetryPolicy(
+                max_retries=opts["max_retries"] if opts["max_retries"] is not None else 2
+            ),
+        )
+    # One declarative recipe for the whole decorator stack — ordering
+    # (remote → shard → faults → cache → resilience) lives in
+    # build_backend_stack, not here.
+    try:
+        stack = BackendStackConfig(
+            shards=opts["shards"],
+            shard_execution=opts["shard_execution"],
+            shard_backends=tuple(
+                n.strip() for n in opts["shard_backends"].split(",") if n.strip()
+            ),
+            remote_backends=remote_backends,
+            cache_size=opts["cache_size"],
+            fault_profiles=fault_profiles,
+            resilience=resilience,
+        )
+    except ValueError as err:
+        raise SystemExit(f"invalid backend stack: {err}")
+    backends = build_backend_stack(backends, stack, index=index)
+
+    per_backend_conf: dict[str, float] = {}
+    for item in opts["min_confidence_backend"]:
+        name, sep, val = item.partition("=")
+        try:
+            threshold = float(val)
+        except ValueError:
+            threshold = None
+        if not sep or not name or threshold is None:
+            raise SystemExit(
+                f"--min-confidence-backend expects NAME=VAL, got {item!r}"
+            )
+        if name not in backends:
+            # a typo here would silently fall back to the global threshold —
+            # exactly the guardrail hole the flag exists to close
+            raise SystemExit(
+                f"--min-confidence-backend: unknown backend {name!r} "
+                f"(this catalog serves {sorted(backends)})"
+            )
+        per_backend_conf[name] = threshold
+
+    return RAGEngine(
+        router,
+        index,
+        embedder,
+        catalog=router.catalog,
+        backends=backends,
+        config=EngineConfig(
+            guardrails=GuardrailConfig(
+                min_retrieval_confidence=opts["min_confidence"],
+                max_cost_tokens=opts["max_cost_tokens"],
+                min_retrieval_confidence_by_backend=per_backend_conf or None,
+            )
+        ),
+        index_embedding_tokens=index_tokens,
+    )
+
+
+_ENGINE_OPT_KEYS = (
+    "docs", "policy", "catalog", "epsilon", "min_confidence",
+    "min_confidence_backend", "max_cost_tokens", "cache_size", "shards",
+    "shard_backends", "shard_execution", "remote_backend", "synthetic_docs",
+    "synthetic_dim", "synthetic_seed", "fault_profile", "retrieve_timeout_ms",
+    "max_retries",
+)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", default=None, help="newline-separated passages (default: paper corpus)")
@@ -54,12 +206,24 @@ def main() -> None:
         "governs dense only)",
     )
     ap.add_argument(
-        "--shard-execution", default="threads", choices=("threads", "device"),
+        "--shard-execution", default="threads",
+        choices=("threads", "process", "device", "auto"),
         help="how sharded search runs: 'threads' fans per-shard searches out "
-        "on the host; 'device' lowers search + top-k merge onto the jax "
-        "device mesh as one shard_map program (requires >= S devices; on "
-        "CPU hosts set XLA_FLAGS=--xla_force_host_platform_device_count=S). "
-        "Both are bit-identical to unsharded retrieval (docs/retrieval.md)",
+        "on host threads; 'process' fans out to persistent per-shard worker "
+        "processes (GIL-free — the multi-core host path); 'device' lowers "
+        "search + top-k merge onto the jax device mesh as one shard_map "
+        "program (requires >= S devices; on CPU hosts set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=S); 'auto' picks "
+        "inline threads or process by core count. All are bit-identical to "
+        "unsharded retrieval (docs/retrieval.md)",
+    )
+    ap.add_argument(
+        "--remote-backend", action="append", default=[], metavar="NAME=HOST:PORT",
+        help="serve backend NAME through a remote retrieval service "
+        "(repeatable), e.g. --remote-backend dense=127.0.0.1:8631 — the "
+        "named backend is replaced by a RemoteBackend RPC client; start the "
+        "service with python -m repro.launch.serve_backend. Cache/"
+        "resilience layers wrap the remote client unchanged",
     )
     ap.add_argument(
         "--synthetic-docs", type=int, default=0, metavar="N",
@@ -115,23 +279,23 @@ def main() -> None:
                     help="micro-batches in flight through the stage pipeline "
                     "(--stream only; 1 = fully serial)")
     ap.add_argument("--retrieval-workers", type=int, default=1,
-                    help="worker threads draining the retrieve/assemble/decode "
+                    help="workers draining the retrieve/assemble/decode "
                     "stages (--stream only; ignored at depth 1)")
+    ap.add_argument(
+        "--executor", default="thread", choices=("thread", "process"),
+        help="where the pipeline's middle stages run (--stream only): "
+        "'thread' = in-process worker threads (GIL-bound); 'process' = "
+        "spawn-context worker processes that each rebuild this engine once "
+        "and drain micro-batches GIL-free. Records are bit-identical "
+        "either way (docs/serving.md)",
+    )
     ap.add_argument("--tokens-per-s", type=float, default=None,
                     help="pace the slot decoder's step clock (--stream only; "
                     "default: free-running)")
     ap.add_argument("--seed", type=int, default=0, help="arrival-trace seed (--stream)")
     args = ap.parse_args()
 
-    import dataclasses
-
-    from repro.core.bundles import make_catalog
-    from repro.core.guardrails import GuardrailConfig
-    from repro.core.policies import make_policy
-    from repro.core.router import RouterConfig
-    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS, corpus_document
-    from repro.retrieval import DenseIndex, HashedNGramEmbedder, line_passages, make_backends
-    from repro.serving.engine import EngineConfig, RAGEngine
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
 
     if args.questions:
         with open(args.questions) as f:
@@ -141,109 +305,11 @@ def main() -> None:
         queries = list(BENCHMARK_QUERIES)
         references = list(REFERENCE_ANSWERS)
 
-    catalog = make_catalog(args.catalog)
-    router = make_policy(args.policy, catalog=catalog, config=RouterConfig(epsilon=args.epsilon))
-    if args.synthetic_docs > 0:
-        if args.docs:
-            raise SystemExit("--synthetic-docs and --docs are mutually exclusive")
-        from repro.retrieval import synthetic_dense_index
-
-        embedder = HashedNGramEmbedder(dim=args.synthetic_dim)
-        index = synthetic_dense_index(
-            args.synthetic_docs, args.synthetic_dim, seed=args.synthetic_seed
-        )
-        passages = index.passages
-        index_tokens = 0  # nothing was embedded: the corpus is fabricated
-    else:
-        doc = open(args.docs).read() if args.docs else corpus_document()
-        embedder = HashedNGramEmbedder(dim=256)
-        passages = line_passages(doc)
-        index, index_tokens = DenseIndex.build(passages, embedder)
-    backends = make_backends(
-        index, passages, embedder, names=("dense", *catalog.backends_used())
-    )
-    from repro.retrieval import BackendStackConfig, FaultProfile, build_backend_stack
-
-    fault_profiles: dict[str, FaultProfile] = {}
-    for spec in args.fault_profile:
-        try:
-            name, profile = FaultProfile.parse(spec)
-        except ValueError as err:
-            raise SystemExit(f"--fault-profile: {err}")
-        if name not in backends:
-            raise SystemExit(
-                f"--fault-profile: unknown backend {name!r} "
-                f"(this catalog serves {sorted(backends)})"
-            )
-        fault_profiles[name] = profile
-    resilience: object = None
-    if (
-        args.retrieve_timeout_ms is not None
-        or args.max_retries is not None
-        or fault_profiles
-    ):
-        from repro.serving.resilience import ResilienceConfig, RetryPolicy
-
-        resilience = ResilienceConfig(
-            timeout_ms=args.retrieve_timeout_ms,
-            retry=RetryPolicy(
-                max_retries=args.max_retries if args.max_retries is not None else 2
-            ),
-        )
-    # One declarative recipe for the whole decorator stack — ordering
-    # (shard → faults → cache → resilience) lives in build_backend_stack,
-    # not here.
-    backends = build_backend_stack(
-        backends,
-        BackendStackConfig(
-            shards=args.shards,
-            shard_execution=args.shard_execution,
-            shard_backends=tuple(
-                n.strip() for n in args.shard_backends.split(",") if n.strip()
-            ),
-            cache_size=args.cache_size,
-            fault_profiles=fault_profiles,
-            resilience=resilience,
-        ),
-        index=index,
-    )
-
-    per_backend_conf: dict[str, float] = {}
-    for item in args.min_confidence_backend:
-        name, sep, val = item.partition("=")
-        try:
-            threshold = float(val)
-        except ValueError:
-            threshold = None
-        if not sep or not name or threshold is None:
-            raise SystemExit(
-                f"--min-confidence-backend expects NAME=VAL, got {item!r}"
-            )
-        if name not in backends:
-            # a typo here would silently fall back to the global threshold —
-            # exactly the guardrail hole the flag exists to close
-            raise SystemExit(
-                f"--min-confidence-backend: unknown backend {name!r} "
-                f"(this catalog serves {sorted(backends)})"
-            )
-        per_backend_conf[name] = threshold
-
-    engine = RAGEngine(
-        router,
-        index,
-        embedder,
-        catalog=router.catalog,
-        backends=backends,
-        config=EngineConfig(
-            guardrails=GuardrailConfig(
-                min_retrieval_confidence=args.min_confidence,
-                max_cost_tokens=args.max_cost_tokens,
-                min_retrieval_confidence_by_backend=per_backend_conf or None,
-            )
-        ),
-        index_embedding_tokens=index_tokens,
-    )
+    opts = {key: getattr(args, key) for key in _ENGINE_OPT_KEYS}
+    engine = build_engine_from_opts(opts)
+    catalog = engine.catalog
     if args.stream:
+        import functools
         import json
         import math
 
@@ -264,8 +330,12 @@ def main() -> None:
                 overlap=depth > 1,
                 pipeline_depth=depth,
                 retrieval_workers=args.retrieval_workers,
+                executor=args.executor,
                 request_deadline_ms=args.request_deadline_ms,
             ),
+            # spawn-safe: workers rebuild this exact engine from the same
+            # plain-dict options the parent used
+            engine_factory=functools.partial(build_engine_from_opts, opts),
         )
         print(json.dumps(result.summary(), indent=2))
         if result.rejections:

@@ -35,12 +35,16 @@ from repro.retrieval.embedder import CachingEmbedder, HashedNGramEmbedder, Stack
 from repro.retrieval.hybrid import HybridRetriever, rrf_fuse, weighted_fuse
 from repro.retrieval.index import DenseIndex, SearchResult, l2_normalize
 from repro.retrieval.ivf import IVFIndex, kmeans
+from repro.retrieval.remote import BackendServer, RemoteBackend, RemoteBackendError
 from repro.retrieval.sharded import (
     EXECUTIONS,
     DeviceShardedBackend,
+    ProcessShardedBackend,
     ShardCounters,
     ShardedBackend,
     mesh_layout,
+    merge_shard_parts,
+    resolve_execution,
     shard_bounds,
 )
 from repro.retrieval.stack import BackendStackConfig, build_backend_stack
@@ -59,8 +63,11 @@ __all__ = [
     "make_backends",
     "BackendStackConfig", "build_backend_stack",
     "CachedBackend", "CacheStats", "cache_stats_view", "scale_backends", "wrap_cached",
-    "DeviceShardedBackend", "EXECUTIONS", "ShardCounters", "ShardedBackend",
-    "ShardingPolicy", "mesh_layout", "shard_bounds", "synthetic_dense_index",
+    "DeviceShardedBackend", "EXECUTIONS", "ProcessShardedBackend",
+    "ShardCounters", "ShardedBackend",
+    "ShardingPolicy", "mesh_layout", "merge_shard_parts", "resolve_execution",
+    "shard_bounds", "synthetic_dense_index",
+    "BackendServer", "RemoteBackend", "RemoteBackendError",
     "CANONICAL_FAULT_PROFILE", "FaultProfile", "FaultyBackend", "RetrievalFault",
     "TransientBackendError", "has_injected_faults", "wrap_faulty",
     "BM25Index", "BM25Params", "Passage", "corpus_passages", "line_passages",

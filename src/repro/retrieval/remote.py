@@ -1,0 +1,413 @@
+"""RemoteBackend: retrieval as an RPC service behind the backend protocol.
+
+The last composition seam the serving stack needed: with
+:class:`ProcessShardedBackend` the index already runs in other processes,
+but only as children of one parent. This module cuts the cord — any
+:class:`~repro.retrieval.backend.RetrievalBackend` can be served over a
+socket (:class:`BackendServer`, CLI: ``python -m repro.launch.serve_backend``)
+and consumed from anywhere as a :class:`RemoteBackend` that satisfies the
+same protocol, so every decorator in the repo (cache, faults, resilience,
+even sharding on the server side) composes unchanged around a network hop.
+
+Wire protocol — deliberately dependency-light:
+
+* Length-prefixed frames: 4-byte big-endian byte count, then one message.
+* Messages encode as **msgpack** when the interpreter has it (binary
+  ndarray payloads, zero copy overhead beyond the pickle-free encode) and
+  fall back to **JSON** with base64 ndarray bodies otherwise. Client and
+  server negotiate nothing: the format is chosen per endpoint
+  (``fmt=``), with msgpack-preferring defaults on both sides.
+* ndarrays travel as ``{"__nd__": dtype, "shape": [...], "data": bytes}``
+  — dtype/shape restored exactly, so scores/ids round-trip bit-identical
+  and the ``search_batch`` contract (float32/int32, descending, sentinel
+  suffixes) survives the wire untouched.
+
+Failure typing is what makes the composition real: transport errors
+(connect refused, timeout, mid-stream disconnect) and *server-side*
+:class:`~repro.retrieval.faults.RetrievalFault` family errors (an injected
+fault or exhausted resilient wrapper on the served backend) surface on the
+client as :class:`RemoteBackendError`, a ``TransientBackendError`` — so a
+:class:`~repro.serving.resilience.ResilientBackend` wrapped around a
+``RemoteBackend`` retries, times out, opens its breaker, and walks the
+degradation ladder exactly as it would for a local flaky backend. Any
+other server-side exception is reported as non-transient and raises a
+plain ``RuntimeError`` (a programming error, not weather).
+
+The client is deliberately picklable (socket state is dropped and
+re-established lazily), so an engine whose backend map contains
+``RemoteBackend``\\ s can itself be rebuilt inside process-executor
+workers — each worker opens its own connection to the shared service.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import socket
+import struct
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.retrieval.backend import BackendCost
+from repro.retrieval.chunking import Passage
+from repro.retrieval.faults import RetrievalFault, TransientBackendError
+
+try:  # optional accelerator for the wire encoding; JSON covers its absence
+    import msgpack
+except ImportError:  # pragma: no cover - environment-dependent
+    msgpack = None
+
+_HEADER = struct.Struct(">I")
+MAX_FRAME_BYTES = 1 << 30  # refuse absurd frames before allocating them
+
+
+def default_wire_format() -> str:
+    """``"msgpack"`` when importable, else ``"json"``."""
+    return "msgpack" if msgpack is not None else "json"
+
+
+class RemoteBackendError(TransientBackendError):
+    """The remote retrieval service failed transiently (transport error,
+    timeout, or a transient fault reported by the served backend). Being a
+    :class:`TransientBackendError`, the resilience layer retries it and the
+    retrieve stage degrades it — a network hop gets the same weather
+    treatment as a local flaky backend."""
+
+
+# --------------------------------------------------------------------------- #
+# ndarray + frame codecs                                                       #
+# --------------------------------------------------------------------------- #
+def _pack_nd(arr: np.ndarray, fmt: str) -> dict:
+    arr = np.ascontiguousarray(arr)
+    raw = arr.tobytes()
+    return {
+        "__nd__": str(arr.dtype),
+        "shape": list(arr.shape),
+        "data": raw if fmt == "msgpack" else base64.b64encode(raw).decode("ascii"),
+    }
+
+
+def _unpack_nd(obj: dict, fmt: str) -> np.ndarray:
+    raw = obj["data"]
+    if fmt != "msgpack":
+        raw = base64.b64decode(raw)
+    return np.frombuffer(raw, dtype=np.dtype(obj["__nd__"])).reshape(obj["shape"])
+
+
+def _encode(payload: dict, fmt: str) -> bytes:
+    if fmt == "msgpack":
+        return msgpack.packb(payload, use_bin_type=True)
+    return json.dumps(payload).encode("utf-8")
+
+
+def _decode(body: bytes, fmt: str) -> dict:
+    if fmt == "msgpack":
+        return msgpack.unpackb(body, raw=False)
+    return json.loads(body.decode("utf-8"))
+
+
+def send_frame(sock: socket.socket, payload: dict, fmt: str) -> None:
+    """Write one length-prefixed message."""
+    body = _encode(payload, fmt)
+    sock.sendall(_HEADER.pack(len(body)) + body)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(n)
+        if not chunk:
+            raise ConnectionError("remote endpoint closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket, fmt: str) -> dict:
+    """Read one length-prefixed message."""
+    (length,) = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
+    if length > MAX_FRAME_BYTES:
+        raise ConnectionError(f"frame of {length} bytes exceeds the {MAX_FRAME_BYTES} cap")
+    return _decode(_recv_exact(sock, length), fmt)
+
+
+# --------------------------------------------------------------------------- #
+# Server                                                                       #
+# --------------------------------------------------------------------------- #
+class BackendServer:
+    """Serve one backend's protocol surface over a listening socket.
+
+    Thread-per-connection (retrieval here is jit/numpy work that releases
+    the GIL poorly, but each *connection* is typically one engine — the
+    fan-out concurrency lives client-side). Ops: ``hello`` (protocol
+    attributes), ``search_batch``, ``get_passages``. ``port=0`` binds an
+    ephemeral port (tests); the bound address is ``(host, port)`` after
+    construction.
+    """
+
+    def __init__(
+        self,
+        backend,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        fmt: str | None = None,
+    ):
+        self.backend = backend
+        self.fmt = fmt or default_wire_format()
+        if self.fmt == "msgpack" and msgpack is None:
+            raise ValueError("wire format 'msgpack' requested but msgpack is not importable")
+        self._sock = socket.create_server((host, port))
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._stop = threading.Event()
+        self._accept_thread: threading.Thread | None = None
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "BackendServer":
+        """Begin accepting connections on a daemon thread."""
+        self._accept_thread = threading.Thread(target=self._accept_loop, daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Blocking accept loop — the CLI entrypoint's mode."""
+        self._accept_loop()
+
+    def stop(self) -> None:
+        """Stop accepting and close the listening socket (live connections
+        end when their clients disconnect)."""
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:  # listener closed by stop()
+                break
+            threading.Thread(target=self._serve_conn, args=(conn,), daemon=True).start()
+
+    # -- request handling -----------------------------------------------------
+    def _serve_conn(self, conn: socket.socket) -> None:
+        with conn:
+            while True:
+                try:
+                    request = recv_frame(conn, self.fmt)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    reply = self._dispatch(request)
+                except RetrievalFault as err:
+                    # typed pass-through: the client re-raises this as
+                    # RemoteBackendError so resilience wrappers retry it
+                    reply = {"ok": False, "transient": True, "error": str(err)}
+                except Exception as err:
+                    reply = {
+                        "ok": False,
+                        "transient": False,
+                        "error": f"{type(err).__name__}: {err}",
+                    }
+                try:
+                    send_frame(conn, reply, self.fmt)
+                except (ConnectionError, OSError):
+                    return
+
+    def _dispatch(self, request: dict) -> dict:
+        op = request.get("op")
+        b = self.backend
+        if op == "hello":
+            return {
+                "ok": True,
+                "name": b.name,
+                "size": int(b.size),
+                "requires_query_vecs": bool(b.requires_query_vecs),
+                "scores_are_ranking": bool(getattr(b, "scores_are_ranking", True)),
+                "cost": {
+                    "latency_scale": float(b.cost.latency_scale),
+                    "recall_prior": float(b.cost.recall_prior),
+                    "flops_per_item": float(b.cost.flops_per_item),
+                },
+            }
+        if op == "search_batch":
+            queries = request["queries"]
+            qv = request["query_vecs"]
+            qvecs = None if qv is None else _unpack_nd(qv, self.fmt)
+            scores, ids = b.search_batch(queries, qvecs, int(request["k"]))
+            return {
+                "ok": True,
+                "scores": _pack_nd(np.asarray(scores, np.float32), self.fmt),
+                "ids": _pack_nd(np.asarray(ids, np.int32), self.fmt),
+            }
+        if op == "get_passages":
+            passages = b.get_passages([int(i) for i in request["ids"]])
+            return {
+                "ok": True,
+                "passages": [
+                    {"passage_id": p.passage_id, "text": p.text, "doc_id": p.doc_id}
+                    for p in passages
+                ],
+            }
+        raise ValueError(f"unknown op {op!r}")
+
+
+# --------------------------------------------------------------------------- #
+# Client                                                                       #
+# --------------------------------------------------------------------------- #
+class RemoteBackend:
+    """Client adapter: one remote retrieval service as a local backend.
+
+    Connects lazily (first protocol-attribute read or search) and caches
+    the server's ``hello`` — name, size, cost priors, vec requirement — so
+    the routing layer prices remote bundles exactly like local ones. One
+    persistent connection per client, serialized by a lock (the serving
+    stages already batch per (backend, k) group, so per-call pipelining is
+    the concurrency that matters and it lives in the stage pipeline).
+
+    Any transport failure resets the connection and raises
+    :class:`RemoteBackendError` — transient, so resilience wrappers retry
+    against a fresh socket. Picklable: socket/lock state is dropped on
+    ``__getstate__`` and rebuilt on first use in the new process.
+    """
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        *,
+        timeout_s: float = 10.0,
+        fmt: str | None = None,
+        name: str | None = None,
+    ):
+        self.host = host
+        self.port = int(port)
+        self.timeout_s = float(timeout_s)
+        self.fmt = fmt or default_wire_format()
+        if self.fmt == "msgpack" and msgpack is None:
+            raise ValueError("wire format 'msgpack' requested but msgpack is not importable")
+        self._name_override = name
+        self._sock: socket.socket | None = None
+        self._lock = threading.Lock()
+        self._hello: dict | None = None
+
+    # -- pickling (process-executor workers rebuild the connection) -----------
+    def __getstate__(self) -> dict:
+        state = self.__dict__.copy()
+        state["_sock"] = None
+        state["_lock"] = None
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
+    # -- transport ------------------------------------------------------------
+    def _reset(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:  # pragma: no cover - best-effort close
+                pass
+            self._sock = None
+
+    def _request(self, payload: dict) -> dict:
+        """One request/reply exchange; transport failures are transient."""
+        with self._lock:
+            try:
+                if self._sock is None:
+                    self._sock = socket.create_connection(
+                        (self.host, self.port), timeout=self.timeout_s
+                    )
+                send_frame(self._sock, payload, self.fmt)
+                reply = recv_frame(self._sock, self.fmt)
+            except (OSError, ConnectionError) as err:
+                self._reset()
+                raise RemoteBackendError(
+                    f"remote backend at {self.host}:{self.port} unavailable: {err}"
+                ) from err
+        if not reply.get("ok"):
+            if reply.get("transient"):
+                raise RemoteBackendError(
+                    f"remote backend at {self.host}:{self.port} reported a "
+                    f"transient fault: {reply.get('error')}"
+                )
+            raise RuntimeError(
+                f"remote backend at {self.host}:{self.port} request failed: "
+                f"{reply.get('error')}"
+            )
+        return reply
+
+    def _handshake(self) -> dict:
+        if self._hello is None:
+            self._hello = self._request({"op": "hello"})
+        return self._hello
+
+    def close(self) -> None:
+        """Drop the connection (it re-establishes on next use)."""
+        with self._lock:
+            self._reset()
+
+    # -- protocol surface ------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self._name_override or self._handshake()["name"]
+
+    @property
+    def size(self) -> int:
+        return int(self._handshake()["size"])
+
+    @property
+    def requires_query_vecs(self) -> bool:
+        return bool(self._handshake()["requires_query_vecs"])
+
+    @property
+    def scores_are_ranking(self) -> bool:
+        return bool(self._handshake()["scores_are_ranking"])
+
+    @property
+    def cost(self) -> BackendCost:
+        c = self._handshake()["cost"]
+        return BackendCost(
+            latency_scale=c["latency_scale"],
+            recall_prior=c["recall_prior"],
+            flops_per_item=c["flops_per_item"],
+        )
+
+    def search_batch(
+        self,
+        queries: Sequence[str] | None,
+        query_vecs,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Proxy ``search_batch`` over the wire; rows come back with the
+        exact dtypes/ordering the served backend produced."""
+        reply = self._request(
+            {
+                "op": "search_batch",
+                "queries": [str(q) for q in queries] if queries is not None else [],
+                "query_vecs": (
+                    None
+                    if query_vecs is None
+                    else _pack_nd(np.asarray(query_vecs, np.float32), self.fmt)
+                ),
+                "k": int(k),
+            }
+        )
+        return (
+            np.asarray(_unpack_nd(reply["scores"], self.fmt), np.float32),
+            np.asarray(_unpack_nd(reply["ids"], self.fmt), np.int32),
+        )
+
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Proxy passage-payload resolution over the wire."""
+        reply = self._request({"op": "get_passages", "ids": [int(i) for i in ids]})
+        return [
+            Passage(passage_id=p["passage_id"], text=p["text"], doc_id=p["doc_id"])
+            for p in reply["passages"]
+        ]

@@ -6,14 +6,22 @@ dominant systems lever for RAG serving, and "Towards Understanding Systems
 Trade-offs in RAG" (2024) shows retrieval cost dominates exactly the
 heavy-bundle regime the router prices. :class:`ShardedBackend` partitions
 the corpus into S contiguous row ranges and runs the per-shard searches
-under one of two executions, selected by ``from_dense(...,
-execution=...)``:
+under one of three executions (plus ``"auto"``), selected by
+``from_dense(..., execution=...)``:
 
 * ``"threads"`` — per-shard inner backends fanned out on the host
   (optionally on a thread pool), ids globalized, per-shard top-k candidate
   lists merged with the repo's fused top-k primitive
   (:func:`repro.retrieval.topk.merge_topk`). Runs anywhere, but every
-  query pays S Python dispatches plus S-1 host-side merges.
+  query pays S Python dispatches plus S-1 host-side merges — and the
+  *pooled* variant pays them under one GIL, which measurably loses to
+  running the shards inline for jit-bound work (the serving bench's S=4
+  collapse). ``"auto"`` therefore resolves to inline threads or process
+  workers, never a thread pool (:func:`resolve_execution`).
+* ``"process"`` — the same host fan-out on persistent spawned worker
+  processes, one per shard (:class:`ProcessShardedBackend`): each worker
+  owns its corpus slice and jit closures, searches run GIL-free across
+  cores, and the parent merges with the identical fused top-k.
 * ``"device"`` — the whole search lowers onto a jax device mesh as a
   single ``shard_map``'d program (:class:`DeviceShardedBackend`): corpus
   rows are row-partitioned across the mesh per
@@ -60,6 +68,8 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
+import multiprocessing
+import os
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
@@ -78,7 +88,64 @@ from repro.retrieval.chunking import Passage
 from repro.retrieval.index import Q_BLOCK, DenseIndex, _pallas_block_width
 from repro.retrieval.topk import merge_topk
 
-EXECUTIONS = ("threads", "device")
+# "auto" resolves at construction time (resolve_execution): inline host
+# fan-out on single-core hosts, process workers when real cores exist.
+EXECUTIONS = ("threads", "process", "device", "auto")
+
+
+def resolve_execution(execution: str, *, n_shards: int, workers: int = 0) -> str:
+    """Resolve ``"auto"`` to a concrete dense-shard execution.
+
+    The threaded fan-out is a pessimization for jit-bound shards — S GIL-
+    serialized dispatches plus pool handoffs per search (the 1158→55 qps
+    S=4 collapse the serving bench exposed) — so auto never picks a thread
+    pool: single shard or single core → ``"threads"`` with the serial
+    inline fan-out (no pool, no handoff); multi-core and S > 1 →
+    ``"process"`` (one spawned worker per shard, GIL-free). An explicit
+    ``workers`` request is honored as the thread pool the caller asked for.
+    """
+    if execution != "auto":
+        return execution
+    if workers:
+        return "threads"
+    if n_shards > 1 and (os.cpu_count() or 1) > 1:
+        return "process"
+    return "threads"
+
+
+def merge_shard_parts(
+    parts: "Sequence[tuple[np.ndarray, np.ndarray]]", k: int
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Merge per-shard (scores, globalized ids) candidates into the global
+    top-k; shared by every host-side fan-out (threads and process).
+
+    Left-to-right :func:`~repro.retrieval.topk.merge_topk` — pure selection
+    over already-computed scores, so no arithmetic (and no float drift)
+    happens at merge time; lowest shard wins ties, reconstructing the
+    unsharded lowest-global-id order. IVF shards keep their ``-inf``
+    degenerate-probe padding through the merge (per-shard truncation would
+    discard candidates another shard can't supply); the result narrows
+    once, globally, to the widest all-finite prefix — exactly what the
+    unsharded IVFBackend does. Dense and BM25 rows are always finite, so
+    that truncation is a no-op for them.
+
+    Returns ``(scores, ids, n_merges)`` with the merge count for the
+    :class:`ShardCounters` the CI scaling cell pins.
+    """
+    vals = jnp.asarray(parts[0][0])
+    ids = jnp.asarray(parts[0][1])
+    n_merges = 0
+    for sv, si in parts[1:]:
+        width = min(k, vals.shape[-1] + sv.shape[-1])
+        vals, ids = merge_topk(vals, ids, jnp.asarray(sv), jnp.asarray(si), width)
+        n_merges += 1
+    vals_np = np.asarray(vals, np.float32)
+    ids_np = np.asarray(ids, np.int32)
+    bad = ~np.isfinite(vals_np)
+    if bad.any():
+        w = int((~bad).sum(axis=1).min())
+        vals_np, ids_np = vals_np[:, :w], ids_np[:, :w]
+    return vals_np, ids_np, n_merges
 
 
 def shard_bounds(n: int, n_shards: int) -> list[tuple[int, int]]:
@@ -203,21 +270,43 @@ class ShardedBackend:
         ``execution="threads"`` slices the index's *normalized* embeddings
         (and passage payloads) into contiguous per-shard
         ``DenseIndex(..., assume_normalized=True)`` backends searched from
-        the host. ``execution="device"`` returns a
-        :class:`DeviceShardedBackend` that row-partitions the same
-        embeddings across a device mesh (``mesh`` defaults to a 1-axis
-        ``"data"`` mesh over the first ``n_shards`` visible devices) and
-        runs search + merge as one ``shard_map``'d program. Both are
-        bit-identical to the unsharded index.
+        the host. ``execution="process"`` returns a
+        :class:`ProcessShardedBackend`: one persistent spawned worker per
+        shard, each owning its slice's index and jit closures, searched
+        GIL-free over pipes and merged with the same fused top-k.
+        ``execution="device"`` returns a :class:`DeviceShardedBackend`
+        that row-partitions the same embeddings across a device mesh
+        (``mesh`` defaults to a 1-axis ``"data"`` mesh over the first
+        ``n_shards`` visible devices) and runs search + merge as one
+        ``shard_map``'d program. ``execution="auto"`` picks between inline
+        threads and process by host core count (:func:`resolve_execution`
+        — the threaded pool is never auto-selected: fanning jit-bound
+        shards across GIL-sharing threads is the measured S=4 collapse).
+        All are bit-identical to the unsharded index.
         """
         if execution not in EXECUTIONS:
             raise ValueError(f"unknown execution {execution!r}; expected one of {EXECUTIONS}")
+        execution = resolve_execution(execution, n_shards=n_shards, workers=workers)
         if execution == "device":
             if workers:
                 raise ValueError("workers is a threads-execution knob; device execution ignores the host pool")
             return DeviceShardedBackend(
                 index, n_shards=n_shards, mesh=mesh, scorer=scorer,
                 interpret=interpret, q_block=q_block,
+            )
+        if execution == "process":
+            if workers:
+                raise ValueError(
+                    "workers is a threads-execution knob; process execution "
+                    "owns one worker process per shard"
+                )
+            if q_block is not None:
+                raise ValueError(
+                    "q_block is a device-execution knob; the process path has "
+                    "no fixed-shape chunking to tune"
+                )
+            return ProcessShardedBackend(
+                index, n_shards=n_shards, scorer=scorer, interpret=interpret
             )
         if q_block is not None:
             raise ValueError(
@@ -355,27 +444,10 @@ class ShardedBackend:
                 self._shard_search(s, queries, query_vecs, k)
                 for s in range(self.n_shards)
             ]
-        vals = jnp.asarray(parts[0][0])
-        ids = jnp.asarray(parts[0][1])
-        n_merges = 0
-        for sv, si in parts[1:]:
-            width = min(k, vals.shape[-1] + sv.shape[-1])
-            vals, ids = merge_topk(vals, ids, jnp.asarray(sv), jnp.asarray(si), width)
-            n_merges += 1
+        vals_np, ids_np, n_merges = merge_shard_parts(parts, k)
         self.counters.searches += 1
         self.counters.shard_searches += self.n_shards
         self.counters.merges += n_merges
-        vals_np = np.asarray(vals, np.float32)
-        ids_np = np.asarray(ids, np.int32)
-        # IVF shards keep their -inf degenerate-probe padding through the
-        # merge (per-shard truncation would discard candidates another shard
-        # can't supply); narrow once, globally, to the widest all-finite
-        # prefix — exactly what the unsharded IVFBackend does. Dense and
-        # BM25 rows are always finite, so this is a no-op for them.
-        bad = ~np.isfinite(vals_np)
-        if bad.any():
-            w = int((~bad).sum(axis=1).min())
-            vals_np, ids_np = vals_np[:, :w], ids_np[:, :w]
         return vals_np, ids_np
 
     # -- payloads -------------------------------------------------------------
@@ -583,3 +655,202 @@ class DeviceShardedBackend(ShardedBackend):
 
     def shutdown(self) -> None:
         """Nothing to stop: there is no host pool on the device path."""
+
+
+# --------------------------------------------------------------------------- #
+# execution="process": persistent per-shard worker processes                   #
+# --------------------------------------------------------------------------- #
+def _dense_shard_worker(conn, emb: np.ndarray, scorer: str, interpret: bool) -> None:
+    """One shard's resident search service (runs in a spawned process).
+
+    Builds the shard's :class:`DenseIndex`/:class:`DenseBackend` once —
+    embeddings arrive already normalized, exactly the slice the threads
+    path would take, so scores are bit-identical — then answers
+    ``("search", (qvecs, k))`` requests over the pipe until ``("stop",
+    None)`` or EOF. Errors are reported as ``("error", repr)`` rather than
+    killing the worker: one bad query batch must not wedge the shard.
+    """
+    from repro.retrieval.backend import DenseBackend
+    from repro.retrieval.index import DenseIndex
+
+    backend = DenseBackend(
+        DenseIndex(emb, None, assume_normalized=True),
+        scorer=scorer,
+        interpret=interpret,
+    )
+    conn.send(("ready", backend.size))
+    while True:
+        try:
+            op, payload = conn.recv()
+        except (EOFError, OSError):
+            break
+        if op == "stop":
+            break
+        try:
+            qvecs, k = payload
+            scores, ids = backend.search_batch(None, jnp.asarray(qvecs), k)
+            conn.send(
+                ("ok", (np.asarray(scores, np.float32), np.asarray(ids, np.int32)))
+            )
+        except BaseException as err:  # keep serving: report, don't die
+            conn.send(("error", f"{type(err).__name__}: {err}"))
+    conn.close()
+
+
+class ProcessShardedBackend(ShardedBackend):
+    """``execution="process"``: S-way host fan-out on spawned worker
+    processes — the GIL-free counterpart of the threads path.
+
+    Each shard is a persistent child process owning its contiguous slice of
+    the (already normalized) corpus embeddings and its own jit search
+    closures; a search sends the query block to **all** shards before
+    reading any reply, so the S local searches genuinely overlap on S
+    cores instead of serializing on the parent's interpreter lock. Ids are
+    globalized by shard offset on the parent and merged with the same
+    fused :func:`merge_shard_parts` top-k as the threads path, so results
+    — and the :class:`ShardCounters` discipline (S ``shard_searches`` and
+    S-1 ``merges`` per call) — are bit-identical to it.
+
+    Workers spawn lazily on the first search (``spawn`` context: the
+    parent's jax runtime threads make fork unsafe) and each pays one jax
+    import + index build; :meth:`warm` fronts that cost. Passage payloads
+    resolve against the retained parent index — the workers never see
+    them. The live backend holds pipes and processes, so it is
+    deliberately not picklable: sending it to a process stage executor
+    fails the spawn-safety audit, which is correct — rebuild from config
+    in the worker instead.
+    """
+
+    execution = "process"
+
+    def __init__(
+        self,
+        index: DenseIndex,
+        *,
+        n_shards: int,
+        scorer: str = "blocked",
+        interpret: bool = False,
+        name: str | None = None,
+        cost: BackendCost | None = None,
+    ):
+        # shard_bounds is the one validator of (n, S) combinations; calling
+        # it here keeps process-path errors identical to the threads path.
+        self.bounds = shard_bounds(index.size, n_shards)
+        self.offsets = [b[0] for b in self.bounds]
+        self.index = index
+        self.scorer = scorer
+        self.interpret = interpret
+        proto = DenseBackend(index, scorer=scorer, interpret=interpret)
+        self.name = name if name is not None else proto.name
+        self.cost = cost if cost is not None else proto.cost
+        self.requires_query_vecs = True
+        self.workers = 0
+        self._pool = None
+        self._n_shards = int(n_shards)
+        self.counters = ShardCounters()
+        self._procs: list | None = None
+        self._conns: list | None = None
+
+    @property
+    def n_shards(self) -> int:
+        return self._n_shards
+
+    @property
+    def size(self) -> int:
+        return self.index.size
+
+    @property
+    def shards(self):  # pragma: no cover - guard against threads-path use
+        raise AttributeError(
+            "ProcessShardedBackend has no in-process shard backends; the "
+            "partitions live in worker processes"
+        )
+
+    @shards.setter
+    def shards(self, _value):  # the pipe-based __init__ never sets this
+        raise AttributeError("process shards are worker-resident")
+
+    # -- worker lifecycle ------------------------------------------------------
+    def _ensure_workers(self) -> None:
+        if self._conns is not None:
+            return
+        ctx = multiprocessing.get_context("spawn")
+        emb = np.asarray(self.index.embeddings, np.float32)
+        procs, conns = [], []
+        for start, stop in self.bounds:
+            parent_conn, child_conn = ctx.Pipe()
+            p = ctx.Process(
+                target=_dense_shard_worker,
+                args=(child_conn, emb[start:stop].copy(), self.scorer, self.interpret),
+                daemon=True,
+            )
+            p.start()
+            child_conn.close()
+            procs.append(p)
+            conns.append(parent_conn)
+        # all workers spawn concurrently; collect readiness after launching
+        for s, c in enumerate(conns):
+            tag, payload = c.recv()
+            if tag != "ready":  # pragma: no cover - startup failure path
+                raise RuntimeError(f"shard {s} worker failed to start: {payload}")
+        self._procs, self._conns = procs, conns
+
+    def warm(self) -> None:
+        """Spawn the shard workers now (first search pays it otherwise)."""
+        self._ensure_workers()
+
+    # -- search ---------------------------------------------------------------
+    def search_batch(
+        self,
+        queries: Sequence[str],
+        query_vecs: jnp.ndarray | None,
+        k: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Fan out to every shard worker, merge per-shard top-k globally.
+
+        Dispatch-then-collect: all S requests are written before any reply
+        is read, so shard searches run concurrently across cores.
+        """
+        if query_vecs is None:
+            raise ValueError(f"backend {self.name!r} requires query_vecs")
+        self._ensure_workers()
+        q = np.asarray(query_vecs, np.float32)
+        for conn in self._conns:
+            conn.send(("search", (q, int(k))))
+        parts: list[tuple[np.ndarray, np.ndarray]] = []
+        for s, conn in enumerate(self._conns):
+            tag, payload = conn.recv()
+            if tag != "ok":
+                raise RuntimeError(f"shard {s} worker search failed: {payload}")
+            scores, ids = payload
+            # sentinels are positionless: never offset them into a
+            # neighboring shard's real id range (same rule as _shard_search)
+            ids = np.where(ids >= 0, ids + np.int32(self.offsets[s]), ids)
+            parts.append((scores, ids))
+        vals_np, ids_np, n_merges = merge_shard_parts(parts, k)
+        self.counters.searches += 1
+        self.counters.shard_searches += self._n_shards
+        self.counters.merges += n_merges
+        return vals_np, ids_np
+
+    # -- payloads -------------------------------------------------------------
+    def get_passages(self, ids: Sequence[int]) -> list[Passage]:
+        """Global ids resolve against the retained parent index — payloads
+        never cross the worker pipes."""
+        return self.index.get_passages(ids)
+
+    def shutdown(self) -> None:
+        """Stop the shard workers (idempotent; daemons die with the parent
+        anyway, but a clean stop releases their memory immediately)."""
+        if self._conns is None:
+            return
+        for c in self._conns:
+            try:
+                c.send(("stop", None))
+            except (OSError, BrokenPipeError):
+                pass
+        for c in self._conns:
+            c.close()
+        for p in self._procs:
+            p.join(timeout=10)
+        self._procs = self._conns = None

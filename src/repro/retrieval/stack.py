@@ -62,8 +62,12 @@ class BackendStackConfig:
       partitioning (``shards=1`` disables). ``shard_execution="device"``
       lowers search + merge onto the jax device mesh
       (:class:`~repro.retrieval.sharded.DeviceShardedBackend`);
-      ``"threads"`` is the host fan-out. ``shard_workers`` only applies to
-      threads execution.
+      ``"process"`` fans out to persistent per-shard worker processes
+      (:class:`~repro.retrieval.sharded.ProcessShardedBackend`, GIL-free);
+      ``"threads"`` is the in-process host fan-out; ``"auto"`` resolves to
+      inline threads or process by host core count
+      (:func:`~repro.retrieval.sharded.resolve_execution`).
+      ``shard_workers`` only applies to threads execution.
     * ``shard_backends`` — which backend names sharding replaces (default
       ``("dense",)``). Adding ``"bm25"`` / ``"ivf"`` partitions those too
       (replicated global idf/avgdl and centroid stats keep results
@@ -72,6 +76,13 @@ class BackendStackConfig:
       threads path regardless of ``shard_execution``, which governs the
       dense backend only (postings/inverted lists are host-built ragged
       structures with no mesh placement).
+    * ``remote_backends`` — backend name → ``"host:port"`` of a
+      :class:`~repro.retrieval.remote.BackendServer` serving that backend;
+      the named entry is *replaced* by (or added as) a
+      :class:`~repro.retrieval.remote.RemoteBackend` client before any
+      wrapping, so faults/cache/resilience dress the network hop exactly
+      like a local backend. Mutually exclusive with sharding the same name
+      (shard server-side instead — the service's own stack can shard).
     * ``cache_size`` — exact query-result LRU capacity (0 disables).
     * ``fault_profiles`` — backend name → seeded
       :class:`~repro.retrieval.faults.FaultProfile` (empty disables).
@@ -87,6 +98,7 @@ class BackendStackConfig:
     shard_scorer: str = "blocked"
     shard_interpret: bool = False
     shard_backends: tuple = ("dense",)
+    remote_backends: Mapping[str, str] = dataclasses.field(default_factory=dict)
     cache_size: int = 0
     fault_profiles: Mapping[str, FaultProfile] = dataclasses.field(default_factory=dict)
     resilience: "ResilienceConfig | bool | None" = None
@@ -113,12 +125,24 @@ class BackendStackConfig:
                     f"expected a subset of {shardable} (hybrid fuses two "
                     "backends — shard its dense/bm25 components instead)"
                 )
-        if "dense" not in self.shard_backends and self.shard_execution == "device":
+        if "dense" not in self.shard_backends and self.shard_execution in ("device", "process"):
             raise ValueError(
-                "shard_execution='device' governs the dense backend, which "
-                "shard_backends excludes; use execution='threads' for "
-                "sparse-only sharding"
+                f"shard_execution={self.shard_execution!r} governs the dense "
+                "backend, which shard_backends excludes; use "
+                "execution='threads' for sparse-only sharding"
             )
+        for name, addr in self.remote_backends.items():
+            host, sep, port = str(addr).rpartition(":")
+            if not sep or not host or not port.isdigit():
+                raise ValueError(
+                    f"remote_backends[{name!r}] must be 'host:port', got {addr!r}"
+                )
+            if self.wants_sharding and name in self.shard_backends:
+                raise ValueError(
+                    f"backend {name!r} is both remote and sharded; shard it "
+                    "inside the serving process instead (the backend server's "
+                    "own stack can shard)"
+                )
         if self.cache_size < 0:
             raise ValueError(f"cache_size must be >= 0, got {self.cache_size}")
         for name, profile in self.fault_profiles.items():
@@ -144,6 +168,7 @@ class BackendStackConfig:
         """True when building with this config returns an equivalent map."""
         return (
             not self.wants_sharding
+            and not self.remote_backends
             and self.cache_size == 0
             and not self.fault_profiles
             and self.resolved_resilience() is None
@@ -179,6 +204,14 @@ def build_backend_stack(
     for why the order (shard → faults → cache → resilience) is fixed.
     """
     out = dict(backends)
+    if config.remote_backends:
+        # innermost: the remote client *is* the service — every later layer
+        # (faults, cache, resilience) wraps the network hop like any backend
+        from repro.retrieval.remote import RemoteBackend
+
+        for name, addr in config.remote_backends.items():
+            host, _, port = str(addr).rpartition(":")
+            out[name] = RemoteBackend(host, int(port), name=name)
     if config.wants_sharding:
         for name in dict.fromkeys(config.shard_backends):  # unique, ordered
             if name not in out:

@@ -779,7 +779,23 @@ class StagePipeline:
     ``depth=1`` is the fully synchronous path: no worker threads are
     created, ``submit`` runs the middle stages inline, and ``poll`` returns
     the finalized batch immediately (the old ``--no-overlap`` behavior).
+
+    ``executor`` selects where the middle stages run at depth > 1:
+
+    * ``"thread"`` (default) — the in-process worker pool above. Cheap to
+      start, overlaps stages with decode, but every stage fights the GIL.
+    * ``"process"`` — a :class:`~repro.serving.procpool.
+      ProcessStageExecutor`: spawn-context workers that each rebuild the
+      engine once from ``engine_factory`` (or share a caller-provided
+      ``process_executor``) and drain pickled :class:`RoutedBatch`
+      payloads GIL-free. ``route``/``finalize`` stay on the parent — the
+      same recombination barrier — so drained records remain bit-identical
+      to the sequential loop. Payloads and the factory are audited with
+      :func:`~repro.serving.procpool.ensure_picklable` (typed
+      ``SpawnSafetyError``, never an opaque pool crash).
     """
+
+    EXECUTORS = ("thread", "process")
 
     def __init__(
         self,
@@ -789,12 +805,43 @@ class StagePipeline:
         workers: int = 1,
         worker_timeout_s: float = 60.0,
         clock=time.monotonic,
+        executor: str = "thread",
+        engine_factory=None,
+        process_executor=None,
     ):
+        if executor not in self.EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r}; expected one of {self.EXECUTORS}"
+            )
         self.engine = engine
         self.depth = max(1, int(depth))
         self.workers = max(1, int(workers)) if self.depth > 1 else 0
-        self._pool = ThreadPoolExecutor(max_workers=self.workers) if self.workers else None
-        self._inflight: deque[tuple[object, Future | DecodedBatch]] = deque()
+        self.executor = executor
+        self._proc = None
+        self._owns_proc = False
+        self._pool = None
+        if executor == "process" and self.depth > 1:
+            if process_executor is not None:
+                self._proc = process_executor
+            else:
+                if engine_factory is None:
+                    raise ValueError(
+                        "executor='process' needs an engine_factory (a picklable "
+                        "zero-arg engine builder, e.g. an EngineSpec) or a "
+                        "shared process_executor"
+                    )
+                from repro.serving.procpool import ProcessStageExecutor
+
+                self._proc = ProcessStageExecutor(
+                    engine_factory, max_workers=self.workers
+                )
+                self._owns_proc = True
+        elif self.workers:
+            self._pool = ThreadPoolExecutor(max_workers=self.workers)
+        # entries carry (tag, work, (batch_index, qid0, n)): the meta lets
+        # poll() wrap a raw worker-process exception in a typed StageError
+        # without round-tripping the error through a custom pickle path
+        self._inflight: deque[tuple[object, Future | DecodedBatch, tuple[int, int, int]]] = deque()
         # deterministic per-stage counters (the CI gate's burst-serial cell)
         self.stage_batches = 0
         self.retrieve_calls = 0
@@ -855,11 +902,25 @@ class StagePipeline:
         batch_index = self.stage_batches
         self.stage_batches += 1
         work: Future | DecodedBatch
-        if self._pool is not None:
+        if self._proc is not None:
+            # process path: the worker cannot beat a parent-side heartbeat,
+            # so the batch itself is the liveness unit — beat at dispatch,
+            # clear on the future's completion callback
+            wid = f"proc-{batch_index}"
+            self.heartbeats.beat(wid)
+            self._busy[wid] = batch_index
+            work = self._proc.submit(routed)
+
+            def _clear(_fut, wid=wid):
+                self._busy.pop(wid, None)
+                self.heartbeats.beat(wid)
+
+            work.add_done_callback(_clear)
+        elif self._pool is not None:
             work = self._pool.submit(self._middle, routed, batch_index)
         else:
             work = self._middle(routed, batch_index)
-        self._inflight.append((tag, work))
+        self._inflight.append((tag, work, (batch_index, routed.qid0, routed.n)))
 
     def poll(self) -> "tuple[object, list[EngineResponse]] | None":
         """Finalize the oldest micro-batch if its middle stages are done.
@@ -869,15 +930,29 @@ class StagePipeline:
         no matter how the worker threads interleave."""
         if not self._inflight:
             return None
-        tag, work = self._inflight[0]
+        tag, work, meta = self._inflight[0]
         if isinstance(work, Future):
             if not work.done():
                 return None
-            # a worker exception re-raises here as the typed StageError the
-            # _middle wrapper attached (batch index + qid range + cause) —
-            # the head entry stays queued, so the failure is re-observable,
-            # never silently dropped
-            decoded = work.result()
+            # a worker exception re-raises here typed: the thread path's
+            # _middle wrapper already attached StageError (batch index +
+            # qid range + cause); a process worker raises raw (StageError's
+            # custom __init__ doesn't survive exception pickling), so wrap
+            # it here from the head entry's meta. Either way the head stays
+            # queued, so the failure is re-observable, never silently
+            # dropped.
+            try:
+                result = work.result()
+            except StageError:
+                raise
+            except BaseException as err:
+                batch_index, qid0, n = meta
+                raise StageError(batch_index, qid0, n, err) from err
+            if self._proc is not None:
+                pid, decoded = result
+                self._proc.note_batch(pid)
+            else:
+                decoded = result
         else:
             decoded = work
         self._inflight.popleft()
@@ -897,7 +972,16 @@ class StagePipeline:
         if self._inflight and isinstance(self._inflight[0][1], Future):
             futures_wait([self._inflight[0][1]], timeout=timeout)
 
+    def process_stats(self) -> dict | None:
+        """Worker counters from the process executor (None on thread/serial
+        paths): distinct workers seen + sorted batches-per-worker profile."""
+        return self._proc.stats() if self._proc is not None else None
+
     def shutdown(self) -> None:
-        """Stop the worker pool (no-op on the depth-1 serial path)."""
+        """Stop the worker pool (no-op on the depth-1 serial path). An
+        owned process executor is shut down too; a shared one is left
+        running for its other pipelines."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        if self._proc is not None and self._owns_proc:
+            self._proc.shutdown()

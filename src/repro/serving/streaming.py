@@ -62,6 +62,12 @@ class StreamConfig:
     # Deprecated master switch (pre-StagePipeline API): overlap=False forces
     # depth 1 regardless of pipeline_depth, matching the old --no-overlap.
     overlap: bool = True
+    # Where the middle stages run at depth > 1: "thread" = in-process pool
+    # (cheap, GIL-bound), "process" = spawn-context workers that rebuild
+    # the engine from StreamingEngine's engine_factory and drain pickled
+    # micro-batches GIL-free (serving/procpool.py). Results are
+    # bit-identical either way; only wall-clock moves.
+    executor: str = "thread"
     idle_sleep_s: float = 0.0002  # nothing to decode, nothing due: yield
     # Resilience knobs (serving/resilience.py). request_deadline_ms: every
     # admitted request carries this wall-clock deadline from its arrival;
@@ -71,6 +77,12 @@ class StreamConfig:
     # summary()["resilience"]["stalled_workers"].
     request_deadline_ms: float | None = None
     worker_timeout_s: float = 60.0
+
+    def __post_init__(self):
+        if self.executor not in ("thread", "process"):
+            raise ValueError(
+                f"unknown executor {self.executor!r}; expected 'thread' or 'process'"
+            )
 
     @property
     def effective_depth(self) -> int:
@@ -123,6 +135,10 @@ class StreamResult:
     resilience: dict[str, int] = dataclasses.field(default_factory=dict)
     breaker_states: dict[str, str] = dataclasses.field(default_factory=dict)
     stalled_workers: list[str] = dataclasses.field(default_factory=list)
+    # which executor drained the middle stages, and (process runs only) the
+    # deterministic worker counters the CI gate's process cell pins
+    executor: str = "thread"
+    process_workers: dict | None = None
 
     @property
     def records(self) -> list:
@@ -148,11 +164,12 @@ class StreamResult:
         def fin(x: float) -> float | None:
             return float(x) if math.isfinite(x) else None
 
-        return {
+        out = {
             "offered_qps": fin(self.offered_qps),
             "overlap": self.overlap,
             "pipeline_depth": self.pipeline_depth,
             "retrieval_workers": self.retrieval_workers,
+            "executor": self.executor,
             "completed": completed,
             "rejected": len(self.rejections),
             "wall_s": self.wall_s,
@@ -175,6 +192,9 @@ class StreamResult:
                 "stalled_workers": sorted(self.stalled_workers),
             },
         }
+        if self.process_workers is not None:
+            out["process_workers"] = dict(self.process_workers)
+        return out
 
 
 class StreamingEngine:
@@ -187,6 +207,8 @@ class StreamingEngine:
         scheduler: ContinuousBatchScheduler | None = None,
         decode_fn: Callable[[list[Request]], list[bool]] | None = None,
         config: StreamConfig = StreamConfig(),
+        engine_factory=None,
+        process_executor=None,
     ):
         self.engine = engine
         self.scheduler = scheduler or ContinuousBatchScheduler(
@@ -195,6 +217,13 @@ class StreamingEngine:
         )
         self.decode_fn = decode_fn or (lambda active: [False] * len(active))
         self.config = config
+        # config.executor == "process" needs one of these: a picklable
+        # zero-arg engine builder (rebuilt once per spawned worker — must
+        # describe the same engine `engine` is, or worker stages diverge
+        # from the parent's replay) or an already-running shared
+        # ProcessStageExecutor (serving/procpool.py).
+        self.engine_factory = engine_factory
+        self.process_executor = process_executor
 
     # ------------------------------------------------------------------ #
     def run(self, workload: ArrivalProcess | Sequence[Arrival]) -> StreamResult:
@@ -218,6 +247,9 @@ class StreamingEngine:
             depth=cfg.effective_depth,
             workers=cfg.retrieval_workers,
             worker_timeout_s=cfg.worker_timeout_s,
+            executor=cfg.executor,
+            engine_factory=self.engine_factory,
+            process_executor=self.process_executor,
         )
         intake: deque[Arrival] = deque()
         responses: list[EngineResponse] = []
@@ -335,6 +367,8 @@ class StreamingEngine:
             resilience=pipeline.resilience.as_dict(),
             breaker_states=breaker_states,
             stalled_workers=sorted(stalled_seen),
+            executor=pipeline.executor,
+            process_workers=pipeline.process_stats(),
         )
 
     # ------------------------------------------------------------------ #
@@ -377,14 +411,23 @@ def serve_stream(
     decode_fn: Callable[[list[Request]], list[bool]] | None = None,
     scheduler: ContinuousBatchScheduler | None = None,
     config: StreamConfig = StreamConfig(),
+    engine_factory=None,
+    process_executor=None,
 ) -> StreamResult:
     """One-call streaming run: Poisson arrivals at ``rate_qps`` (or all at
-    t=0 when the rate is infinite) drained to completion."""
+    t=0 when the rate is infinite) drained to completion.
+    ``engine_factory`` / ``process_executor`` feed the process-executor
+    path (``config.executor == "process"``; see :class:`StreamingEngine`)."""
     if math.isinf(rate_qps):
         workload = ArrivalProcess.all_at_once(queries, references)
     else:
         workload = ArrivalProcess.poisson(queries, references, rate_qps=rate_qps, seed=seed)
     streamer = StreamingEngine(
-        engine, scheduler=scheduler, decode_fn=decode_fn, config=config
+        engine,
+        scheduler=scheduler,
+        decode_fn=decode_fn,
+        config=config,
+        engine_factory=engine_factory,
+        process_executor=process_executor,
     )
     return streamer.run(workload)

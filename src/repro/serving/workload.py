@@ -12,6 +12,10 @@ Two constructors cover the serving-paper workloads:
   recorded production traffic or the degenerate all-at-once trace used by
   the parity tests (every query arrives at t=0, which makes a drained
   streaming run comparable to one ``answer_batch`` call).
+* :meth:`ArrivalProcess.zipfian` — a repeat-heavy stream drawn from a
+  rank-frequency Zipf law over the query set (seeded), the realistic
+  cache workload: a few head queries dominate, the tail is long. This is
+  what the cache benchmark exercises instead of a uniform 2-epoch replay.
 
 Times are seconds relative to run start; the engine maps them onto its own
 wall clock.
@@ -23,6 +27,30 @@ import dataclasses
 from typing import Iterator, Sequence
 
 import numpy as np
+
+
+def zipfian_indices(
+    n_items: int, length: int, *, s: float = 1.1, seed: int = 0
+) -> np.ndarray:
+    """``length`` seeded draws over ``n_items`` ranks with P(i) ∝ 1/(i+1)^s.
+
+    Rank-frequency Zipf over a *finite* catalog (normalized truncated
+    zipf — not ``numpy.random.zipf``, whose unbounded support would need
+    rejection), so item 0 is the head query and ``s`` sets the skew:
+    s=0 is uniform, s≈1 the classic web-query shape, larger s concentrates
+    mass on the head (higher cache hit rates). Deterministic in
+    ``(n_items, length, s, seed)``.
+    """
+    if n_items < 1:
+        raise ValueError(f"n_items must be >= 1, got {n_items}")
+    if length < 0:
+        raise ValueError(f"length must be >= 0, got {length}")
+    if s < 0:
+        raise ValueError(f"zipf exponent s must be >= 0, got {s}")
+    weights = 1.0 / np.power(np.arange(1, n_items + 1, dtype=np.float64), s)
+    probs = weights / weights.sum()
+    rng = np.random.default_rng(seed)
+    return rng.choice(n_items, size=int(length), p=probs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,3 +134,32 @@ class ArrivalProcess:
     ) -> "ArrivalProcess":
         """Every query at t=0 — the drained-run parity workload."""
         return cls.from_trace([0.0] * len(queries), queries, references)
+
+    @classmethod
+    def zipfian(
+        cls,
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+        *,
+        length: int,
+        s: float = 1.1,
+        rate_qps: float | None = None,
+        seed: int = 0,
+    ) -> "ArrivalProcess":
+        """Zipf-repeat stream: ``length`` arrivals drawn from the query set
+        with rank-frequency skew ``s`` (:func:`zipfian_indices`), each
+        repeat carrying its query's reference. ``rate_qps=None`` emits the
+        burst (all at t=0) trace; a positive rate lays the same repeat
+        sequence on seeded Poisson arrival times. The realistic cache
+        workload — hit rate is a function of ``(s, length, cache size)``
+        instead of the degenerate every-query-repeats-once replay.
+        """
+        refs = list(references) if references is not None else [None] * len(queries)
+        if len(refs) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(refs)} references")
+        idx = zipfian_indices(len(queries), length, s=s, seed=seed)
+        qs = [queries[i] for i in idx]
+        rs = [refs[i] for i in idx]
+        if rate_qps is None:
+            return cls.all_at_once(qs, rs)
+        return cls.poisson(qs, rs, rate_qps=rate_qps, seed=seed)

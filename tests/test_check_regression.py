@@ -20,6 +20,7 @@ STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 
 def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
+             zipf_hits=30, zipf_misses=54, shard_identical=True,
              res_completed=28, res_degraded=12, res_rejected=0, res_opens=1,
              shard_searches=4, shard_merges=1, identical=True,
              bm25_hits=147, sparse_identical=True, bm25_closures=2):
@@ -33,6 +34,18 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
             "hits": cache_hits,
             "misses": cache_misses,
             "evictions": 21,  # telemetry, ungated
+        },
+        "cache_zipf": {
+            "capacity": 16,  # telemetry, ungated
+            "hits": zipf_hits,
+            "misses": zipf_misses,
+            "hit_rate": 0.35,  # telemetry, ungated
+        },
+        "sharding": {
+            "unsharded": {"qps": 1100.0, "records_identical": True},
+            "inline_4": {"qps": 800.0, "records_identical": True},
+            "threads_4": {"qps": 55.0, "records_identical": True},
+            "process_4": {"qps": 900.0, "records_identical": shard_identical},
         },
         "resilience": {
             "completed": res_completed,
@@ -80,7 +93,9 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
 
 
 def _streaming(completed=28, rejected=0, decode_steps=358, stage_batches=2,
-               retrieve_calls=5, dense_calls=5):
+               retrieve_calls=5, dense_calls=5, p_completed=28,
+               p_stage_batches=4, p_workers=1, p_worker_batches=4,
+               p_identical=True):
     return {
         "benchmark": "streaming_paper28",
         "streaming_qps": 30.0,  # telemetry, ungated
@@ -92,6 +107,16 @@ def _streaming(completed=28, rejected=0, decode_steps=358, stage_batches=2,
             "stage_batches": stage_batches,
             "retrieve_calls": retrieve_calls,
             "backend_search_calls": {"dense": dense_calls},
+        },
+        "process_gate": {
+            "cell": "burst_process_d2w1",
+            "completed": p_completed,
+            "rejected": 0,
+            "stage_batches": p_stage_batches,
+            "retrieve_calls": 8,
+            "n_workers": p_workers,
+            "worker_batches": p_worker_batches,
+            "records_identical": p_identical,
         },
     }
 
@@ -149,6 +174,53 @@ def test_cache_counters_are_exact_both_directions():
     assert len(fails) == 1 and "cache.hits" in fails[0]
     # unchanged counters pass
     assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
+
+
+def test_zipf_cache_counters_are_exact_both_directions():
+    """cache_zipf.hits / cache_zipf.misses come from a seeded Zipf repeat
+    stream against a fixed-capacity LRU — fully deterministic, so drift in
+    either direction means the workload generator or cache discipline
+    structurally changed."""
+    fails = compare(_serving(), _serving(zipf_hits=20, zipf_misses=64),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2 and all("exact" in f for f in fails)
+    # MORE hits also fails: the seeded stream moved
+    fails = compare(_serving(), _serving(zipf_hits=40), SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "cache_zipf.hits" in fails[0]
+
+
+def test_sharding_arm_exactness_bits_are_gated():
+    """Every executor-labeled sharding arm's records_identical bit is gated
+    exact: a fan-out may only ever change speed, never records."""
+    fails = compare(_serving(), _serving(shard_identical=False),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "sharding.process_4.records_identical" in fails[0]
+    assert "exact" in fails[0]
+
+
+def test_process_gate_counters_are_exact():
+    """The process-executor smoke cell: batch structure, worker accounting,
+    and the records_identical invariant are all deterministic — any drift
+    fails (decode_steps is deliberately ungated there: decode/admission
+    interleaving under a concurrent executor is timing-dependent)."""
+    assert not any(m.key == "process_gate.decode_steps" for m in STREAMING_METRICS)
+    # the process-executor ≡ answer_batch invariant broke: hard fail
+    fails = compare(_streaming(), _streaming(p_identical=False),
+                    STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "process_gate.records_identical" in fails[0]
+    # worker accounting drift: a batch double-counted or lost
+    fails = compare(_streaming(), _streaming(p_worker_batches=5),
+                    STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "process_gate.worker_batches" in fails[0]
+    # a lost completion under the process executor
+    fails = compare(_streaming(), _streaming(p_completed=27),
+                    STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "process_gate.completed" in fails[0]
+    # extra micro-batches: the burst's batch structure changed
+    fails = compare(_streaming(), _streaming(p_stage_batches=5),
+                    STREAMING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "process_gate.stage_batches" in fails[0]
+    assert compare(_streaming(), _streaming(), STREAMING_METRICS, threshold=0.2) == []
 
 
 def test_resilience_counters_are_exact_both_directions():
@@ -228,7 +300,8 @@ def test_null_gate_container_fails_not_disarms():
     base = _streaming()
     base["gate"] = None
     fails = compare(base, _streaming(), STREAMING_METRICS, threshold=0.2)
-    assert len(fails) == len(STREAMING_METRICS)
+    under_gate = [m for m in STREAMING_METRICS if m.key.startswith("gate.")]
+    assert len(fails) == len(under_gate)
     assert all("null" in f for f in fails)
 
 

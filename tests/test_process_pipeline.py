@@ -1,0 +1,142 @@
+"""Process-executor conformance: drained streaming runs with middle stages
+executed in worker *processes* stay byte-identical to ``answer_batch`` —
+the same invariant the thread pipeline pins, now across a pickle boundary.
+
+The sweep crosses executor ∈ {thread, process} × (depth, workers) ∈
+{(1,1), (2,2), (4,2)} × shards ∈ {1, 3}. Process cells share one
+module-scoped :class:`ProcessStageExecutor` so the ~1s/worker spawn cost is
+paid once for the whole module; a dedicated test covers the owned-executor
+path (``engine_factory``) and a sharded worker spec.
+"""
+
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import BackendStackConfig
+from repro.serving.engine import build_paper_engine
+from repro.serving.procpool import EngineSpec, ProcessStageExecutor
+from repro.serving.stages import StagePipeline
+from repro.serving.streaming import StreamConfig, serve_stream
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+
+@pytest.fixture(scope="module")
+def ref_csv():
+    """The sequential answer_batch record stream every cell must reproduce."""
+    ref = build_paper_engine(make_policy("router_default"))
+    ref.answer_batch(QUERIES, REFS)
+    return ref.telemetry.to_csv()
+
+
+@pytest.fixture(scope="module")
+def proc():
+    """One shared 2-worker process executor for every process cell."""
+    ex = ProcessStageExecutor(EngineSpec(), max_workers=2)
+    ex.warm()
+    yield ex
+    ex.shutdown()
+
+
+def _serve(eng, *, depth, workers, executor, **kwargs):
+    return serve_stream(
+        eng,
+        QUERIES,
+        REFS,
+        config=StreamConfig(
+            overlap=depth > 1,
+            pipeline_depth=depth,
+            retrieval_workers=workers,
+            executor=executor,
+        ),
+        **kwargs,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# The conformance sweep                                                        #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("shards", [1, 3])
+@pytest.mark.parametrize("depth,workers", [(1, 1), (2, 2), (4, 2)])
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_streaming_conformance_sweep(executor, depth, workers, shards, ref_csv, request):
+    stack = BackendStackConfig(shards=shards) if shards > 1 else None
+    eng = build_paper_engine(make_policy("router_default"), stack=stack)
+    kwargs = {}
+    if executor == "process" and depth > 1:
+        kwargs["process_executor"] = request.getfixturevalue("proc")
+    result = _serve(eng, depth=depth, workers=workers, executor=executor, **kwargs)
+    assert len(result.responses) == len(QUERIES)
+    assert not result.rejections
+    assert eng.telemetry.to_csv() == ref_csv
+    s = result.summary()
+    assert s["executor"] == executor
+    if executor == "process" and depth > 1:
+        assert s["process_workers"] is not None
+    else:
+        assert "process_workers" not in s
+
+
+# --------------------------------------------------------------------------- #
+# Worker accounting                                                            #
+# --------------------------------------------------------------------------- #
+def test_process_worker_counters_account_every_batch(ref_csv, proc):
+    """Each middle-stage batch lands on exactly one worker: the delta in the
+    executor's batches-per-worker profile equals the run's stage_batches."""
+    before = sum(proc.stats()["batches_per_worker"])
+    eng = build_paper_engine(make_policy("router_default"))
+    result = _serve(eng, depth=2, workers=2, executor="process", process_executor=proc)
+    assert eng.telemetry.to_csv() == ref_csv
+    s = result.summary()
+    stats = s["process_workers"]
+    assert 1 <= stats["n_workers"] <= 2
+    assert sum(stats["batches_per_worker"]) - before == s["stage_batches"]
+
+
+def test_owned_executor_from_engine_factory(ref_csv):
+    """StagePipeline builds (and tears down) its own process pool when given
+    a picklable engine factory instead of a shared executor."""
+    eng = build_paper_engine(make_policy("router_default"))
+    result = _serve(
+        eng, depth=2, workers=1, executor="process", engine_factory=EngineSpec()
+    )
+    assert eng.telemetry.to_csv() == ref_csv
+    stats = result.summary()["process_workers"]
+    assert stats["n_workers"] == 1
+    assert sum(stats["batches_per_worker"]) == result.summary()["stage_batches"]
+
+
+def test_sharded_worker_spec_parity(ref_csv):
+    """A worker engine rebuilt with a *sharded* backend stack produces the
+    same records — sharding is bit-identical on both sides of the pickle
+    boundary."""
+    spec = EngineSpec(stack=BackendStackConfig(shards=3))
+    ex = ProcessStageExecutor(spec, max_workers=1)
+    try:
+        eng = build_paper_engine(
+            make_policy("router_default"), stack=BackendStackConfig(shards=3)
+        )
+        result = _serve(eng, depth=2, workers=1, executor="process", process_executor=ex)
+        assert len(result.responses) == len(QUERIES)
+        assert eng.telemetry.to_csv() == ref_csv
+    finally:
+        ex.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# Configuration errors                                                         #
+# --------------------------------------------------------------------------- #
+def test_process_executor_requires_factory_or_shared_pool():
+    eng = build_paper_engine(make_policy("router_default"))
+    with pytest.raises(ValueError, match="engine_factory"):
+        StagePipeline(eng, depth=2, executor="process")
+
+
+def test_unknown_executor_rejected():
+    eng = build_paper_engine(make_policy("router_default"))
+    with pytest.raises(ValueError, match="executor"):
+        StagePipeline(eng, depth=2, executor="fiber")
+    with pytest.raises(ValueError, match="executor"):
+        StreamConfig(executor="fiber")

@@ -1,0 +1,175 @@
+"""Process shard fan-out: ProcessShardedBackend parity with the unsharded
+index, the ShardCounters discipline, execution resolution (auto never picks
+the thread pool — the measured S=4 collapse), and stack integration.
+
+Worker spawn is the expensive part (~1s/shard: spawn + jax import + index
+build), so the suite shares one module-scoped 2-shard backend over a small
+synthetic corpus and keeps every other test spawn-free — construction is
+lazy, so validation / stack-wiring tests never start a worker.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import (
+    BackendStackConfig,
+    DenseBackend,
+    ProcessShardedBackend,
+    ShardedBackend,
+    build_backend_stack,
+    make_backends,
+    resolve_execution,
+    synthetic_dense_index,
+)
+from repro.serving.engine import build_paper_engine
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+N_DOCS, DIM = 24, 16
+
+
+@pytest.fixture(scope="module")
+def index():
+    return synthetic_dense_index(N_DOCS, DIM, seed=0)
+
+
+@pytest.fixture(scope="module")
+def proc_backend(index):
+    backend = ShardedBackend.from_dense(index, n_shards=2, execution="process")
+    assert isinstance(backend, ProcessShardedBackend)
+    backend.warm()
+    yield backend
+    backend.shutdown()
+
+
+def _qvecs(n, seed=7):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(n, DIM)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=1, keepdims=True)
+
+
+# --------------------------------------------------------------------------- #
+# Bitwise parity + counters                                                    #
+# --------------------------------------------------------------------------- #
+def test_process_sharded_bitwise_parity(index, proc_backend):
+    dense = DenseBackend(index)
+    qvecs = _qvecs(5)
+    queries = [f"q{i}" for i in range(5)]
+    for k in (1, 4, 8):
+        ref_s, ref_i = dense.search_batch(queries, qvecs, k)
+        got_s, got_i = proc_backend.search_batch(queries, qvecs, k)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+
+
+def test_process_sharded_counters_discipline(index):
+    """S shard_searches and S-1 merges per search — the same ShardCounters
+    contract the threads path pins."""
+    backend = ShardedBackend.from_dense(index, n_shards=2, execution="process")
+    try:
+        qvecs = _qvecs(3)
+        backend.search_batch(["a", "b", "c"], qvecs, 4)
+        backend.search_batch(["a", "b", "c"], qvecs, 4)
+        assert backend.counters.searches == 2
+        assert backend.counters.shard_searches == 4
+        assert backend.counters.merges == 2
+    finally:
+        backend.shutdown()
+        backend.shutdown()  # idempotent
+
+
+def test_process_sharded_passages_and_metadata(index, proc_backend):
+    assert proc_backend.n_shards == 2
+    assert proc_backend.size == N_DOCS
+    assert proc_backend.requires_query_vecs
+    dense = DenseBackend(index)
+    assert proc_backend.name == dense.name
+    assert proc_backend.cost == dense.cost
+    # payloads resolve against the retained parent index
+    got = proc_backend.get_passages([0, 3, N_DOCS - 1])
+    ref = dense.get_passages([0, 3, N_DOCS - 1])
+    assert [p.text for p in got] == [p.text for p in ref]
+    with pytest.raises(ValueError, match="requires query_vecs"):
+        proc_backend.search_batch(["q"], None, 2)
+
+
+def test_process_shards_live_in_workers(index):
+    backend = ProcessShardedBackend(index, n_shards=2)
+    with pytest.raises(AttributeError, match="worker"):
+        _ = backend.shards
+    with pytest.raises(AttributeError):
+        backend.shards = []
+
+
+# --------------------------------------------------------------------------- #
+# Execution resolution (the S=4 collapse fix)                                  #
+# --------------------------------------------------------------------------- #
+def test_resolve_execution_auto_never_picks_thread_pool(monkeypatch):
+    import os
+
+    monkeypatch.setattr(os, "cpu_count", lambda: 8)
+    assert resolve_execution("auto", n_shards=4) == "process"
+    assert resolve_execution("auto", n_shards=1) == "threads"
+    # an explicit pool request is honored even on a multi-core host
+    assert resolve_execution("auto", n_shards=4, workers=4) == "threads"
+    monkeypatch.setattr(os, "cpu_count", lambda: 1)
+    assert resolve_execution("auto", n_shards=4) == "threads"
+    monkeypatch.setattr(os, "cpu_count", lambda: None)
+    assert resolve_execution("auto", n_shards=4) == "threads"
+    # explicit settings pass through untouched
+    for ex in ("threads", "process", "device"):
+        assert resolve_execution(ex, n_shards=4) == ex
+
+
+def test_from_dense_rejects_threads_knobs_on_process_path(index):
+    with pytest.raises(ValueError, match="workers"):
+        ShardedBackend.from_dense(index, n_shards=2, execution="process", workers=2)
+    with pytest.raises(ValueError, match="q_block"):
+        ShardedBackend.from_dense(index, n_shards=2, execution="process", q_block=8)
+    with pytest.raises(ValueError, match="unknown execution"):
+        ShardedBackend.from_dense(index, n_shards=2, execution="greenlet")
+
+
+# --------------------------------------------------------------------------- #
+# Stack integration (spawn-free: construction is lazy)                         #
+# --------------------------------------------------------------------------- #
+def test_stack_builds_process_sharded_dense(index):
+    from repro.retrieval import HashedNGramEmbedder
+
+    embedder = HashedNGramEmbedder(dim=DIM)
+    backends = make_backends(index, index.passages, embedder, names=("dense",))
+    stacked = build_backend_stack(
+        backends,
+        BackendStackConfig(shards=2, shard_execution="process"),
+        index=index,
+    )
+    backend = stacked["dense"]
+    assert isinstance(backend, ProcessShardedBackend)
+    assert backend.n_shards == 2
+    backend.shutdown()  # no-op: never spawned
+
+
+def test_stack_rejects_process_execution_without_dense_shard():
+    with pytest.raises(ValueError, match="shard_execution"):
+        BackendStackConfig(shards=2, shard_execution="process", shard_backends=("bm25",))
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level parity: answer_batch over a process-sharded dense backend       #
+# --------------------------------------------------------------------------- #
+def test_engine_parity_with_process_sharded_dense():
+    ref = build_paper_engine(make_policy("router_default"))
+    ref.answer_batch(QUERIES, REFS)
+
+    eng = build_paper_engine(make_policy("router_default"))
+    sharded = ShardedBackend.from_dense(eng.index, n_shards=2, execution="process")
+    eng.backends["dense"] = sharded
+    try:
+        eng.answer_batch(QUERIES, REFS)
+        assert eng.telemetry.to_csv() == ref.telemetry.to_csv()
+        assert sharded.counters.searches > 0
+    finally:
+        sharded.shutdown()

@@ -1,0 +1,204 @@
+"""Spawn-safety audit for the process-executor path: everything that crosses
+a process boundary pickles round-trip, and everything that can't fails fast
+with a typed SpawnSafetyError instead of an opaque pool crash.
+
+These tests never spawn a worker — the audit layer (ensure_picklable,
+EngineSpec, the stage-artifact dataclasses) is pure host-side code. The
+actual process execution is covered by tests/test_process_pipeline.py.
+"""
+
+import functools
+import pickle
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import BackendStackConfig, FaultProfile
+from repro.serving.engine import build_paper_engine
+from repro.serving.procpool import EngineSpec, SpawnSafetyError, ensure_picklable
+from repro.serving.stages import assemble, decode, retrieve, route
+from repro.serving.streaming import StreamConfig
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+
+def roundtrip(obj):
+    return pickle.loads(pickle.dumps(obj))
+
+
+# --------------------------------------------------------------------------- #
+# ensure_picklable: the typed audit                                            #
+# --------------------------------------------------------------------------- #
+def test_ensure_picklable_returns_bytes():
+    payload = ensure_picklable({"a": 1}, "test payload")
+    assert isinstance(payload, bytes)
+    assert pickle.loads(payload) == {"a": 1}
+
+
+def test_ensure_picklable_rejects_lambda_with_typed_error():
+    with pytest.raises(SpawnSafetyError, match="engine factory"):
+        ensure_picklable(lambda: None, "engine factory")
+
+
+def test_ensure_picklable_rejects_lock_holder():
+    class Holder:
+        def __init__(self):
+            self.lock = threading.Lock()
+
+    with pytest.raises(SpawnSafetyError, match="stage payload"):
+        ensure_picklable(Holder(), "stage payload")
+
+
+def test_spawn_safety_error_is_type_error():
+    # callers catching TypeError (the standard pickle failure surface)
+    # still catch the typed audit error
+    assert issubclass(SpawnSafetyError, TypeError)
+
+
+def test_process_executor_rejects_unpicklable_factory_eagerly():
+    from repro.serving.procpool import ProcessStageExecutor
+
+    # the audit fires at construction, before any process is spawned
+    with pytest.raises(SpawnSafetyError, match="engine factory"):
+        ProcessStageExecutor(lambda: None, max_workers=1)
+
+
+# --------------------------------------------------------------------------- #
+# EngineSpec: the canonical picklable factory                                  #
+# --------------------------------------------------------------------------- #
+def test_engine_spec_roundtrips():
+    spec = EngineSpec()
+    assert roundtrip(spec) == spec
+    sharded = EngineSpec(stack=BackendStackConfig(shards=3, cache_size=8))
+    back = roundtrip(sharded)
+    assert back.stack.shards == 3 and back.stack.cache_size == 8
+
+
+def test_engine_spec_builds_paper_equivalent_engine():
+    spec = roundtrip(EngineSpec())
+    eng = spec()  # __call__ == build
+    ref = build_paper_engine(make_policy("router_default"))
+    eng.answer_batch(QUERIES[:4], REFS[:4])
+    ref.answer_batch(QUERIES[:4], REFS[:4])
+    assert eng.telemetry.to_csv() == ref.telemetry.to_csv()
+
+
+def test_serve_cli_factory_is_picklable():
+    """The serve CLI's process factory — partial(build_engine_from_opts,
+    opts) over plain argparse values — must survive the spawn audit."""
+    from repro.launch.serve import _ENGINE_OPT_KEYS, build_engine_from_opts
+
+    defaults = {
+        "docs": None, "policy": "router_default", "catalog": "paper",
+        "epsilon": 0.0, "min_confidence": 0.0, "min_confidence_backend": [],
+        "max_cost_tokens": None, "cache_size": 0, "shards": 1,
+        "shard_backends": "dense", "shard_execution": "threads",
+        "remote_backend": [], "synthetic_docs": 0, "synthetic_dim": 64,
+        "synthetic_seed": 0, "fault_profile": [], "retrieve_timeout_ms": None,
+        "max_retries": None,
+    }
+    assert set(defaults) == set(_ENGINE_OPT_KEYS)
+    factory = functools.partial(build_engine_from_opts, defaults)
+    rebuilt = roundtrip(factory)
+    eng = rebuilt()
+    ref = build_paper_engine(make_policy("router_default"))
+    eng.answer_batch(QUERIES[:2], REFS[:2])
+    ref.answer_batch(QUERIES[:2], REFS[:2])
+    assert eng.telemetry.to_csv() == ref.telemetry.to_csv()
+
+
+# --------------------------------------------------------------------------- #
+# Config / stage-artifact pickle round-trips                                   #
+# --------------------------------------------------------------------------- #
+def test_configs_roundtrip_pickle():
+    profile = roundtrip(FaultProfile(failure_rate=0.3, stall_every=6, seed=2))
+    assert profile.failure_rate == 0.3 and profile.stall_every == 6
+    stack = roundtrip(
+        BackendStackConfig(
+            shards=2,
+            cache_size=16,
+            fault_profiles={"dense": FaultProfile(failure_rate=0.1)},
+        )
+    )
+    assert stack.shards == 2 and stack.fault_profiles["dense"].failure_rate == 0.1
+    cfg = roundtrip(StreamConfig(pipeline_depth=3, executor="process"))
+    assert cfg.pipeline_depth == 3 and cfg.executor == "process"
+
+
+def test_stage_artifacts_roundtrip_pickle():
+    """The exact payload chain the process executor ships: RoutedBatch out,
+    DecodedBatch back — every artifact (and its nested numpy arrays, bills,
+    resilience events) survives pickling bit-for-bit."""
+    eng = build_paper_engine(make_policy("router_default"))
+    routed = route(eng, QUERIES[:6], REFS[:6])
+    routed2 = roundtrip(routed)
+    assert routed2.qid0 == routed.qid0
+    assert routed2.queries == routed.queries
+    np.testing.assert_array_equal(routed2.choices, routed.choices)
+    np.testing.assert_array_equal(routed2.complexity, routed.complexity)
+    assert routed2.retrieval_plan == routed.retrieval_plan
+    for i, vec in routed.query_vecs.items():
+        np.testing.assert_array_equal(routed2.query_vecs[i], vec)
+
+    retrieved = retrieve(eng, routed)
+    retrieved2 = roundtrip(retrieved)
+    for i, (s, ids) in retrieved.retrievals.items():
+        np.testing.assert_array_equal(retrieved2.retrievals[i][0], s)
+        np.testing.assert_array_equal(retrieved2.retrievals[i][1], ids)
+    assert retrieved2.search_calls == retrieved.search_calls
+
+    admitted = assemble(eng, retrieved)
+    admitted2 = roundtrip(admitted)
+    assert admitted2.prompts == admitted.prompts
+    assert admitted2.final_bundle == admitted.final_bundle
+
+    decoded = decode(eng, admitted)
+    decoded2 = roundtrip(decoded)
+    assert len(decoded2.executions) == len(decoded.executions)
+    for ex, ex2 in zip(decoded.executions, decoded2.executions):
+        assert ex2.answer == ex.answer
+        assert ex2.bill == ex.bill
+        assert ex2.latency_ms == ex.latency_ms
+        assert ex2.quality == ex.quality or (
+            np.isnan(ex2.quality) and np.isnan(ex.quality)
+        )
+    assert decoded2.resilience == decoded.resilience
+
+
+def test_decoded_batch_finalizes_identically_after_roundtrip():
+    """finalize(unpickled decoded) commits the same records as
+    finalize(original) — the property that makes process-shipped middle
+    stages invisible to telemetry."""
+    from repro.serving.stages import finalize
+
+    eng_a = build_paper_engine(make_policy("router_default"))
+    eng_b = build_paper_engine(make_policy("router_default"))
+    routed_a = route(eng_a, QUERIES[:6], REFS[:6])
+    routed_b = route(eng_b, QUERIES[:6], REFS[:6])
+    decoded_a = decode(eng_a, assemble(eng_a, retrieve(eng_a, routed_a)))
+    decoded_b = roundtrip(decode(eng_b, assemble(eng_b, retrieve(eng_b, routed_b))))
+    finalize(eng_a, decoded_a)
+    finalize(eng_b, decoded_b)
+    assert eng_a.telemetry.to_csv() == eng_b.telemetry.to_csv()
+    assert eng_a.ledger.total_billed == eng_b.ledger.total_billed
+
+
+def test_live_process_sharded_backend_fails_spawn_audit():
+    """A live ProcessShardedBackend (open pipes, child processes) must be
+    refused by the audit with the typed error, not crash the pool."""
+    from repro.retrieval import ProcessShardedBackend
+    from repro.retrieval.index import DenseIndex, l2_normalize
+
+    rng = np.random.default_rng(0)
+    emb = l2_normalize(rng.normal(size=(12, 8)).astype(np.float32))
+    backend = ProcessShardedBackend(DenseIndex(emb, None, assume_normalized=True), n_shards=2)
+    backend.warm()  # pipes + processes now live
+    try:
+        with pytest.raises(SpawnSafetyError):
+            ensure_picklable(backend, "backend")
+    finally:
+        backend.shutdown()

@@ -1,0 +1,253 @@
+"""RemoteBackend: the RPC adapter behind the RetrievalBackend protocol.
+
+Servers bind ephemeral loopback ports in-process (BackendServer.start()),
+so the suite needs no external service: parity is bitwise against the
+wrapped backend, hello attributes drive routing identically, transport and
+server-side faults surface as RemoteBackendError (a TransientBackendError,
+so ResilientBackend retries/exhausts over the network hop), and the client
+composes under build_backend_stack with cache + resilience unchanged.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import (
+    BackendStackConfig,
+    CachedBackend,
+    DenseBackend,
+    FaultProfile,
+    FaultyBackend,
+    TransientBackendError,
+    build_backend_stack,
+    make_backends,
+    synthetic_dense_index,
+)
+from repro.retrieval.remote import (
+    BackendServer,
+    RemoteBackend,
+    RemoteBackendError,
+    default_wire_format,
+)
+from repro.serving.engine import build_paper_engine
+from repro.serving.resilience import (
+    BackendUnavailableError,
+    ResilienceConfig,
+    ResilientBackend,
+    RetryPolicy,
+)
+
+QUERIES = list(BENCHMARK_QUERIES)
+REFS = list(REFERENCE_ANSWERS)
+
+N_DOCS, DIM = 24, 16
+
+
+@pytest.fixture(scope="module")
+def index():
+    return synthetic_dense_index(N_DOCS, DIM, seed=0)
+
+
+@pytest.fixture(scope="module")
+def served(index):
+    """A dense backend behind an in-process server on an ephemeral port."""
+    dense = DenseBackend(index)
+    server = BackendServer(dense).start()
+    client = RemoteBackend(server.host, server.port)
+    yield dense, server, client
+    client.close()
+    server.stop()
+
+
+def _qvecs(n, seed=7):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(n, DIM)).astype(np.float32)
+    return q / np.linalg.norm(q, axis=1, keepdims=True)
+
+
+# --------------------------------------------------------------------------- #
+# Contract: parity, hello attributes, payloads                                 #
+# --------------------------------------------------------------------------- #
+def test_remote_search_bitwise_parity(served):
+    dense, _server, client = served
+    qvecs = _qvecs(5)
+    queries = [f"q{i}" for i in range(5)]
+    for k in (1, 4, 8):
+        ref_s, ref_i = dense.search_batch(queries, qvecs, k)
+        got_s, got_i = client.search_batch(queries, qvecs, k)
+        assert got_s.dtype == np.float32 and got_i.dtype == np.int32
+        np.testing.assert_array_equal(got_s, np.asarray(ref_s, np.float32))
+        np.testing.assert_array_equal(got_i, np.asarray(ref_i, np.int32))
+
+
+def test_remote_hello_attributes_match_served_backend(served):
+    dense, _server, client = served
+    assert client.name == dense.name
+    assert client.size == dense.size
+    assert client.requires_query_vecs == dense.requires_query_vecs
+    assert client.scores_are_ranking == getattr(dense, "scores_are_ranking", True)
+    assert client.cost == dense.cost
+
+
+def test_remote_get_passages(served):
+    dense, _server, client = served
+    ids = [0, 3, N_DOCS - 1]
+    got = client.get_passages(ids)
+    ref = dense.get_passages(ids)
+    assert [(p.passage_id, p.text, p.doc_id) for p in got] == [
+        (p.passage_id, p.text, p.doc_id) for p in ref
+    ]
+
+
+def test_remote_client_pickles_and_reconnects(served):
+    dense, _server, client = served
+    clone = pickle.loads(pickle.dumps(client))
+    qvecs = _qvecs(2)
+    ref_s, ref_i = dense.search_batch(["a", "b"], qvecs, 4)
+    got_s, got_i = clone.search_batch(["a", "b"], qvecs, 4)
+    np.testing.assert_array_equal(got_s, np.asarray(ref_s, np.float32))
+    np.testing.assert_array_equal(got_i, np.asarray(ref_i, np.int32))
+    clone.close()
+
+
+def test_json_wire_format_roundtrip(index):
+    """The dependency-free fallback encoding carries ndarrays bit-identical
+    (base64 bodies instead of msgpack binary)."""
+    dense = DenseBackend(index)
+    server = BackendServer(dense, fmt="json").start()
+    client = RemoteBackend(server.host, server.port, fmt="json")
+    try:
+        qvecs = _qvecs(3)
+        ref_s, ref_i = dense.search_batch(["a", "b", "c"], qvecs, 4)
+        got_s, got_i = client.search_batch(["a", "b", "c"], qvecs, 4)
+        np.testing.assert_array_equal(got_s, np.asarray(ref_s, np.float32))
+        np.testing.assert_array_equal(got_i, np.asarray(ref_i, np.int32))
+        assert client.name == dense.name
+    finally:
+        client.close()
+        server.stop()
+    assert default_wire_format() in ("msgpack", "json")
+
+
+# --------------------------------------------------------------------------- #
+# Failure typing: transport + served faults are transient                      #
+# --------------------------------------------------------------------------- #
+def test_unreachable_server_raises_transient():
+    # bind-then-close guarantees a dead port
+    import socket
+
+    s = socket.create_server(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    client = RemoteBackend("127.0.0.1", port, timeout_s=1.0)
+    with pytest.raises(RemoteBackendError) as exc_info:
+        client.search_batch(["q"], _qvecs(1), 2)
+    assert isinstance(exc_info.value, TransientBackendError)
+
+
+def test_served_fault_propagates_as_transient_and_resilience_retries(index):
+    """A transient fault on the *served* backend crosses the wire typed: the
+    client raises RemoteBackendError and a ResilientBackend wrapped around
+    it retries until exhaustion — the same weather treatment as a local
+    flaky backend."""
+    faulty = FaultyBackend(
+        DenseBackend(index), FaultProfile(failure_rate=1.0, seed=0), sleep=lambda _s: None
+    )
+    server = BackendServer(faulty).start()
+    client = RemoteBackend(server.host, server.port)
+    try:
+        with pytest.raises(RemoteBackendError):
+            client.search_batch(["q"], _qvecs(1), 2)
+        resilient = ResilientBackend(
+            client,
+            ResilienceConfig(retry=RetryPolicy(max_retries=2, backoff_base_ms=0.0)),
+            sleep=lambda _s: None,
+        )
+        with pytest.raises(BackendUnavailableError):
+            resilient.search_batch(["q"], _qvecs(1), 2)
+        assert faulty.calls == 1 + 1 + 2  # direct probe + 1 attempt + 2 retries
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_server_side_programming_error_is_not_transient(served):
+    _dense, server, _client = served
+    bad = RemoteBackend(server.host, server.port)
+    try:
+        with pytest.raises(RuntimeError) as exc_info:
+            # wrong-dimension query vectors explode server-side as a plain
+            # exception → non-transient reply → RuntimeError client-side
+            bad.search_batch(["q"], np.ones((1, DIM + 1), np.float32), 2)
+        assert not isinstance(exc_info.value, RemoteBackendError)
+    finally:
+        bad.close()
+
+
+# --------------------------------------------------------------------------- #
+# Stack composition: remote innermost, cache + resilience unchanged            #
+# --------------------------------------------------------------------------- #
+def test_remote_composes_under_backend_stack(served, index):
+    dense, server, _client = served
+    from repro.retrieval import HashedNGramEmbedder
+
+    embedder = HashedNGramEmbedder(dim=DIM)
+    backends = make_backends(index, index.passages, embedder, names=("dense",))
+    stacked = build_backend_stack(
+        backends,
+        BackendStackConfig(
+            remote_backends={"dense": f"{server.host}:{server.port}"},
+            cache_size=8,
+            resilience=True,
+        ),
+        index=index,
+    )
+    top = stacked["dense"]
+    assert isinstance(top, ResilientBackend)
+    assert isinstance(top.inner, CachedBackend)
+    assert isinstance(top.inner.inner, RemoteBackend)
+    qvecs = _qvecs(2)
+    ref_s, ref_i = dense.search_batch(["a", "b"], qvecs, 4)
+    for _ in range(2):  # second round hits the cache, rows stay identical
+        got_s, got_i = top.search_batch(["a", "b"], qvecs, 4)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    assert top.inner.stats().hits > 0
+    top.inner.inner.close()
+
+
+def test_stack_rejects_remote_plus_sharding_same_backend():
+    with pytest.raises(ValueError, match="remote"):
+        BackendStackConfig(
+            remote_backends={"dense": "127.0.0.1:8631"},
+            shards=2,
+            shard_backends=("dense",),
+        )
+
+
+def test_stack_rejects_malformed_address():
+    with pytest.raises(ValueError, match="host:port"):
+        BackendStackConfig(remote_backends={"dense": "no-port-here"})
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level parity: remote dense behind the paper engine                    #
+# --------------------------------------------------------------------------- #
+def test_engine_parity_with_remote_dense():
+    ref = build_paper_engine(make_policy("router_default"))
+    ref.answer_batch(QUERIES, REFS)
+
+    eng = build_paper_engine(make_policy("router_default"))
+    server = BackendServer(eng.backends["dense"]).start()
+    client = RemoteBackend(server.host, server.port)
+    eng.backends["dense"] = client
+    try:
+        eng.answer_batch(QUERIES, REFS)
+        assert eng.telemetry.to_csv() == ref.telemetry.to_csv()
+        assert eng.ledger.total_billed == ref.ledger.total_billed
+    finally:
+        client.close()
+        server.stop()

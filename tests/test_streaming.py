@@ -28,7 +28,7 @@ from repro.serving.scheduler import (
     SchedulerConfig,
 )
 from repro.serving.streaming import StreamConfig, StreamingEngine, serve_stream
-from repro.serving.workload import Arrival, ArrivalProcess
+from repro.serving.workload import Arrival, ArrivalProcess, zipfian_indices
 
 QUERIES = list(BENCHMARK_QUERIES)
 REFS = list(REFERENCE_ANSWERS)
@@ -64,6 +64,63 @@ def test_trace_validation():
     # unsorted trace input is sorted on construction
     w = ArrivalProcess.from_trace([0.5, 0.1], QUERIES[:2])
     assert [a.time_s for a in w] == [0.1, 0.5]
+
+
+def test_zipfian_indices_deterministic_and_skewed():
+    idx = zipfian_indices(20, 500, s=1.1, seed=3)
+    assert idx.shape == (500,) and idx.min() >= 0 and idx.max() < 20
+    np.testing.assert_array_equal(idx, zipfian_indices(20, 500, s=1.1, seed=3))
+    assert not np.array_equal(idx, zipfian_indices(20, 500, s=1.1, seed=4))
+    # rank-frequency skew: the head query strictly dominates the tail
+    counts = np.bincount(idx, minlength=20)
+    assert counts[0] > counts[-1]
+    assert counts[0] > 500 / 20  # head above the uniform share
+    # s=0 is uniform: skew strictly increases head mass
+    flat = np.bincount(zipfian_indices(20, 500, s=0.0, seed=3), minlength=20)
+    assert counts[0] > flat[0]
+    assert zipfian_indices(5, 0).shape == (0,)
+
+
+def test_zipfian_indices_validation():
+    with pytest.raises(ValueError):
+        zipfian_indices(0, 10)
+    with pytest.raises(ValueError):
+        zipfian_indices(5, -1)
+    with pytest.raises(ValueError):
+        zipfian_indices(5, 10, s=-0.5)
+
+
+def test_zipfian_arrival_process_burst_and_poisson():
+    w = ArrivalProcess.zipfian(QUERIES, REFS, length=50, s=1.2, seed=5)
+    assert len(list(w)) == 50
+    assert all(a.time_s == 0.0 for a in w)  # rate_qps=None → burst
+    # repeats carry their query's own reference
+    ref_of = dict(zip(QUERIES, REFS))
+    assert all(a.reference == ref_of[a.query] for a in w)
+    # same repeat sequence, Poisson-timed
+    p = ArrivalProcess.zipfian(QUERIES, REFS, length=50, s=1.2, rate_qps=100.0, seed=5)
+    assert [a.query for a in p] == [a.query for a in w]
+    times = [a.time_s for a in p]
+    assert times == sorted(times) and times[0] > 0
+    with pytest.raises(ValueError):
+        ArrivalProcess.zipfian(QUERIES[:3], REFS[:2], length=10)
+
+
+def test_zipfian_stream_drives_cache_hits():
+    """The realistic cache workload: a skewed repeat stream against a small
+    LRU produces hits bounded away from both 0 and the degenerate 100%."""
+    from repro.retrieval import CachedBackend
+
+    eng = build_paper_engine(make_policy("router_default"))
+    cached = CachedBackend(eng.backends["dense"], capacity=8)
+    eng.backends["dense"] = cached
+    streamer = StreamingEngine(eng, config=StreamConfig(overlap=False))
+    result = streamer.run(ArrivalProcess.zipfian(QUERIES, REFS, length=60, s=1.3, seed=0))
+    assert len(result.responses) == 60
+    stats = cached.stats()
+    assert stats.hits > 0  # the head queries repeat into the LRU
+    assert stats.misses > 0  # cold start: every first occurrence misses
+    assert stats.evictions > 0  # capacity 8 is far below the distinct keys
 
 
 # --------------------------------------------------------------------------- #
