@@ -47,6 +47,18 @@ those numbers as telemetry; the gate reads hardware-independent signals:
     (*exact*, band 0: the counters are pure functions of the batch shape
     and shard count; the sweep's qps columns are telemetry only —
     docs/retrieval.md#device-true-sharding).
+  - ``scenarios.<name>.*`` — the workload-scenario suite's outcome
+    counters (*exact*, band 0). Every named scenario
+    (serving/scenarios.py) is seeded end to end and drains through the
+    serial streaming cell, so completed / rejected / degraded, the SLO
+    met-counts (``slo.ttft_met`` / ``slo.ttlt_met``), the zipf-cache
+    cell's cache hits/misses, the fault-degradation cell's
+    ``breaker_opens``, and the multi-tenant admission split
+    (``tenants.<tenant>.{completed,rejected}``) are bit-stable
+    run-to-run. Any drift means admission math, quota clipping, the SLO
+    accounting, cache keying, or the degradation ladder changed behaviour
+    — never noise. The cells' wall-clock qps/percentiles stay ungated
+    telemetry (docs/serving.md#scenario-suite).
 * ``BENCH_streaming.json`` (``gate`` section = the single-threaded
   burst-serial cell, whose counters are bit-stable run-to-run)
   - ``gate.completed`` — every request must still drain.
@@ -280,6 +292,76 @@ GATED_METRICS: dict[str, list[Metric]] = {
         Metric(
             "backends.gate.ivf_closures",
             "IVF compiled (k, n_probe) closures for the paper batch",
+            higher_is_better=False,
+            exact=True,
+        ),
+        # band 0 (exact): the scenario suite's outcome counters. Every
+        # scenario is seeded and serial (pipeline depth 1), so admission,
+        # quota clipping, SLO met-counts, cache behaviour, and the fault
+        # ladder are bit-stable; drift in any direction is a semantic
+        # change to the serving stack. qps/percentiles in the same cells
+        # stay ungated telemetry.
+        *[
+            Metric(
+                f"scenarios.{name}.{field}",
+                f"{name} scenario {desc}",
+                exact=True,
+            )
+            for name in ("zipf-cache", "burst-overload", "multi-tenant",
+                         "fault-degradation")
+            for field, desc in (
+                ("completed", "drained completions (seeded, deterministic)"),
+                ("rejected", "typed rejections (seeded, deterministic)"),
+                ("slo.ttft_met", "completions meeting the TTFT target"),
+                ("slo.ttlt_met", "completions meeting the TTLT target"),
+            )
+        ],
+        Metric(
+            "scenarios.zipf-cache.cache.hits",
+            "zipf-cache scenario backend-cache hits (seeded, deterministic)",
+            exact=True,
+        ),
+        Metric(
+            "scenarios.zipf-cache.cache.misses",
+            "zipf-cache scenario backend-cache misses (seeded, deterministic)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "scenarios.burst-overload.rejected_by_reason.intake_full",
+            "burst-overload typed intake_full rejections (exact overflow math)",
+            exact=True,
+        ),
+        Metric(
+            "scenarios.multi-tenant.tenants.flood.completed",
+            "multi-tenant flooding tenant's admitted completions (quota cap)",
+            exact=True,
+        ),
+        Metric(
+            "scenarios.multi-tenant.tenants.flood.rejected",
+            "multi-tenant flooding tenant's tenant_quota rejections",
+            exact=True,
+        ),
+        Metric(
+            "scenarios.multi-tenant.tenants.steady.completed",
+            "multi-tenant steady tenant fully served despite the flood",
+            exact=True,
+        ),
+        Metric(
+            "scenarios.multi-tenant.tenants.steady.rejected",
+            "multi-tenant steady tenant rejections (must stay 0)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "scenarios.fault-degradation.degraded",
+            "fault-degradation ladder-served answers (seeded schedule)",
+            higher_is_better=False,
+            exact=True,
+        ),
+        Metric(
+            "scenarios.fault-degradation.breaker_opens",
+            "fault-degradation circuit-breaker opens (seeded schedule)",
             higher_is_better=False,
             exact=True,
         ),

@@ -903,6 +903,53 @@ def bench_resilience(artifact_path: str | None = None) -> list[tuple[str, float,
     ]
 
 
+def bench_scenarios(artifact_path: str | None = None) -> list[tuple[str, float, str]]:
+    """Scenario-suite cells for ``BENCH_serving.json`` (gated, band 0).
+
+    Runs every named :data:`~repro.serving.scenarios.SCENARIOS` spec at
+    smoke scale (scale 1) and merges the per-scenario cells under
+    ``scenarios``. Each spec is seeded end to end and drains through the
+    serial streaming cell, so its outcome counters — ``completed`` /
+    ``rejected`` (with the typed reason split) / ``degraded`` / SLO
+    met-counts / cache hits / per-tenant admission splits /
+    ``breaker_opens`` — are bit-stable run-to-run and exact-gated in
+    benchmarks/check_regression.py. Wall-clock qps / percentiles in the
+    same cells stay ungated telemetry. The full-scale sweep (for latency
+    numbers that mean something) lives in ``benchmarks/scenario_sweep.py``
+    and nightly CI; this cell exists so the *semantics* of every scenario
+    (admission math, quota clipping, fault ladder) are pinned on every PR.
+    """
+    import json
+    import os
+
+    from repro.serving.scenarios import SCENARIOS, run_scenario
+
+    cells, out = {}, []
+    for name, spec in SCENARIOS.items():
+        r = run_scenario(spec)
+        cells[name] = r.cell
+        c = r.cell
+        n = c["n_arrivals"]
+        slo = c["slo"] or {}
+        out.append(
+            (
+                f"scenario_{name}",
+                c["wall_s"] / max(n, 1) * 1e6,
+                f"{c['completed']}/{n} done {c['rejected']} rej "
+                f"{c['degraded']} degraded slo_met={slo.get('ttlt_met')}",
+            )
+        )
+
+    if artifact_path and os.path.exists(artifact_path):
+        with open(artifact_path) as f:
+            artifact = json.load(f)
+        artifact["scenarios"] = cells
+        with open(artifact_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def main() -> None:
     """Standalone entry: ``python -m benchmarks.micro [--smoke] [--out DIR]``.
 
@@ -931,6 +978,7 @@ def main() -> None:
          lambda: bench_backends(serving_artifact),
          lambda: bench_cache_sharding(serving_artifact),
          lambda: bench_resilience(serving_artifact),
+         lambda: bench_scenarios(serving_artifact),
          lambda: bench_sharding_scaling(serving_artifact),
          lambda: bench_streaming(streaming_artifact)]
         if args.smoke
@@ -940,6 +988,7 @@ def main() -> None:
               lambda: bench_backends(serving_artifact),
               lambda: bench_cache_sharding(serving_artifact),
               lambda: bench_resilience(serving_artifact),
+              lambda: bench_scenarios(serving_artifact),
               lambda: bench_sharding_scaling(serving_artifact, million=True),
               lambda: bench_streaming(streaming_artifact)]
     )

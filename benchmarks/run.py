@@ -38,6 +38,7 @@ def main() -> None:
             bench_resilience,
             bench_retrieval,
             bench_routing,
+            bench_scenarios,
             bench_sharding_scaling,
             bench_streaming,
         )
@@ -54,6 +55,7 @@ def main() -> None:
             lambda: bench_backends(serving_artifact),
             lambda: bench_cache_sharding(serving_artifact),
             lambda: bench_resilience(serving_artifact),
+            lambda: bench_scenarios(serving_artifact),
             lambda: bench_sharding_scaling(serving_artifact, million=True),
             lambda: bench_streaming(streaming_artifact),
         )

@@ -1,0 +1,88 @@
+"""Scenario-suite sweep: run named serving scenarios, emit BENCH cells.
+
+    PYTHONPATH=src python -m benchmarks.scenario_sweep                 # all, scale 1
+    PYTHONPATH=src python -m benchmarks.scenario_sweep \
+        --scenario zipf-cache --scenario burst-overload --scale 10 \
+        --out results-nightly
+
+Each run drains one :class:`~repro.serving.scenarios.ScenarioSpec` through
+the streaming engine and prints its JSON cell. ``--out DIR`` merges the
+cells into ``DIR/BENCH_serving.json`` under ``scenarios`` (creating the
+artifact if absent) — the same layout ``benchmarks/micro.py`` commits, so
+a nightly sweep's artifact diffs cleanly against the smoke baseline.
+
+``--scale N`` multiplies every stream length and intake cap via
+:meth:`ScenarioSpec.scaled` — the load-testing path (scale 10–1000 turns
+the smoke cells into the sustained workloads the ROADMAP's "millions of
+users" line needs). CI only exact-gates the scale-1 counters; scaled cells
+are telemetry, labeled with their scale so the gate can never confuse the
+two.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    """CLI entry: parse scenario selection, run, print + merge cells."""
+    from repro.serving.scenarios import SCENARIOS, get_scenario, run_scenario
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--scenario", action="append", default=[], metavar="NAME",
+        help="scenario to run (repeatable; default: the whole suite). "
+        f"Known: {', '.join(sorted(SCENARIOS))}",
+    )
+    ap.add_argument(
+        "--scale", type=float, default=1.0, metavar="X",
+        help="multiply stream lengths and intake caps by X (default 1 = "
+        "the smoke-scale cells CI gates; gated counters only hold at 1)",
+    )
+    ap.add_argument(
+        "--out", default=None, metavar="DIR",
+        help="merge cells into DIR/BENCH_serving.json under 'scenarios' "
+        "(created if absent)",
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="list scenarios and exit",
+    )
+    args = ap.parse_args()
+
+    if args.list:
+        for name, spec in sorted(SCENARIOS.items()):
+            print(f"{name}: {spec.description}")
+        return
+
+    names = args.scenario or sorted(SCENARIOS)
+    try:
+        specs = {name: get_scenario(name) for name in names}
+    except KeyError as err:
+        sys.exit(str(err.args[0]))
+
+    cells = {}
+    for name, spec in specs.items():
+        result = run_scenario(spec, scale=args.scale)
+        cells[name] = result.cell
+        print(f"== {name} (scale {args.scale:g}) ==")
+        print(json.dumps(result.cell, indent=2))
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, "BENCH_serving.json")
+        artifact = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                artifact = json.load(f)
+        artifact.setdefault("scenarios", {}).update(cells)
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+        print(f"# merged {len(cells)} scenario cell(s) into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -269,6 +269,19 @@ def main() -> None:
         "rejection instead of burning decode slots",
     )
     ap.add_argument(
+        "--scenario", default=None, metavar="NAME",
+        help="run a named workload scenario from the declarative suite "
+        "(serving/scenarios.py) instead of the query file: corpus, stream, "
+        "engine stack, and SLO targets all come from the seeded spec; "
+        "prints the scenario's JSON cell and writes telemetry to --out. "
+        "Mutually exclusive with --stream/--docs/--questions",
+    )
+    ap.add_argument(
+        "--scenario-scale", type=float, default=1.0, metavar="X",
+        help="scale the scenario's stream lengths and intake caps by X "
+        "(--scenario only; the gated counters only hold at 1)",
+    )
+    ap.add_argument(
         "--stream", action="store_true",
         help="serve from a live Poisson arrival queue (retrieval/decode overlap) "
         "instead of one pre-collected batch",
@@ -294,6 +307,28 @@ def main() -> None:
                     "default: free-running)")
     ap.add_argument("--seed", type=int, default=0, help="arrival-trace seed (--stream)")
     args = ap.parse_args()
+
+    if args.scenario is not None:
+        import json
+
+        if args.stream or args.docs or args.questions:
+            ap.error("--scenario is mutually exclusive with --stream/--docs/--questions")
+        from repro.serving.scenarios import SCENARIOS, run_scenario
+
+        spec = SCENARIOS.get(args.scenario)
+        if spec is None:
+            ap.error(
+                f"unknown scenario {args.scenario!r}; "
+                f"available: {', '.join(sorted(SCENARIOS))}"
+            )
+        result = run_scenario(spec, scale=args.scenario_scale)
+        print(json.dumps({args.scenario: result.cell}, indent=2))
+        # telemetry CSV comes from the scenario's own engine — the records
+        # behind the cell's completed/degraded counters
+        telemetry = result.engine.telemetry
+        telemetry.to_csv(args.out)
+        print(f"wrote {len(telemetry.records)} records to {args.out}")
+        return
 
     from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
 

@@ -1,0 +1,539 @@
+"""Declarative workload scenarios: corpus × stream × engine stack × SLOs.
+
+Every serving claim upstream of this module — cache hit rates, typed
+backpressure, degradation ladders — is only as meaningful as the workload
+that produced it, and the paper benchmark is 28 queries. This module turns
+"workload" into a first-class, declarative object: a :class:`ScenarioSpec`
+names a parameterized corpus (the paper corpus or a seeded synthetic one,
+10^4–10^6 docs), a query stream (Zipfian repeats over a template-generated
+pool, laid on burst / Poisson / diurnal / bursty arrival traces, optionally
+split across tenants), an engine stack (cache, shards, fault profiles,
+resilience — the same plain-dict options ``serve.py`` parses), and SLO
+targets. :func:`run_scenario` materializes all of it, drains the stream
+through :class:`~repro.serving.streaming.StreamingEngine`, and returns the
+result plus a JSON benchmark cell.
+
+Determinism contract: every named scenario in :data:`SCENARIOS` is seeded
+end to end and runs the serial (``pipeline_depth=1``) streaming cell, so
+its outcome counters — completed / rejected (by reason) / degraded / cache
+hits / SLO met-counts / per-tenant splits — are bit-stable run-to-run and
+exact-gated (band 0) in ``benchmarks/check_regression.py``. Wall-clock
+fields ride along as telemetry only. Scale a scenario up for load testing
+with :meth:`ScenarioSpec.scaled` (the sweep CLI's ``--scale``); the
+counters then describe the scaled run, which is why CI gates only the
+scale-1 cells.
+
+Entry points: ``python -m repro.launch.serve --scenario NAME`` for one
+scenario, ``python -m benchmarks.scenario_sweep`` for the suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Sequence
+
+import numpy as np
+
+from repro.serving.workload import ArrivalProcess
+
+# -- spec vocabulary ---------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """Latency targets in milliseconds, measured arrival → first/last token."""
+
+    ttft_ms: float = 60_000.0
+    ttlt_ms: float = 60_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusSpec:
+    """What the engine retrieves over.
+
+    ``kind="paper"`` is the real benchmark corpus (quality is meaningful,
+    scale is tiny); ``kind="synthetic"`` is a seeded
+    :func:`~repro.retrieval.synthetic.synthetic_dense_index` corpus of
+    ``n_docs`` documents (quality is meaningless, systems behaviour —
+    caching, sharding, latency — is real; 10^4 for smoke cells, 10^6 for
+    the full harness).
+    """
+
+    kind: str = "paper"  # "paper" | "synthetic"
+    n_docs: int = 0
+    dim: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("paper", "synthetic"):
+            raise ValueError(f"unknown corpus kind {self.kind!r}")
+        if self.kind == "synthetic" and self.n_docs < 1:
+            raise ValueError("synthetic corpus needs n_docs >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPoolSpec:
+    """The distinct queries a stream repeats over.
+
+    ``kind="template"`` generates ``n_queries`` deterministic distinct
+    queries from templates × topics × seeded document ids
+    (:func:`template_query_pool`) — the cache-realism pool, arbitrarily
+    wide. ``kind="paper"`` uses the first ``n_queries`` paper benchmark
+    queries with their reference answers (utility telemetry stays
+    meaningful).
+    """
+
+    kind: str = "template"  # "template" | "paper"
+    n_queries: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("template", "paper"):
+            raise ValueError(f"unknown pool kind {self.kind!r}")
+        if self.n_queries < 1:
+            raise ValueError("pool needs n_queries >= 1")
+
+
+_TEMPLATES = (
+    "what does the report say about {topic} in document {doc}",
+    "summarize the findings on {topic} from record {doc}",
+    "compare {topic} figures across filing {doc}",
+    "list the risks tied to {topic} in section {doc}",
+    "when was {topic} last updated in entry {doc}",
+)
+
+_TOPICS = (
+    "retrieval depth", "query routing", "token budgets", "cache policy",
+    "shard placement", "tail latency", "admission control", "fault recovery",
+)
+
+
+def template_query_pool(spec: QueryPoolSpec) -> tuple[list[str], list[str | None]]:
+    """Deterministic distinct query strings (and None references).
+
+    Queries are drawn from template × topic grids with seeded, collision-free
+    document ids, so two pools with different seeds share no strings — the
+    property the multi-tenant scenarios use for per-tenant catalogs (each
+    tenant's pool keys its own cache entries and routing telemetry).
+    """
+    rng = np.random.default_rng(spec.seed)
+    doc_ids = rng.choice(1_000_000, size=spec.n_queries, replace=False)
+    queries = [
+        _TEMPLATES[i % len(_TEMPLATES)].format(
+            topic=_TOPICS[(i // len(_TEMPLATES)) % len(_TOPICS)], doc=int(doc_ids[i])
+        )
+        for i in range(spec.n_queries)
+    ]
+    return queries, [None] * len(queries)
+
+
+def resolve_pool(spec: QueryPoolSpec) -> tuple[list[str], list[str | None]]:
+    """Materialize a pool spec into aligned (queries, references) lists."""
+    if spec.kind == "paper":
+        from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+
+        n = min(spec.n_queries, len(BENCHMARK_QUERIES))
+        return list(BENCHMARK_QUERIES[:n]), list(REFERENCE_ANSWERS[:n])
+    return template_query_pool(spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """How arrivals are laid in time and which pool entries they repeat.
+
+    Queries are always drawn as a Zipfian repeat sequence over the pool
+    (``s=0`` ≈ uniform, ``s≈1`` the classic web-query skew); ``arrivals``
+    picks the timing shape: ``"burst"`` (all at t=0 — the deterministic
+    gate shape), ``"poisson"`` at ``rate_qps``, ``"diurnal"``
+    (sinusoidal base↔peak over ``period_s``), or ``"bursty"``
+    (alternating base/burst phases of ``phase_s``).
+    """
+
+    arrivals: str = "burst"  # "burst" | "poisson" | "diurnal" | "bursty"
+    length: int = 64
+    s: float = 1.1
+    rate_qps: float = 50.0
+    base_qps: float = 10.0
+    peak_qps: float = 100.0
+    period_s: float = 2.0
+    phase_s: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.arrivals not in ("burst", "poisson", "diurnal", "bursty"):
+            raise ValueError(f"unknown arrival shape {self.arrivals!r}")
+        if self.length < 1:
+            raise ValueError("stream needs length >= 1")
+
+    def build(
+        self,
+        queries: Sequence[str],
+        references: Sequence[str | None],
+        *,
+        tenant: str | None = None,
+    ) -> ArrivalProcess:
+        """Materialize the arrival process over a resolved query pool."""
+        if self.arrivals == "burst":
+            return ArrivalProcess.zipfian(
+                queries, references, length=self.length, s=self.s,
+                seed=self.seed, tenant=tenant,
+            )
+        if self.arrivals == "poisson":
+            return ArrivalProcess.zipfian(
+                queries, references, length=self.length, s=self.s,
+                rate_qps=self.rate_qps, seed=self.seed, tenant=tenant,
+            )
+        from repro.serving.workload import zipfian_indices
+
+        idx = zipfian_indices(len(queries), self.length, s=self.s, seed=self.seed)
+        qs = [queries[i] for i in idx]
+        rs = [references[i] for i in idx]
+        if self.arrivals == "diurnal":
+            return ArrivalProcess.diurnal(
+                qs, rs, length=self.length, base_qps=self.base_qps,
+                peak_qps=self.peak_qps, period_s=self.period_s,
+                seed=self.seed, tenant=tenant,
+            )
+        return ArrivalProcess.bursty(
+            qs, rs, length=self.length, base_qps=self.base_qps,
+            burst_qps=self.peak_qps, phase_s=self.phase_s,
+            seed=self.seed, tenant=tenant,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's slice of a multi-tenant mix: its own pool and stream.
+
+    Per-tenant "catalog" here means the query pool (seeded per tenant, so
+    tenants share no query strings → no cross-tenant cache hits) and the
+    stream's skew/shape — the weight vector of the mix is the relative
+    stream lengths/rates.
+    """
+
+    name: str
+    pool: QueryPoolSpec
+    stream: StreamSpec
+
+
+# -- the scenario itself -----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A named, seeded, declarative serving scenario.
+
+    Composes a corpus, a query stream (or per-tenant streams), an engine
+    stack (the same plain options ``serve.py`` exposes as flags — built via
+    ``repro.launch.serve.build_engine_from_opts`` so a scenario means
+    exactly what the CLI means, and stays process-executor-safe), streaming
+    knobs, and SLO targets. All fields are picklable primitives.
+    """
+
+    name: str
+    description: str = ""
+    corpus: CorpusSpec = CorpusSpec()
+    pool: QueryPoolSpec = QueryPoolSpec()
+    stream: StreamSpec = StreamSpec()
+    # multi-tenant mixes: when non-empty, `pool`/`stream` are ignored and
+    # the workload is the stable time-sorted merge of per-tenant streams
+    tenants: tuple[TenantSpec, ...] = ()
+    # engine stack (serve.py option names)
+    catalog: str = "paper"
+    policy: str = "router_default"
+    epsilon: float = 0.0
+    cache_size: int = 0
+    shards: int = 1
+    fault_profiles: tuple[str, ...] = ()  # FaultProfile.parse "NAME:k=v,..." strings
+    retrieve_timeout_ms: float | None = None
+    max_retries: int | None = None
+    # streaming knobs (StreamConfig)
+    microbatch_max: int = 16
+    max_intake: int = 1024
+    max_intake_per_tenant: int | None = None
+    pipeline_depth: int = 1
+    retrieval_workers: int = 1
+    executor: str = "thread"
+    request_deadline_ms: float | None = None
+    # scheduler shape
+    max_batch_slots: int = 8
+    n_pages: int = 1024
+    page_size: int = 16
+    slo: SLOTarget = SLOTarget()
+
+    def engine_opts(self) -> dict:
+        """The plain-dict option bag ``build_engine_from_opts`` consumes."""
+        synthetic = self.corpus.kind == "synthetic"
+        return {
+            "docs": None,
+            "policy": self.policy,
+            "catalog": self.catalog,
+            "epsilon": self.epsilon,
+            "min_confidence": 0.0,
+            "min_confidence_backend": [],
+            "max_cost_tokens": None,
+            "cache_size": self.cache_size,
+            "shards": self.shards,
+            "shard_backends": "dense",
+            "shard_execution": "threads",
+            "remote_backend": [],
+            "synthetic_docs": self.corpus.n_docs if synthetic else 0,
+            "synthetic_dim": self.corpus.dim,
+            "synthetic_seed": self.corpus.seed,
+            "fault_profile": list(self.fault_profiles),
+            "retrieve_timeout_ms": self.retrieve_timeout_ms,
+            "max_retries": self.max_retries,
+        }
+
+    def build_workload(self) -> ArrivalProcess:
+        """Materialize the (possibly multi-tenant) arrival process."""
+        if not self.tenants:
+            queries, refs = resolve_pool(self.pool)
+            return self.stream.build(queries, refs)
+        parts = []
+        for t in self.tenants:
+            queries, refs = resolve_pool(t.pool)
+            parts.append(t.stream.build(queries, refs, tenant=t.name))
+        return ArrivalProcess.merge(parts)
+
+    def stream_config(self):
+        """The :class:`~repro.serving.streaming.StreamConfig` for this run."""
+        from repro.serving.streaming import StreamConfig
+
+        return StreamConfig(
+            microbatch_max=self.microbatch_max,
+            max_intake=self.max_intake,
+            pipeline_depth=self.pipeline_depth,
+            retrieval_workers=self.retrieval_workers,
+            overlap=self.pipeline_depth > 1,
+            executor=self.executor,
+            request_deadline_ms=self.request_deadline_ms,
+            slo_ttft_ms=self.slo.ttft_ms,
+            slo_ttlt_ms=self.slo.ttlt_ms,
+            max_intake_per_tenant=self.max_intake_per_tenant,
+        )
+
+    def scaled(self, factor: float) -> "ScenarioSpec":
+        """Scale the offered workload (stream lengths and intake caps).
+
+        The corpus and engine stack stay fixed — scaling changes how hard
+        the same deployment is hit, not what it serves. Admission caps
+        scale with the load so overload scenarios keep their *shape*
+        (rejection fractions), though the exact gated counters only hold at
+        factor 1.
+        """
+        if factor <= 0:
+            raise ValueError(f"scale factor must be positive, got {factor}")
+
+        def n(x: int) -> int:
+            return max(1, int(round(x * factor)))
+
+        def scale_stream(st: StreamSpec) -> StreamSpec:
+            return dataclasses.replace(st, length=n(st.length))
+
+        return dataclasses.replace(
+            self,
+            stream=scale_stream(self.stream),
+            tenants=tuple(
+                dataclasses.replace(t, stream=scale_stream(t.stream))
+                for t in self.tenants
+            ),
+            max_intake=n(self.max_intake),
+            max_intake_per_tenant=(
+                None if self.max_intake_per_tenant is None
+                else n(self.max_intake_per_tenant)
+            ),
+        )
+
+
+# -- running -----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """One materialized scenario run: spec, stream result, engine, JSON cell."""
+
+    spec: ScenarioSpec
+    result: "object"  # StreamResult
+    cell: dict
+    engine: "object" = None  # the RAGEngine that served it (telemetry source)
+
+
+def build_scenario_engine(spec: ScenarioSpec):
+    """Build the scenario's engine through the CLI's own builder."""
+    from repro.launch.serve import build_engine_from_opts
+
+    return build_engine_from_opts(spec.engine_opts())
+
+
+def run_scenario(spec: ScenarioSpec, *, scale: float = 1.0) -> ScenarioResult:
+    """Materialize and drain one scenario; returns result + benchmark cell."""
+    import functools
+    import time
+
+    from repro.launch.serve import build_engine_from_opts
+    from repro.serving.scheduler import ContinuousBatchScheduler, SchedulerConfig
+    from repro.serving.streaming import StreamingEngine
+
+    if scale != 1.0:
+        spec = spec.scaled(scale)
+    opts = spec.engine_opts()
+    engine = build_engine_from_opts(opts)
+    workload = spec.build_workload()
+    scheduler = ContinuousBatchScheduler(
+        SchedulerConfig(
+            max_batch_slots=spec.max_batch_slots,
+            n_pages=spec.n_pages,
+            page_size=spec.page_size,
+        ),
+        catalog=engine.catalog,
+    )
+    streamer = StreamingEngine(
+        engine,
+        scheduler=scheduler,
+        config=spec.stream_config(),
+        engine_factory=functools.partial(build_engine_from_opts, opts),
+    )
+    t0 = time.perf_counter()
+    result = streamer.run(workload)
+    wall = time.perf_counter() - t0
+    return ScenarioResult(
+        spec=spec,
+        result=result,
+        cell=scenario_cell(spec, result, wall, scale),
+        engine=engine,
+    )
+
+
+def scenario_cell(spec: ScenarioSpec, result, wall_s: float, scale: float) -> dict:
+    """The BENCH_serving.json cell for one scenario run.
+
+    Counter fields (completed / rejected / rejected_by_reason / degraded /
+    cache / slo met-counts / per-tenant splits / breaker_opens) are
+    deterministic on the serial seeded scale-1 runs and exact-gated;
+    wall-clock fields (wall_s, throughput, percentiles) are telemetry.
+    """
+    s = result.summary()
+    degraded = sum(1 for r in result.records if r.degraded)
+    by_reason = Counter(r.reason for r in result.rejections)
+    cell: dict = {
+        "description": spec.description,
+        "scale": scale,
+        "n_arrivals": spec.stream.length if not spec.tenants else sum(
+            t.stream.length for t in spec.tenants
+        ),
+        "completed": s["completed"],
+        "rejected": s["rejected"],
+        "rejected_by_reason": dict(sorted(by_reason.items())),
+        "degraded": degraded,
+        "slo": s.get("slo"),
+        "wall_s": wall_s,
+        "throughput_qps": s["throughput_qps"],
+        "p99_ttft_ms": s["p99_ttft_ms"],
+        "p99_ttlt_ms": s["p99_ttlt_ms"],
+        "max_intake_depth": s["max_intake_depth"],
+        "stage_batches": s["stage_batches"],
+        "retrieve_calls": s["retrieve_calls"],
+    }
+    if s.get("backend_cache"):
+        # keyed per wrapped backend; the gate pins the dense counters
+        cell["cache"] = s["backend_cache"].get("dense", {})
+    if s["resilience"].get("breaker_opens") is not None:
+        cell["breaker_opens"] = s["resilience"]["breaker_opens"]
+    if "tenants" in s:
+        cell["tenants"] = {
+            name: {
+                "completed": t["completed"],
+                "rejected": t["rejected"],
+                "slo": t.get("slo"),
+                "p99_ttlt_ms": t["p99_ttlt_ms"],
+            }
+            for name, t in s["tenants"].items()
+        }
+    return cell
+
+
+# -- the named suite ---------------------------------------------------------
+
+SCENARIOS: dict[str, ScenarioSpec] = {
+    spec.name: spec
+    for spec in (
+        ScenarioSpec(
+            name="zipf-cache",
+            description=(
+                "Zipfian repeat stream over a template pool on a 20k-doc "
+                "synthetic corpus through a 32-entry backend cache — hit "
+                "rate as a function of (skew, pool, capacity)"
+            ),
+            corpus=CorpusSpec(kind="synthetic", n_docs=20_000, dim=64, seed=0),
+            pool=QueryPoolSpec(kind="template", n_queries=64, seed=0),
+            stream=StreamSpec(arrivals="burst", length=224, s=1.1, seed=0),
+            cache_size=32,
+            max_intake=512,
+        ),
+        ScenarioSpec(
+            name="burst-overload",
+            description=(
+                "96-query burst into a 64-slot intake queue — exactly 32 "
+                "typed intake_full rejections, 64 completions, SLOs held "
+                "for everything admitted"
+            ),
+            corpus=CorpusSpec(kind="synthetic", n_docs=10_000, dim=64, seed=1),
+            pool=QueryPoolSpec(kind="template", n_queries=48, seed=1),
+            stream=StreamSpec(arrivals="burst", length=96, s=0.9, seed=1),
+            max_intake=64,
+        ),
+        ScenarioSpec(
+            name="multi-tenant",
+            description=(
+                "A flooding tenant (80-query burst) and a steady tenant "
+                "(12 queries) behind a 32-per-tenant intake quota — the "
+                "flood is clipped with typed tenant_quota rejections and "
+                "cannot starve the steady tenant's admission or SLOs"
+            ),
+            corpus=CorpusSpec(kind="synthetic", n_docs=10_000, dim=64, seed=2),
+            tenants=(
+                TenantSpec(
+                    name="flood",
+                    pool=QueryPoolSpec(kind="template", n_queries=40, seed=11),
+                    stream=StreamSpec(arrivals="burst", length=80, s=1.0, seed=11),
+                ),
+                TenantSpec(
+                    name="steady",
+                    pool=QueryPoolSpec(kind="template", n_queries=12, seed=12),
+                    stream=StreamSpec(arrivals="burst", length=12, s=0.0, seed=12),
+                ),
+            ),
+            max_intake=512,
+            max_intake_per_tenant=32,
+        ),
+        ScenarioSpec(
+            name="fault-degradation",
+            description=(
+                "Zipf repeats of the paper benchmark against a dense "
+                "backend with a seeded fault schedule (30% failures, "
+                "periodic stalls) under timeout/retry/breaker — the "
+                "degradation ladder answers what the broken backend can't"
+            ),
+            corpus=CorpusSpec(kind="paper"),
+            pool=QueryPoolSpec(kind="paper", n_queries=28, seed=0),
+            stream=StreamSpec(arrivals="burst", length=42, s=1.0, seed=3),
+            fault_profiles=(
+                "dense:failure_rate=0.3,stall_every=6,stall_ms=600,seed=2",
+            ),
+            retrieve_timeout_ms=200.0,
+            max_retries=2,
+        ),
+    )
+}
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    """Look up a named scenario; error lists the registry on a miss."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {', '.join(sorted(SCENARIOS))}"
+        ) from None

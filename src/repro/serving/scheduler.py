@@ -75,7 +75,9 @@ class Rejection:
     request_id: int
     query: str
     bundle_name: str
-    reason: str  # "queue_full" | "oversized" | "deadline_exceeded"
+    # scheduler-side: "queue_full" | "oversized" | "deadline_exceeded";
+    # streaming front door adds "intake_full" | "tenant_quota"
+    reason: str
     queue_depth: int
     step: int
 

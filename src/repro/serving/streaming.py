@@ -77,6 +77,18 @@ class StreamConfig:
     # summary()["resilience"]["stalled_workers"].
     request_deadline_ms: float | None = None
     worker_timeout_s: float = 60.0
+    # SLO targets in milliseconds, measured arrival → first/last token.
+    # When either is set, summary() emits an "slo" block with integer
+    # met-counts (gateable) and attainment fractions over completed
+    # requests. None = no target, no block.
+    slo_ttft_ms: float | None = None
+    slo_ttlt_ms: float | None = None
+    # Per-tenant admission quota: cap on any one tenant's occupancy of the
+    # intake queue. Arrivals from a tenant at its cap are refused with a
+    # typed `tenant_quota` rejection, so a flooding tenant can only fill
+    # its own slice of the front door — never starve the other tenants'
+    # admission. None = no per-tenant cap (single-tenant behavior).
+    max_intake_per_tenant: int | None = None
 
     def __post_init__(self):
         if self.executor not in ("thread", "process"):
@@ -106,6 +118,20 @@ class RequestTiming:
     @property
     def ttlt_s(self) -> float | None:
         return None if self.last_token_s is None else self.last_token_s - self.arrival_s
+
+
+def _percentile_ms(vals_s: Sequence[float], q: float) -> float:
+    """``q``-th percentile of latencies, seconds → ms, or NaN when empty.
+
+    The interpolation method is pinned to ``"linear"`` (numpy's historical
+    default) so the SLO cells can't drift if numpy ever changes its
+    default — percentile values feed benchmark artifacts diffed across
+    environments.
+    """
+    if not vals_s:
+        return float("nan")
+    arr = np.asarray(vals_s, dtype=np.float64) * 1e3
+    return float(np.percentile(arr, q, method="linear"))
 
 
 @dataclasses.dataclass
@@ -139,6 +165,20 @@ class StreamResult:
     # deterministic worker counters the CI gate's process cell pins
     executor: str = "thread"
     process_workers: dict | None = None
+    # SLO targets the run was configured with (StreamConfig.slo_*) — when
+    # either is set, summary() emits the "slo" attainment block.
+    slo_ttft_ms: float | None = None
+    slo_ttlt_ms: float | None = None
+    # High-water mark of the intake deque over the whole run — the bound
+    # the soak test asserts against StreamConfig.max_intake.
+    max_intake_depth: int = 0
+    # Tenant attribution: request_id → tenant label for admitted requests,
+    # and a list aligned 1:1 with `rejections` labeling each refusal.
+    # Labels default to "default" for untagged arrivals; the summary's
+    # "tenants" block only appears when the workload was actually tagged.
+    tenant_by_request: dict[int, str] = dataclasses.field(default_factory=dict)
+    rejection_tenants: list[str] = dataclasses.field(default_factory=list)
+    tenanted: bool = False
 
     @property
     def records(self) -> list:
@@ -153,7 +193,36 @@ class StreamResult:
         vals = [
             getattr(t, attr) for t in self.timings.values() if getattr(t, attr) is not None
         ]
-        return float(np.percentile(np.asarray(vals) * 1e3, q)) if vals else float("nan")
+        return _percentile_ms(vals, q)
+
+    # -- SLO attainment ------------------------------------------------------
+    def _slo_block(self, timings: Sequence[RequestTiming]) -> dict:
+        """Attainment over *completed* requests in ``timings``: integer
+        met-counts (exact-gateable) plus fractions, ``None`` fraction when
+        nothing completed (0/0 must not silently read as perfect or zero
+        attainment)."""
+        done = [t for t in timings if t.last_token_s is not None]
+
+        def met(attr: str, target_ms: float | None) -> int:
+            if target_ms is None:
+                return len(done)  # no target: every completion vacuously meets it
+            return sum(
+                1
+                for t in done
+                if getattr(t, attr) is not None and getattr(t, attr) * 1e3 <= target_ms
+            )
+
+        ttft_met = met("ttft_s", self.slo_ttft_ms)
+        ttlt_met = met("ttlt_s", self.slo_ttlt_ms)
+        n = len(done)
+        return {
+            "ttft_target_ms": self.slo_ttft_ms,
+            "ttlt_target_ms": self.slo_ttlt_ms,
+            "ttft_met": ttft_met,
+            "ttlt_met": ttlt_met,
+            "ttft_attainment": (ttft_met / n) if n else None,
+            "ttlt_attainment": (ttlt_met / n) if n else None,
+        }
 
     def summary(self) -> dict:
         """JSON-safe run summary: non-finite values (inf offered load on
@@ -176,8 +245,11 @@ class StreamResult:
             "throughput_qps": fin(completed / self.wall_s) if self.wall_s > 0 else None,
             "p50_ttft_ms": fin(self.percentile_ms("ttft_s", 50)),
             "p95_ttft_ms": fin(self.percentile_ms("ttft_s", 95)),
+            "p99_ttft_ms": fin(self.percentile_ms("ttft_s", 99)),
             "p50_ttlt_ms": fin(self.percentile_ms("ttlt_s", 50)),
             "p95_ttlt_ms": fin(self.percentile_ms("ttlt_s", 95)),
+            "p99_ttlt_ms": fin(self.percentile_ms("ttlt_s", 99)),
+            "max_intake_depth": self.max_intake_depth,
             "max_queue_depth": max((m["queued"] for m in self.step_history), default=0),
             "decode_steps": len(self.step_history),
             "stage_batches": self.stage_batches,
@@ -194,6 +266,34 @@ class StreamResult:
         }
         if self.process_workers is not None:
             out["process_workers"] = dict(self.process_workers)
+        if self.slo_ttft_ms is not None or self.slo_ttlt_ms is not None:
+            out["slo"] = self._slo_block(list(self.timings.values()))
+        if self.tenanted:
+            labels = sorted(
+                set(self.tenant_by_request.values()) | set(self.rejection_tenants)
+            )
+            tenants: dict[str, dict] = {}
+            for label in labels:
+                tms = [
+                    self.timings[rid]
+                    for rid, ten in self.tenant_by_request.items()
+                    if ten == label and rid in self.timings
+                ]
+                done = [t for t in tms if t.last_token_s is not None]
+                cell = {
+                    "completed": len(done),
+                    "rejected": sum(1 for t in self.rejection_tenants if t == label),
+                    "p99_ttft_ms": fin(
+                        _percentile_ms([t.ttft_s for t in done if t.ttft_s is not None], 99)
+                    ),
+                    "p99_ttlt_ms": fin(
+                        _percentile_ms([t.ttlt_s for t in done if t.ttlt_s is not None], 99)
+                    ),
+                }
+                if self.slo_ttft_ms is not None or self.slo_ttlt_ms is not None:
+                    cell["slo"] = self._slo_block(tms)
+                tenants[label] = cell
+            out["tenants"] = tenants
         return out
 
 
@@ -254,9 +354,14 @@ class StreamingEngine:
         intake: deque[Arrival] = deque()
         responses: list[EngineResponse] = []
         rejections: list[Rejection] = []
+        rejection_tenants: list[str] = []
+        tenant_by_request: dict[int, str] = {}
         timings: dict[int, RequestTiming] = {}
         step_history: list[dict] = []
         stalled_seen: set[str] = set()
+        tenanted = any(a.tenant is not None for a in arrivals)
+        intake_by_tenant: dict[str, int] = {}
+        max_intake_depth = 0
         ev = 0
         t0 = time.perf_counter()
 
@@ -266,7 +371,16 @@ class StreamingEngine:
         def harvest() -> None:
             while (done := pipeline.poll()) is not None:
                 batch, stage_responses = done
-                self._admit(batch, stage_responses, responses, rejections, timings, clock())
+                self._admit(
+                    batch,
+                    stage_responses,
+                    responses,
+                    rejections,
+                    rejection_tenants,
+                    tenant_by_request,
+                    timings,
+                    clock(),
+                )
 
         try:
             while True:
@@ -275,6 +389,7 @@ class StreamingEngine:
                 while ev < len(arrivals) and arrivals[ev].time_s <= now:
                     a = arrivals[ev]
                     ev += 1
+                    label = a.tenant or "default"
                     if len(intake) >= cfg.max_intake:
                         rejections.append(
                             Rejection(
@@ -286,8 +401,29 @@ class StreamingEngine:
                                 step=sched.step_count,
                             )
                         )
+                        rejection_tenants.append(label)
+                        continue
+                    if (
+                        cfg.max_intake_per_tenant is not None
+                        and intake_by_tenant.get(label, 0) >= cfg.max_intake_per_tenant
+                    ):
+                        rejections.append(
+                            Rejection(
+                                request_id=-1,
+                                query=a.query,
+                                bundle_name="",
+                                reason="tenant_quota",
+                                queue_depth=intake_by_tenant.get(label, 0),
+                                step=sched.step_count,
+                            )
+                        )
+                        rejection_tenants.append(label)
                         continue
                     intake.append(a)
+                    if cfg.max_intake_per_tenant is not None:
+                        intake_by_tenant[label] = intake_by_tenant.get(label, 0) + 1
+                    if len(intake) > max_intake_depth:
+                        max_intake_depth = len(intake)
 
                 # (2) harvest finished micro-batches → finalize + admission
                 harvest()
@@ -296,6 +432,9 @@ class StreamingEngine:
                 # (3) launch the next routing micro-batch if there's room
                 if intake and pipeline.can_submit():
                     batch = [intake.popleft() for _ in range(min(cfg.microbatch_max, len(intake)))]
+                    if cfg.max_intake_per_tenant is not None:
+                        for a in batch:
+                            intake_by_tenant[a.tenant or "default"] -= 1
                     pipeline.submit(
                         [a.query for a in batch], [a.reference for a in batch], tag=batch
                     )
@@ -369,6 +508,12 @@ class StreamingEngine:
             stalled_workers=sorted(stalled_seen),
             executor=pipeline.executor,
             process_workers=pipeline.process_stats(),
+            slo_ttft_ms=cfg.slo_ttft_ms,
+            slo_ttlt_ms=cfg.slo_ttlt_ms,
+            max_intake_depth=max_intake_depth,
+            tenant_by_request=tenant_by_request,
+            rejection_tenants=rejection_tenants,
+            tenanted=tenanted,
         )
 
     # ------------------------------------------------------------------ #
@@ -378,6 +523,8 @@ class StreamingEngine:
         stage_responses: list[EngineResponse],
         responses: list[EngineResponse],
         rejections: list[Rejection],
+        rejection_tenants: list[str],
+        tenant_by_request: dict[int, str],
         timings: dict[int, RequestTiming],
         now: float,
     ) -> None:
@@ -387,6 +534,7 @@ class StreamingEngine:
         responses.extend(stage_responses)
         deadline_ms = self.config.request_deadline_ms
         for arrival, req in zip(batch, reqs):
+            label = arrival.tenant or "default"
             tm = RequestTiming(arrival_s=arrival.time_s, routed_s=now)
             if deadline_ms is not None:
                 # the scheduler has no wall clock: stamp observed age (run
@@ -396,9 +544,11 @@ class StreamingEngine:
             rej = sched.try_submit(req)
             if rej is not None:
                 rejections.append(rej)
+                rejection_tenants.append(label)
                 continue
             tm.admitted_s = now
             timings[req.request_id] = tm
+            tenant_by_request[req.request_id] = label
 
 
 def serve_stream(

@@ -16,6 +16,16 @@ Two constructors cover the serving-paper workloads:
   rank-frequency Zipf law over the query set (seeded), the realistic
   cache workload: a few head queries dominate, the tail is long. This is
   what the cache benchmark exercises instead of a uniform 2-epoch replay.
+* :meth:`ArrivalProcess.diurnal` — a sinusoidal-rate Poisson stream
+  (seeded thinning): offered load swings between a trough and a peak over
+  a fixed period, the day/night shape every deployment actually sees.
+* :meth:`ArrivalProcess.bursty` — piecewise-constant rate alternating
+  between a base and a burst level on a duty cycle — the overload shape
+  that drives typed rejections and the degradation ladder.
+
+Every arrival can carry a ``tenant`` label; :meth:`ArrivalProcess.merge`
+interleaves per-tenant processes into one time-sorted multi-tenant stream
+(the scenario suite builds its mixes this way — serving/scenarios.py).
 
 Times are seconds relative to run start; the engine maps them onto its own
 wall clock.
@@ -60,6 +70,7 @@ class Arrival:
     time_s: float
     query: str
     reference: str | None = None
+    tenant: str | None = None
 
 
 class ArrivalProcess:
@@ -93,6 +104,7 @@ class ArrivalProcess:
         *,
         rate_qps: float,
         seed: int = 0,
+        tenant: str | None = None,
     ) -> "ArrivalProcess":
         """Open-loop Poisson arrivals: exponential gaps at ``rate_qps``."""
         if rate_qps <= 0:
@@ -104,7 +116,7 @@ class ArrivalProcess:
         gaps = rng.exponential(1.0 / rate_qps, size=len(queries))
         times = np.cumsum(gaps)
         arrivals = [
-            Arrival(time_s=float(t), query=q, reference=r)
+            Arrival(time_s=float(t), query=q, reference=r, tenant=tenant)
             for t, q, r in zip(times, queries, refs)
         ]
         return cls(arrivals, offered_qps=rate_qps)
@@ -115,6 +127,8 @@ class ArrivalProcess:
         times_s: Sequence[float],
         queries: Sequence[str],
         references: Sequence[str] | None = None,
+        *,
+        tenant: str | None = None,
     ) -> "ArrivalProcess":
         """Replay explicit arrival times (must align 1:1 with queries)."""
         if len(times_s) != len(queries):
@@ -123,17 +137,21 @@ class ArrivalProcess:
         if len(refs) != len(queries):
             raise ValueError(f"{len(queries)} queries but {len(refs)} references")
         arrivals = [
-            Arrival(time_s=float(t), query=q, reference=r)
+            Arrival(time_s=float(t), query=q, reference=r, tenant=tenant)
             for t, q, r in zip(times_s, queries, refs)
         ]
         return cls(arrivals)
 
     @classmethod
     def all_at_once(
-        cls, queries: Sequence[str], references: Sequence[str] | None = None
+        cls,
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+        *,
+        tenant: str | None = None,
     ) -> "ArrivalProcess":
         """Every query at t=0 — the drained-run parity workload."""
-        return cls.from_trace([0.0] * len(queries), queries, references)
+        return cls.from_trace([0.0] * len(queries), queries, references, tenant=tenant)
 
     @classmethod
     def zipfian(
@@ -145,6 +163,7 @@ class ArrivalProcess:
         s: float = 1.1,
         rate_qps: float | None = None,
         seed: int = 0,
+        tenant: str | None = None,
     ) -> "ArrivalProcess":
         """Zipf-repeat stream: ``length`` arrivals drawn from the query set
         with rank-frequency skew ``s`` (:func:`zipfian_indices`), each
@@ -161,5 +180,117 @@ class ArrivalProcess:
         qs = [queries[i] for i in idx]
         rs = [refs[i] for i in idx]
         if rate_qps is None:
-            return cls.all_at_once(qs, rs)
-        return cls.poisson(qs, rs, rate_qps=rate_qps, seed=seed)
+            return cls.all_at_once(qs, rs, tenant=tenant)
+        return cls.poisson(qs, rs, rate_qps=rate_qps, seed=seed, tenant=tenant)
+
+    @classmethod
+    def diurnal(
+        cls,
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+        *,
+        length: int,
+        base_qps: float,
+        peak_qps: float,
+        period_s: float = 60.0,
+        seed: int = 0,
+        tenant: str | None = None,
+    ) -> "ArrivalProcess":
+        """Sinusoidal-rate Poisson arrivals: load swings base↔peak over a period.
+
+        A nonhomogeneous Poisson process generated by seeded thinning: draw
+        candidate gaps at the peak rate, keep each with probability
+        ``rate(t)/peak``, where ``rate(t)`` is a raised sinusoid that
+        troughs at ``base_qps`` and crests at ``peak_qps`` every
+        ``period_s`` seconds. The first ``length`` queries are laid on the
+        accepted times in order (queries model a pre-drawn repeat sequence,
+        e.g. from :func:`zipfian_indices`). Deterministic in the seed.
+        """
+        if not 0 < base_qps <= peak_qps:
+            raise ValueError(
+                f"need 0 < base_qps <= peak_qps, got {base_qps} / {peak_qps}"
+            )
+        if period_s <= 0:
+            raise ValueError(f"period_s must be positive, got {period_s}")
+        if length > len(queries):
+            raise ValueError(f"length {length} exceeds {len(queries)} queries")
+        refs = list(references) if references is not None else [None] * len(queries)
+        if len(refs) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(refs)} references")
+        mid = 0.5 * (base_qps + peak_qps)
+        amp = 0.5 * (peak_qps - base_qps)
+        rng = np.random.default_rng(seed)
+        times: list[float] = []
+        t = 0.0
+        while len(times) < length:
+            t += float(rng.exponential(1.0 / peak_qps))
+            rate = mid - amp * np.cos(2.0 * np.pi * t / period_s)
+            if rng.random() < rate / peak_qps:
+                times.append(t)
+        arrivals = [
+            Arrival(time_s=t, query=queries[i], reference=refs[i], tenant=tenant)
+            for i, t in enumerate(times)
+        ]
+        return cls(arrivals, offered_qps=mid)
+
+    @classmethod
+    def bursty(
+        cls,
+        queries: Sequence[str],
+        references: Sequence[str] | None = None,
+        *,
+        length: int,
+        base_qps: float,
+        burst_qps: float,
+        phase_s: float = 1.0,
+        seed: int = 0,
+        tenant: str | None = None,
+    ) -> "ArrivalProcess":
+        """Alternating base/burst Poisson phases of ``phase_s`` seconds each.
+
+        Piecewise-constant offered load: even phases run at ``base_qps``,
+        odd phases at ``burst_qps``. The gap after each arrival is drawn at
+        the rate of the phase the arrival lands in, so bursts pack arrivals
+        densely enough to overflow a bounded intake queue — the workload
+        that exercises typed rejections and the degradation ladder.
+        Deterministic in the seed.
+        """
+        if base_qps <= 0 or burst_qps <= 0:
+            raise ValueError("base_qps and burst_qps must be positive")
+        if phase_s <= 0:
+            raise ValueError(f"phase_s must be positive, got {phase_s}")
+        if length > len(queries):
+            raise ValueError(f"length {length} exceeds {len(queries)} queries")
+        refs = list(references) if references is not None else [None] * len(queries)
+        if len(refs) != len(queries):
+            raise ValueError(f"{len(queries)} queries but {len(refs)} references")
+        rng = np.random.default_rng(seed)
+        times = []
+        t = 0.0
+        for _ in range(length):
+            phase = int(t / phase_s)
+            rate = burst_qps if phase % 2 else base_qps
+            t += float(rng.exponential(1.0 / rate))
+            times.append(t)
+        arrivals = [
+            Arrival(time_s=t, query=queries[i], reference=refs[i], tenant=tenant)
+            for i, t in enumerate(times)
+        ]
+        span = times[-1] if times else 0.0
+        offered = length / span if span > 0 else float("inf")
+        return cls(arrivals, offered_qps=offered)
+
+    @classmethod
+    def merge(cls, processes: Sequence["ArrivalProcess"]) -> "ArrivalProcess":
+        """Interleave several processes into one time-sorted stream.
+
+        The multi-tenant mixer: tag each per-tenant process via the
+        ``tenant=`` constructor argument, then merge. Sorting is stable, so
+        arrivals sharing a timestamp keep the order of ``processes`` — the
+        deterministic tie-break the admission tests rely on. Offered load
+        is the sum of the components' (infinite if any component is an
+        all-at-once burst).
+        """
+        arrivals = [a for p in processes for a in p.arrivals]
+        offered = sum(p.offered_qps for p in processes) if processes else 0.0
+        return cls(arrivals, offered_qps=float(offered))

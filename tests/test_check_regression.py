@@ -19,11 +19,24 @@ SERVING_METRICS = GATED_METRICS["BENCH_serving.json"]
 STREAMING_METRICS = GATED_METRICS["BENCH_streaming.json"]
 
 
+def _scenario_cell(completed, rejected, **extra):
+    cell = {
+        "completed": completed,
+        "rejected": rejected,
+        "slo": {"ttft_met": completed, "ttlt_met": completed},
+        "throughput_qps": 100.0,  # telemetry, ungated
+    }
+    cell.update(extra)
+    return cell
+
+
 def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
              zipf_hits=30, zipf_misses=54, shard_identical=True,
              res_completed=28, res_degraded=12, res_rejected=0, res_opens=1,
              shard_searches=4, shard_merges=1, identical=True,
-             bm25_hits=147, sparse_identical=True, bm25_closures=2):
+             bm25_hits=147, sparse_identical=True, bm25_closures=2,
+             sc_zipf_hits=149, sc_intake_full=32, sc_flood_rejected=48,
+             sc_degraded=28):
     return {
         "benchmark": "paper_28_queries",
         "batched_qps": 500.0,  # telemetry, ungated
@@ -88,6 +101,25 @@ def _serving(speedup=3.6, decode_steps=350, cache_hits=18, cache_misses=53,
                 "ivf_bag_width": 16,
                 "ivf_closures": 1,
             },
+        },
+        "scenarios": {
+            "zipf-cache": _scenario_cell(
+                224, 0, cache={"hits": sc_zipf_hits, "misses": 73},
+            ),
+            "burst-overload": _scenario_cell(
+                64, sc_intake_full,
+                rejected_by_reason={"intake_full": sc_intake_full},
+            ),
+            "multi-tenant": _scenario_cell(
+                44, sc_flood_rejected,
+                tenants={
+                    "flood": {"completed": 32, "rejected": sc_flood_rejected},
+                    "steady": {"completed": 12, "rejected": 0},
+                },
+            ),
+            "fault-degradation": _scenario_cell(
+                42, 0, degraded=sc_degraded, breaker_opens=1,
+            ),
         },
     }
 
@@ -275,6 +307,37 @@ def test_backend_cell_counters_are_exact():
     fails = compare(_serving(), _serving(bm25_closures=5), SERVING_METRICS, threshold=0.2)
     assert len(fails) == 1 and "backends.gate.bm25_closures" in fails[0]
     # unchanged cell passes
+    assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
+
+
+def test_scenario_counters_are_exact_both_directions():
+    """The scenario suite's smoke cells are seeded serial runs, so their
+    admission/SLO/cache/tenant/ladder counters are bit-stable — drift in
+    either direction means the scenario's semantics moved (arrival stream,
+    quota arithmetic, cache keying, or fault schedule), not noise."""
+    # Zipf cache traffic moved: the repeat stream or cache keying changed
+    fails = compare(_serving(), _serving(sc_zipf_hits=150),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "scenarios.zipf-cache.cache.hits" in fails[0]
+    assert "exact" in fails[0]
+    # burst shedding is exact arithmetic (L arrivals − M intake slots):
+    # a different intake_full count fails both the typed-reason counter
+    # and the global rejected ledger it feeds
+    fails = compare(_serving(), _serving(sc_intake_full=31),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2
+    assert any("rejected_by_reason.intake_full" in f for f in fails)
+    assert any("scenarios.burst-overload.rejected" in f for f in fails)
+    # a tenant ledger moving fails the per-tenant and global counters
+    fails = compare(_serving(), _serving(sc_flood_rejected=40),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 2
+    assert any("tenants.flood.rejected" in f for f in fails)
+    # the degradation ladder fires a deterministic number of times
+    fails = compare(_serving(), _serving(sc_degraded=0),
+                    SERVING_METRICS, threshold=0.2)
+    assert len(fails) == 1 and "scenarios.fault-degradation.degraded" in fails[0]
+    # unchanged cells pass
     assert compare(_serving(), _serving(), SERVING_METRICS, threshold=0.2) == []
 
 

@@ -280,6 +280,10 @@ def test_resilient_backend_timeout_counts_and_recovers():
             return self.inner.search_batch(queries, query_vecs, k)
 
     inner = SlowOnceBackend(DenseBackend(_corpus()))
+    # warm the dense-search jit closure for this (shape, k) outside the timed
+    # path: on a cold/loaded host the first compile alone can blow the 40 ms
+    # budget, turning every retry into a timeout and flaking the test
+    inner.inner.search_batch(None, _queries(1), 3)
     rb = ResilientBackend(
         inner,
         ResilienceConfig(timeout_ms=40.0, retry=RetryPolicy(max_retries=2, backoff_base_ms=0.0, jitter=0.0)),

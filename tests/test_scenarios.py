@@ -1,0 +1,277 @@
+"""Scenario suite: registry validity, deterministic admission math,
+multi-tenant quota isolation, SLO-attainment accounting, and the
+empty-completion (total-rejection) NaN path.
+
+The named scenarios are the benchmark gate's smoke cells, so these tests
+pin the same invariants the gate counters encode — locally, without the
+artifact machinery: exact overflow arithmetic for burst-overload, the
+per-tenant rejection ledger summing to the global Rejection count, and the
+steady tenant's SLO attainment surviving another tenant's flood.
+"""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.serving.scenarios import (
+    SCENARIOS,
+    CorpusSpec,
+    QueryPoolSpec,
+    StreamSpec,
+    get_scenario,
+    run_scenario,
+    template_query_pool,
+)
+from repro.serving.streaming import StreamConfig, serve_stream
+from repro.serving.workload import ArrivalProcess
+
+
+# --------------------------------------------------------------------------- #
+# Registry + spec machinery                                                    #
+# --------------------------------------------------------------------------- #
+def test_registry_names_and_validity():
+    assert {"zipf-cache", "burst-overload", "multi-tenant",
+            "fault-degradation"} <= set(SCENARIOS)
+    for name, spec in SCENARIOS.items():
+        assert spec.name == name
+        assert spec.pipeline_depth == 1  # gate cells must stay serial
+        opts = spec.engine_opts()
+        from repro.launch.serve import _ENGINE_OPT_KEYS
+
+        assert set(opts) == set(_ENGINE_OPT_KEYS)
+        workload = spec.build_workload()
+        assert len(workload) > 0
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+def test_template_pool_distinct_and_seed_disjoint():
+    qs1, refs1 = template_query_pool(QueryPoolSpec(n_queries=64, seed=11))
+    qs2, _ = template_query_pool(QueryPoolSpec(n_queries=64, seed=12))
+    assert len(set(qs1)) == 64 and refs1 == [None] * 64
+    assert not set(qs1) & set(qs2)  # per-tenant pools share no strings
+    again, _ = template_query_pool(QueryPoolSpec(n_queries=64, seed=11))
+    assert again == qs1
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        CorpusSpec(kind="imaginary")
+    with pytest.raises(ValueError):
+        CorpusSpec(kind="synthetic", n_docs=0)
+    with pytest.raises(ValueError):
+        QueryPoolSpec(kind="sql")
+    with pytest.raises(ValueError):
+        StreamSpec(arrivals="teleport")
+    with pytest.raises(ValueError):
+        SCENARIOS["zipf-cache"].scaled(0.0)
+
+
+def test_scaled_multiplies_lengths_and_caps():
+    spec = SCENARIOS["multi-tenant"].scaled(2.0)
+    assert [t.stream.length for t in spec.tenants] == [160, 24]
+    assert spec.max_intake_per_tenant == 64
+    assert spec.max_intake == 1024
+    # corpus and stack stay fixed: scaling hits the same deployment harder
+    assert spec.corpus == SCENARIOS["multi-tenant"].corpus
+    single = SCENARIOS["burst-overload"].scaled(0.5)
+    assert single.stream.length == 48 and single.max_intake == 32
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic scenario semantics (the gate counters, asserted directly)     #
+# --------------------------------------------------------------------------- #
+def test_burst_overload_exact_admission_math():
+    spec = SCENARIOS["burst-overload"]
+    r1 = run_scenario(spec)
+    # L arrivals into an M-slot intake, all due at t=0, processed in one
+    # intake pass before any drain: exactly L - M typed rejections
+    L, M = spec.stream.length, spec.max_intake
+    assert r1.cell["completed"] == M == 64
+    assert r1.cell["rejected"] == L - M == 32
+    assert r1.cell["rejected_by_reason"] == {"intake_full": 32}
+    assert r1.cell["max_intake_depth"] == M
+    slo = r1.cell["slo"]
+    assert slo["ttft_met"] == slo["ttlt_met"] == M
+    assert slo["ttft_attainment"] == 1.0
+    # determinism: the gate contract
+    r2 = run_scenario(spec)
+    for key in ("completed", "rejected", "rejected_by_reason", "slo", "degraded"):
+        assert r1.cell[key] == r2.cell[key]
+
+
+def test_multi_tenant_quota_isolation():
+    spec = SCENARIOS["multi-tenant"]
+    res = run_scenario(spec)
+    tenants = res.cell["tenants"]
+    flood, steady = tenants["flood"], tenants["steady"]
+    # the flood is clipped at its quota; the steady tenant is untouched
+    assert flood["completed"] == spec.max_intake_per_tenant == 32
+    assert flood["rejected"] == 80 - 32
+    assert steady["completed"] == 12 and steady["rejected"] == 0
+    # per-tenant rejection ledger sums to the global Rejection count
+    assert sum(t["rejected"] for t in tenants.values()) == res.cell["rejected"]
+    assert len(res.result.rejections) == res.cell["rejected"]
+    assert len(res.result.rejection_tenants) == len(res.result.rejections)
+    assert all(r.reason == "tenant_quota" for r in res.result.rejections)
+    # one tenant's overload cannot starve another's SLO attainment
+    assert steady["slo"]["ttlt_met"] == 12
+    assert steady["slo"]["ttlt_attainment"] == 1.0
+    # completed split is consistent with the global counter
+    assert sum(t["completed"] for t in tenants.values()) == res.cell["completed"]
+
+
+def test_zipf_cache_scenario_hits_and_determinism():
+    r1 = run_scenario(SCENARIOS["zipf-cache"])
+    assert r1.cell["completed"] == 224 and r1.cell["rejected"] == 0
+    cache = r1.cell["cache"]
+    assert cache["hits"] > 0 and cache["misses"] > 0
+    # cache traffic is bounded by the arrivals that actually retrieved
+    # (no_retrieval routings and in-batch dedupe skip the cache)
+    assert 0 < cache["hits"] + cache["misses"] <= 224
+    r2 = run_scenario(SCENARIOS["zipf-cache"])
+    assert r2.cell["cache"] == cache
+
+
+@pytest.mark.chaos
+def test_fault_degradation_scenario_counters():
+    r = run_scenario(SCENARIOS["fault-degradation"])
+    assert r.cell["completed"] == 42  # availability: the ladder answers everything
+    assert r.cell["rejected"] == 0
+    assert r.cell["degraded"] > 0
+    assert r.cell["breaker_opens"] >= 1
+    r2 = run_scenario(SCENARIOS["fault-degradation"])
+    for key in ("completed", "rejected", "degraded", "breaker_opens", "slo"):
+        assert r.cell[key] == r2.cell[key]
+
+
+# --------------------------------------------------------------------------- #
+# SLO accounting + the empty-completion NaN path                               #
+# --------------------------------------------------------------------------- #
+def _tiny_engine():
+    from repro.core.policies import make_policy
+    from repro.serving.engine import build_paper_engine
+
+    return build_paper_engine(make_policy("router_default"))
+
+
+def test_total_rejection_summary_is_json_safe():
+    # max_intake=0 refuses everything at the front door: nothing completes,
+    # every percentile is the NaN fin(...) fallback, attainment is 0/0.
+    # The summary must emit None (never NaN) and keep met-counts at 0.
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+
+    result = serve_stream(
+        _tiny_engine(),
+        list(BENCHMARK_QUERIES[:4]),
+        list(REFERENCE_ANSWERS[:4]),
+        config=StreamConfig(
+            max_intake=0, pipeline_depth=1, overlap=False,
+            slo_ttft_ms=100.0, slo_ttlt_ms=100.0,
+        ),
+    )
+    assert len(result.rejections) == 4
+    s = result.summary()
+    assert s["completed"] == 0
+    assert s["p99_ttft_ms"] is None and s["p99_ttlt_ms"] is None
+    assert s["p95_ttft_ms"] is None and s["throughput_qps"] is not None
+    slo = s["slo"]
+    assert slo["ttft_met"] == 0 and slo["ttlt_met"] == 0
+    assert slo["ttft_attainment"] is None  # 0/0 must not read as 0% or 100%
+    assert slo["ttlt_attainment"] is None
+    # strict JSON round-trip: no NaN/inf anywhere in the summary
+    assert json.loads(json.dumps(s, allow_nan=False)) == s
+    assert math.isnan(result.percentile_ms("ttft_s", 99))  # raw accessor keeps NaN
+
+
+def test_percentile_interpolation_pinned_linear():
+    import numpy as np
+
+    from repro.serving.streaming import RequestTiming, StreamResult, _percentile_ms
+
+    # linear interpolation between the two middle order statistics
+    assert _percentile_ms([0.010, 0.020, 0.030, 0.040], 50) == pytest.approx(25.0)
+    assert _percentile_ms([0.010, 0.020], 75) == pytest.approx(17.5)
+    assert math.isnan(_percentile_ms([], 99))
+    timings = {
+        i: RequestTiming(arrival_s=0.0, first_token_s=t, last_token_s=t)
+        for i, t in enumerate((0.010, 0.020, 0.030, 0.040))
+    }
+    r = StreamResult(
+        responses=[], rejections=[], timings=timings, step_history=[],
+        wall_s=1.0, offered_qps=1.0, pipeline_depth=1, retrieval_workers=1,
+        stage_batches=0, retrieve_calls=0,
+    )
+    assert r.percentile_ms("ttft_s", 50) == pytest.approx(
+        float(np.percentile([10.0, 20.0, 30.0, 40.0], 50, method="linear"))
+    )
+
+
+def test_slo_met_counts_split_by_target():
+    from repro.serving.streaming import RequestTiming, StreamResult
+
+    # two fast completions, one slow, one never-finished
+    timings = {
+        0: RequestTiming(arrival_s=0.0, first_token_s=0.010, last_token_s=0.020),
+        1: RequestTiming(arrival_s=0.0, first_token_s=0.015, last_token_s=0.090),
+        2: RequestTiming(arrival_s=0.0, first_token_s=0.200, last_token_s=0.300),
+        3: RequestTiming(arrival_s=0.0),  # rejected downstream: no tokens
+    }
+    r = StreamResult(
+        responses=[], rejections=[], timings=timings, step_history=[],
+        wall_s=1.0, offered_qps=1.0, pipeline_depth=1, retrieval_workers=1,
+        stage_batches=0, retrieve_calls=0,
+        slo_ttft_ms=100.0, slo_ttlt_ms=50.0,
+    )
+    slo = r.summary()["slo"]
+    assert slo["ttft_met"] == 2  # 10ms, 15ms yes; 200ms no; unfinished excluded
+    assert slo["ttlt_met"] == 1  # only the 20ms completion beats 50ms
+    assert slo["ttft_attainment"] == pytest.approx(2 / 3)
+    assert slo["ttlt_attainment"] == pytest.approx(1 / 3)
+
+
+def test_untenanted_run_emits_no_tenant_block():
+    from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+
+    result = serve_stream(
+        _tiny_engine(), list(BENCHMARK_QUERIES[:4]), list(REFERENCE_ANSWERS[:4]),
+        config=StreamConfig(pipeline_depth=1, overlap=False),
+    )
+    s = result.summary()
+    assert "tenants" not in s and "slo" not in s  # shape-stable legacy summaries
+    assert s["completed"] == 4
+
+
+def test_tenant_quota_streaming_direct():
+    # quota clipping straight through StreamingEngine (no scenario wrapper):
+    # merge order is the tie-break, so the flood fills its quota first
+    flood = ArrivalProcess.all_at_once([f"f{i}" for i in range(6)], tenant="flood")
+    calm = ArrivalProcess.all_at_once(["c0", "c1"], tenant="calm")
+    merged = ArrivalProcess.merge([flood, calm])
+    from repro.serving.streaming import StreamingEngine
+
+    eng = StreamingEngine(
+        _tiny_engine(),
+        config=StreamConfig(
+            pipeline_depth=1, overlap=False, max_intake_per_tenant=3,
+        ),
+    )
+    result = eng.run(merged)
+    assert result.tenanted
+    assert [r.reason for r in result.rejections] == ["tenant_quota"] * 3
+    assert result.rejection_tenants == ["flood"] * 3
+    s = result.summary()
+    assert s["tenants"]["flood"]["completed"] == 3
+    assert s["tenants"]["calm"]["completed"] == 2
+    assert s["tenants"]["calm"]["rejected"] == 0
+
+
+def test_scenario_spec_is_picklable_plain_data():
+    import pickle
+
+    for spec in SCENARIOS.values():
+        clone = pickle.loads(pickle.dumps(spec))
+        assert clone == spec
+        assert dataclasses.asdict(clone)  # pure-data tree, no live objects

@@ -1,0 +1,94 @@
+"""Soak/conformance test: a sustained Zipfian stream (≥2k queries) through
+the full serving stack — cache + shards, thread and process executors.
+
+This is the "does it hold up" tier the 28-query cells can't provide: a
+2048-arrival repeat-heavy stream drained end to end, asserting the three
+durability contracts at once — drained-run bit-parity vs ``answer_batch``
+over the same arrival sequence, a bounded intake queue (the front door
+never balloons past ``max_intake``), and no leaked worker processes after
+shutdown. Marked ``soak`` and deselected from tier-1 (pytest.ini); nightly
+CI runs it with ``-m soak``.
+"""
+
+import multiprocessing
+
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.benchmark import BENCHMARK_QUERIES, REFERENCE_ANSWERS
+from repro.retrieval import BackendStackConfig
+from repro.serving.engine import build_paper_engine
+from repro.serving.procpool import EngineSpec
+from repro.serving.scheduler import ContinuousBatchScheduler, SchedulerConfig
+from repro.serving.streaming import StreamConfig, StreamingEngine
+from repro.serving.workload import ArrivalProcess, zipfian_indices
+
+pytestmark = pytest.mark.soak
+
+SOAK_LENGTH = 2048
+STACK = BackendStackConfig(shards=2, cache_size=64)
+
+
+def _soak_sequence():
+    """The seeded 2048-arrival Zipf repeat sequence over the paper queries."""
+    queries, refs = list(BENCHMARK_QUERIES), list(REFERENCE_ANSWERS)
+    idx = zipfian_indices(len(queries), SOAK_LENGTH, s=1.05, seed=7)
+    return [queries[i] for i in idx], [refs[i] for i in idx]
+
+
+@pytest.fixture(scope="module")
+def soak_ref_csv():
+    """answer_batch over the same arrival-ordered sequence: the parity oracle."""
+    qs, rs = _soak_sequence()
+    ref = build_paper_engine(make_policy("router_default"), stack=STACK)
+    ref.answer_batch(qs, rs)
+    return ref.telemetry.to_csv()
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_soak_zipf_stream_parity_and_bounds(executor, soak_ref_csv):
+    qs, rs = _soak_sequence()
+    eng = build_paper_engine(make_policy("router_default"), stack=STACK)
+    cfg = StreamConfig(
+        pipeline_depth=2,
+        retrieval_workers=2,
+        executor=executor,
+        microbatch_max=32,
+        max_intake=SOAK_LENGTH,
+    )
+    # an all-at-once 2k burst passes straight through intake into the
+    # scheduler queue, so the queue must be sized for the full soak; the
+    # default max_queue=1024 would shed half the stream as queue_full
+    sched = ContinuousBatchScheduler(
+        SchedulerConfig(max_batch_slots=8, n_pages=1024, page_size=16,
+                        max_queue=SOAK_LENGTH),
+        catalog=eng.catalog,
+    )
+    kwargs = {}
+    if executor == "process":
+        # the pipeline owns (and must tear down) its spawned worker pool
+        kwargs["engine_factory"] = EngineSpec(stack=STACK)
+    streamer = StreamingEngine(eng, scheduler=sched, config=cfg, **kwargs)
+    result = streamer.run(ArrivalProcess.all_at_once(qs, rs))
+
+    # full drain, typed-loss-free
+    assert len(result.responses) == SOAK_LENGTH
+    assert not result.rejections
+    assert sum(1 for t in result.timings.values() if t.last_token_s is not None) == (
+        SOAK_LENGTH
+    )
+    # bounded intake: the front door high-water mark respects the cap
+    assert 0 < result.max_intake_depth <= cfg.max_intake
+    # bit-parity with answer_batch over the same sequence — cache + shards
+    # + deep pipelining never change a record
+    assert eng.telemetry.to_csv() == soak_ref_csv
+    # cache realism: a Zipf stream this long must actually hit
+    cache = result.summary()["backend_cache"].get("dense", {})
+    assert cache.get("hits", 0) > 0
+
+    if executor == "process":
+        # the owned executor was shut down by pipeline.shutdown(); no
+        # spawned worker may outlive the run
+        for child in multiprocessing.active_children():
+            child.join(timeout=10)
+        assert multiprocessing.active_children() == []
